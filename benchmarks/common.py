@@ -1,0 +1,74 @@
+"""Shared benchmark helpers: policy zoo, timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import (
+    energy_ts,
+    energy_ucb,
+    eps_greedy,
+    get_app,
+    make_env_params,
+    rr_freq,
+    run_drlcap_cross,
+    run_drlcap_protocol,
+    run_repeats,
+)
+from repro.core.rl import drlcap, rl_power
+
+ALL_APPS = (
+    "lbm", "tealeaf", "clvleaf", "miniswp", "pot3d",
+    "sph_exa", "weather", "llama", "diffusion",
+)
+FAST_APPS = ("tealeaf", "miniswp", "clvleaf", "llama")
+
+
+def dynamic_policies():
+    return {
+        "RRFreq": rr_freq(),
+        "eps-greedy": eps_greedy(),
+        "EnergyTS": energy_ts(),
+        "RL-Power": rl_power(),
+        "DRLCap-Online": drlcap(name="DRLCap-Online"),
+        "EnergyUCB": energy_ucb(),
+    }
+
+
+def bench_policy_energy(name: str, app: str, n_repeats: int, seed: int = 0) -> float:
+    p = make_env_params(get_app(app))
+    key = jax.random.key(seed)
+    if name == "DRLCap":
+        es = [
+            float(run_drlcap_protocol(drlcap, p, k)["energy_kj"])
+            for k in jax.random.split(key, max(2, n_repeats // 3))
+        ]
+        return float(np.mean(es))
+    if name == "DRLCap-Cross":
+        others = [a for a in ALL_APPS if a != app][:2]
+        srcs = [make_env_params(get_app(a)) for a in others]
+        es = [
+            float(run_drlcap_cross(drlcap, p, srcs, k)["energy_kj"])
+            for k in jax.random.split(key, 2)
+        ]
+        return float(np.mean(es))
+    pol = dynamic_policies()[name]
+    return float(run_repeats(pol, p, key, n_repeats)["energy_kj"].mean())
+
+
+def time_us(fn: Callable, n: int = 100, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def emit(rows: List[Dict]):
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")

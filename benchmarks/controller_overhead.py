@@ -1,0 +1,66 @@
+"""Controller-plane overhead: us per decision for a single jitted
+controller (select+update) and for the full Aurora-scale fleet (63,720
+controllers) through the fused fleet kernel. The paper's feasibility
+argument ('lightweight') quantified."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_us
+from repro.core import energy_ucb, get_app, make_env_params
+from repro.core.fleet import Fleet
+from repro.core.simulator import Obs, env_init, env_step
+from repro.kernels import ops
+
+
+def run(fast: bool = True, out_json=None):
+    rows = []
+    pol = energy_ucb()
+    p = make_env_params(get_app("tealeaf"))
+    st = pol.init(jax.random.key(0))
+    es = env_init(p)
+    key = jax.random.key(1)
+
+    sel = jax.jit(pol.select)
+    arm = sel(st, key)
+    _, obs = env_step(p, es, arm, key)
+    upd = jax.jit(pol.update)
+
+    us_sel = time_us(lambda: jax.block_until_ready(sel(st, key)))
+    us_upd = time_us(lambda: jax.block_until_ready(upd(st, arm, obs)))
+    print(f"single controller: select {us_sel:.1f} us, update {us_upd:.1f} us "
+          f"(decision interval 10,000 us => overhead {(us_sel+us_upd)/100:.2f}%)")
+    rows.append({"name": "controller_select", "us_per_call": f"{us_sel:.1f}",
+                 "derived": "single"})
+    rows.append({"name": "controller_update", "us_per_call": f"{us_upd:.1f}",
+                 "derived": "single"})
+
+    n = 63_720 if not fast else 8192
+    fleet = Fleet(pol, n)
+    states = fleet.init(jax.random.key(2))
+    us_fleet = time_us(
+        lambda: jax.block_until_ready(fleet.select(states, jax.random.key(3))),
+        n=20,
+    )
+    print(f"fleet of {n}: vmapped select {us_fleet:.1f} us "
+          f"({us_fleet/n*1000:.1f} ns/controller)")
+    rows.append({"name": f"fleet_select_vmap_n{n}", "us_per_call": f"{us_fleet:.1f}",
+                 "derived": f"{us_fleet/n*1000:.2f} ns/controller"})
+
+    mu, cnt = states["mu"], states["n"]
+    prev, t = states["prev"], jnp.maximum(states["t"], 2.0)
+    us_kernel = time_us(
+        lambda: jax.block_until_ready(
+            ops.fleet_select(mu, cnt, prev, t, interpret=not ops.pallas_available())
+        ),
+        n=5,
+    )
+    rows.append({"name": f"fleet_select_kernel_n{n}", "us_per_call": f"{us_kernel:.1f}",
+                 "derived": "pallas (interpret mode on CPU)"})
+    print(f"fleet kernel (interpret on CPU): {us_kernel:.1f} us")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

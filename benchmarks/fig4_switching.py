@@ -1,0 +1,36 @@
+"""Paper Fig. 4: switching-cost analysis on Llama — number of switches,
+switching energy overhead, and added execution time, with vs. without
+the switching-aware penalty."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import energy_ucb, get_app, make_env_params, run_repeats
+from repro.core.calibration import SWITCH_ENERGY_J, SWITCH_LATENCY_S
+
+
+def run(fast: bool = True, out_json: str = None):
+    reps = 3 if fast else 10
+    p = make_env_params(get_app("llama"))
+    key = jax.random.key(0)
+    w = run_repeats(energy_ucb(switching_penalty=0.05), p, key, reps)
+    wo = run_repeats(energy_ucb(switching_penalty=0.0), p, key, reps)
+    rows = []
+    print(f"{'metric':28s} {'w/o penalty':>14s} {'with penalty':>14s}")
+    sw_w, sw_wo = w["switches"].mean(), wo["switches"].mean()
+    print(f"{'switches':28s} {sw_wo:14.0f} {sw_w:14.0f}   ({sw_wo/max(sw_w,1):.1f}x reduction; paper 6.7x)")
+    e_w, e_wo = sw_w * SWITCH_ENERGY_J / 1e3, sw_wo * SWITCH_ENERGY_J / 1e3
+    print(f"{'switch energy overhead (kJ)':28s} {e_wo:14.3f} {e_w:14.3f}")
+    t_w, t_wo = sw_w * SWITCH_LATENCY_S, sw_wo * SWITCH_LATENCY_S
+    print(f"{'switch time overhead (s)':28s} {t_wo:14.3f} {t_w:14.3f}")
+    rows.append({
+        "name": "fig4_switching_llama",
+        "us_per_call": "",
+        "derived": f"switches {sw_wo:.0f}->{sw_w:.0f} ({sw_wo/max(sw_w,1):.1f}x)",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    run()

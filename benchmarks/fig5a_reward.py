@@ -1,0 +1,34 @@
+"""Paper Fig. 5(a): reward-formulation comparison — E*R vs E^2*R vs
+E*R^2 (squared terms amplify counter noise and slow convergence)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import REWARD_VARIANTS, energy_ucb, get_app, make_env_params, make_reward_fn, run_repeats
+
+APPS = ("miniswp", "clvleaf")
+
+
+def run(fast: bool = True, out_json: str = None):
+    reps = 3 if fast else 10
+    rows = []
+    print(f"{'app':10s}" + "".join(f"{v:>12s}" for v in REWARD_VARIANTS))
+    for app in APPS:
+        p = make_env_params(get_app(app))
+        es = {}
+        for vname, (a, b) in REWARD_VARIANTS.items():
+            rf = make_reward_fn(p, a, b)
+            out = run_repeats(energy_ucb(), p, jax.random.key(0), reps, reward_fn=rf)
+            es[vname] = out["energy_kj"].mean()
+        print(f"{app:10s}" + "".join(f"{es[v]:12.2f}" for v in REWARD_VARIANTS))
+        rows.append({
+            "name": f"fig5a_reward_{app}",
+            "us_per_call": "",
+            "derived": ";".join(f"{v}={es[v]:.2f}" for v in REWARD_VARIANTS),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""§Perf audit table: baseline (results/dryrun_baseline) vs final
+(results/dryrun) per-device collective bytes and peak memory for every
+cell — the measured record behind EXPERIMENTS.md §Perf."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _load(d):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*__pod.json")):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def run(fast: bool = True, base_dir="results/dryrun_baseline",
+        final_dir="results/dryrun", out_json=None):
+    base, final = _load(base_dir), _load(final_dir)
+    rows = []
+    print(f"{'cell':44s} {'coll GB base':>12s} {'final':>9s} {'x':>6s} {'peak GB base':>13s} {'final':>7s}")
+    for key in sorted(final):
+        if key not in base:
+            continue
+        b, f = base[key], final[key]
+        cb = b["collectives"]["total_bytes_per_device"] / 2**30
+        cf = f["collectives"]["total_bytes_per_device"] / 2**30
+        mb = b["memory_per_device"]["peak_est_bytes"] / 2**30
+        mf = f["memory_per_device"]["peak_est_bytes"] / 2**30
+        ratio = cb / max(cf, 1e-9)
+        print(f"{key[0]+'/'+key[1]:44s} {cb:12.2f} {cf:9.2f} {ratio:5.1f}x {mb:13.2f} {mf:7.2f}")
+        rows.append({"arch": key[0], "shape": key[1], "coll_gb_base": cb,
+                     "coll_gb_final": cf, "speedup_x": ratio,
+                     "peak_gb_base": mb, "peak_gb_final": mf})
+    if out_json:
+        with open(out_json, "w") as fp:
+            json.dump(rows, fp, indent=1)
+    import numpy as np
+
+    gm = float(np.exp(np.mean([np.log(max(r["speedup_x"], 1e-9)) for r in rows]))) if rows else 0
+    print(f"# geometric-mean collective reduction: {gm:.2f}x over {len(rows)} cells")
+    return [{"name": "perf_compare", "us_per_call": "",
+             "derived": f"geomean_collective_reduction={gm:.2f}x;cells={len(rows)}"}]
+
+
+if __name__ == "__main__":
+    run(out_json="results/perf_compare.json")

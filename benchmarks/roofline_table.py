@@ -1,0 +1,83 @@
+"""Roofline table (EXPERIMENTS.md §Roofline): per (arch x shape), merge
+the dry-run artifact (per-device memory, HLO collectives with trip-count
+attribution) with the analytic compute/memory terms, identify the
+bottleneck, and report MODEL_FLOPS / exec ratio + roofline fraction."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.roofline.analysis import HW, roofline_terms
+
+
+def load_cell(dryrun_dir: str, arch: str, shape: str, mesh: str = "pod"):
+    path = os.path.join(dryrun_dir, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def cell_row(dryrun_dir: str, arch: str, shape: str):
+    rec = load_cell(dryrun_dir, arch, shape)
+    if rec is None or rec.get("status") != "ok":
+        return None
+    cfg = get_arch(arch)
+    coll = rec["collectives"]["total_bytes_per_device"]
+    t = roofline_terms(cfg, shape, collective_bytes_per_dev=coll)
+    mem = rec["memory_per_device"]
+    return {
+        "arch": arch,
+        "shape": shape,
+        "t_compute_s": t["t_compute_s"],
+        "t_memory_s": t["t_memory_s"],
+        "t_collective_s": t["t_collective_s"],
+        "bottleneck": t["bottleneck"],
+        "roofline_fraction": t["roofline_fraction"],
+        "mfu_bound": t["mfu_bound"],
+        "model_flops": t["model_flops"],
+        "exec_flops": t["exec_flops"],
+        "useful_ratio": t["model_flops"] / t["exec_flops"],
+        "peak_gb_per_dev": mem["peak_est_bytes"] / 2**30,
+        "coll_gb_per_dev": coll / 2**30,
+        "hlo_flops_raw": rec["hlo_cost"]["flops_raw"],
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def run(fast: bool = True, dryrun_dir: str = "results/dryrun", out_json=None):
+    rows = []
+    for arch in list_archs():
+        for shape in get_arch(arch).supported_shapes():
+            r = cell_row(dryrun_dir, arch, shape)
+            if r:
+                rows.append(r)
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    hdr = (f"{'arch':26s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} "
+           f"{'bound':>7s} {'roofl%':>7s} {'MFU%':>6s} {'useful':>7s} {'mem_GB':>7s}")
+    print(hdr)
+    for r in rows:
+        print(
+            f"{r['arch']:26s} {r['shape']:12s} {r['t_compute_s']:9.4f} "
+            f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+            f"{r['bottleneck']:>7s} {100*r['roofline_fraction']:7.1f} "
+            f"{100*r['mfu_bound']:6.1f} {r['useful_ratio']:7.2f} "
+            f"{r['peak_gb_per_dev']:7.2f}"
+        )
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    worst = rows[0] if rows else {}
+    return [{
+        "name": "roofline_table",
+        "us_per_call": "",
+        "derived": f"cells={len(rows)};worst={worst.get('arch','')}/{worst.get('shape','')}@{100*worst.get('roofline_fraction',0):.0f}%",
+    }]
+
+
+if __name__ == "__main__":
+    run(out_json="results/roofline_table.json")

@@ -1,0 +1,58 @@
+"""Benchmark aggregator: one module per paper table/figure + the
+framework benches. Prints ``name,us_per_call,derived`` CSV at the end.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    fast = "--full" not in sys.argv
+    os.makedirs("results", exist_ok=True)
+    from benchmarks import (
+        common,
+        controller_overhead,
+        energy_cells,
+        perf_compare,
+        fig3_regret,
+        fig4_switching,
+        fig5a_reward,
+        fig5b_qos,
+        roofline_table,
+        table1_energy,
+        table2_ablation,
+    )
+
+    modules = [
+        ("table1_energy", table1_energy),
+        ("fig3_regret", fig3_regret),
+        ("table2_ablation", table2_ablation),
+        ("fig4_switching", fig4_switching),
+        ("fig5a_reward", fig5a_reward),
+        ("fig5b_qos", fig5b_qos),
+        ("roofline_table", roofline_table),
+        ("perf_compare", perf_compare),
+        ("energy_cells", energy_cells),
+        ("controller_overhead", controller_overhead),
+    ]
+    rows = []
+    for name, mod in modules:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            rows.extend(mod.run(fast=fast) or [])
+            print(f"[{name}: {time.time()-t0:.0f}s]")
+        except Exception:
+            traceback.print_exc()
+            rows.append({"name": name, "us_per_call": "", "derived": "ERROR"})
+    print("\n===== summary CSV =====")
+    common.emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 1: energy (kJ) for 9 static frequencies + 7 dynamic/RL
+methods + EnergyUCB across the 9 Aurora applications, plus the Saved
+Energy and Energy Regret rows."""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ALL_APPS, FAST_APPS, bench_policy_energy
+from repro.core import TABLE1_KJ, get_app, make_env_params, static_energy_kj
+
+METHODS = (
+    "RRFreq", "eps-greedy", "EnergyTS", "RL-Power",
+    "DRLCap", "DRLCap-Online", "DRLCap-Cross", "EnergyUCB",
+)
+
+
+def run(fast: bool = True, n_repeats: int = None, out_json: str = None):
+    apps = ALL_APPS  # the headline table always covers all 9 workloads
+    reps = n_repeats or (5 if fast else 10)
+    table = {}
+    t0 = time.time()
+    for i, f in enumerate([f"{0.8+0.1*k:.1f} GHz" for k in range(9)][::-1]):
+        arm = 8 - i
+        table[f] = {
+            a: float(static_energy_kj(make_env_params(get_app(a)), arm)) for a in apps
+        }
+    for m in METHODS:
+        table[m] = {a: bench_policy_energy(m, a, reps) for a in apps}
+    ucb = table["EnergyUCB"]
+    table["Saved Energy"] = {a: TABLE1_KJ[a][-1] - ucb[a] for a in apps}
+    table["Energy Regret"] = {a: ucb[a] - TABLE1_KJ[a].min() for a in apps}
+
+    # render
+    hdr = f"{'Method':15s}" + "".join(f"{a:>10s}" for a in apps)
+    lines = [hdr]
+    for m, row in table.items():
+        lines.append(f"{m:15s}" + "".join(f"{row[a]:10.2f}" for a in apps))
+    text = "\n".join(lines)
+    print(text)
+    regrets = [table["Energy Regret"][a] / TABLE1_KJ[a].min() for a in apps]
+    derived = f"mean_energy_regret_pct={100*np.mean(regrets):.2f}"
+    print(f"# {derived}  ({time.time()-t0:.0f}s)")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(table, f, indent=1)
+    return [{"name": "table1_energy", "us_per_call": "", "derived": derived}]
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(fast="--fast" in sys.argv, out_json="results/table1.json")

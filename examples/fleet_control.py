@@ -1,0 +1,55 @@
+"""Fleet-scale control plane: 63,720 controllers (10,620 Aurora nodes x
+6 GPUs) advanced in lockstep, plus the coordinated gang mode for
+synchronous data-parallel training.
+
+  PYTHONPATH=src python examples/fleet_control.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy_ucb, get_app, make_env_params, static_energy_kj
+from repro.core.fleet import Fleet, run_fleet_episode
+from repro.kernels import ops
+
+
+def main():
+    n = 63_720
+    fleet = Fleet(energy_ucb(), n)
+    states = fleet.init(jax.random.key(0))
+    arms = fleet.select(states, jax.random.key(1))  # warm up jit
+    t0 = time.perf_counter()
+    for i in range(10):
+        arms = fleet.select(states, jax.random.key(i))
+    jax.block_until_ready(arms)
+    dt = (time.perf_counter() - t0) / 10
+    print(f"fleet of {n} controllers: select {dt*1e3:.2f} ms/step "
+          f"({dt/n*1e9:.0f} ns/controller, vmap)")
+
+    arms_k = ops.fleet_select(
+        states["mu"], states["n"], states["prev"],
+        jnp.maximum(states["t"], 2.0),
+        interpret=not ops.pallas_available(),
+    )
+    agree = float(jnp.mean((arms_k == fleet.select(states, jax.random.key(3))).astype(jnp.float32)))
+    print(f"fused Pallas fleet kernel agrees with policy select: {agree:.3f}")
+
+    # coordinated vs independent on a memory-bound app (8-node gang demo)
+    p = make_env_params(get_app("miniswp"))
+    nn, steps = 8, 12_000  # enough for miniswp to complete (~8.3k steps)
+    ind = run_fleet_episode(energy_ucb(), p, jax.random.key(0), nn, steps, coordinated=False)
+    coo = run_fleet_episode(energy_ucb(), p, jax.random.key(0), nn, steps, coordinated=True)
+    e_def = static_energy_kj(p, 8) * nn
+    print(f"\n{nn}-node gang on miniswp (energy vs all-nodes-f_max {e_def:.0f} kJ):")
+    for name, out in (("independent", ind), ("coordinated", coo)):
+        print(f"  {name:12s} energy={float(out['energy_kj']):8.1f} kJ  "
+              f"gang_time={float(out['gang_time_s']):6.1f}s  "
+              f"switches={int(out['switches'])}")
+    print("coordinated mode: one arm for the gang -> no straggler coupling, "
+          "1/N reward variance")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: EnergyUCB on a simulated Aurora node running pot3d.
+
+Runs the paper's core loop end-to-end in ~10 s on CPU: a calibrated
+DVFS environment (static energies reproduce Table 1 exactly), the
+SA-UCB controller, and the headline metrics.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import (
+    FREQS_GHZ,
+    TABLE1_KJ,
+    energy_ucb,
+    get_app,
+    make_env_params,
+    run_repeats,
+    static_energy_kj,
+)
+
+APP = "pot3d"
+
+
+def main():
+    app = get_app(APP)
+    params = make_env_params(app)
+    print(f"app={APP}: T(f_max)={app.t_ref_s:.1f}s  compute-bound frac c={app.c:.2f}")
+    print("static energies (kJ), 0.8 -> 1.6 GHz:")
+    print("  ", " ".join(f"{static_energy_kj(params, i):7.1f}" for i in range(9)))
+
+    out = run_repeats(energy_ucb(), params, jax.random.key(0), n_repeats=10)
+    e = out["energy_kj"].mean()
+    default = TABLE1_KJ[APP][-1]
+    best = TABLE1_KJ[APP].min()
+    best_arm = int(np.argmin(TABLE1_KJ[APP]))
+    print(f"\nEnergyUCB (10 repeats): {e:.2f} ± {out['energy_kj'].std():.2f} kJ")
+    print(f"  default 1.6 GHz      : {default:.2f} kJ  -> saved {default - e:.2f} kJ")
+    print(f"  best static ({FREQS_GHZ[best_arm]:.1f} GHz): {best:.2f} kJ "
+          f"-> energy regret {e - best:.2f} kJ ({100*(e-best)/best:.2f}%)")
+    print(f"  switches: {out['switches'].mean():.0f}  "
+          f"completed: {bool(out['completed'].all())}")
+
+    qos = run_repeats(energy_ucb(qos_delta=0.05), params, jax.random.key(0), 10)
+    slow = 100 * (qos["time_s"].mean() / app.t_ref_s - 1)
+    print(f"\nQoS-constrained (delta=5%): {qos['energy_kj'].mean():.2f} kJ, "
+          f"slowdown {slow:.2f}% (budget 5%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Config registry: one module per assigned architecture + shape registry."""
+from repro.configs.base import (
+    SHAPES,
+    ArchConfig,
+    LayoutConfig,
+    ShapeConfig,
+    get_arch,
+    get_reduced,
+    list_archs,
+)
+from repro.configs.paper_sim import PAPER_SIM, PaperSimConfig
+
+__all__ = [
+    "SHAPES",
+    "ArchConfig",
+    "LayoutConfig",
+    "ShapeConfig",
+    "get_arch",
+    "get_reduced",
+    "list_archs",
+    "PAPER_SIM",
+    "PaperSimConfig",
+]

@@ -1,0 +1,271 @@
+"""Architecture / shape / layout configuration for the repro framework.
+
+Every assigned architecture gets one module in this package defining an
+``ArchConfig`` with the exact dimensions from the public source, plus a
+``reduced()`` counterpart used by CPU smoke tests. The FULL configs are
+only ever lowered via ``repro.launch.dryrun`` (ShapeDtypeStruct, no
+allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned input-shape set; applies to every LM-family arch)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark cell shape. ``kind`` selects which step fn is lowered."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Layout knobs (per arch x shape overridable)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayoutConfig:
+    """Distribution / memory knobs; defaults are safe, per-arch tuned."""
+
+    microbatch: int = 0  # 0 => no grad accumulation (single microbatch)
+    param_dtype: str = "bfloat16"
+    parallelism: str = "2d"  # "2d" (FSDP x TP) | "fsdp" (no TP; small models)
+    remat: str = "full"  # "none" | "full" | "dots"
+    seq_parallel: bool = True  # shard residual-stream seq dim over "model"
+    opt_dtype: str = "float32"  # adam m/v dtype
+    grad_accum_dtype: str = "float32"
+    kv_cache_shard: str = "hd"  # "hd" | "heads" | "seq" (decode cache)
+    attn_chunk_kv: int = 512  # kv block for chunked-flash xla path
+    attn_chunk_q: int = 0  # 0 => no q chunking
+    attn_impl: str = "chunked"  # "dense" | "chunked" | "pallas"
+    scan_layers: bool = True
+    logits_fp32: bool = True
+    remat_group: int = 1  # checkpoint every G-th layer (memory / G)
+    decode_logits_bf16: bool = False  # bf16 partial-logit ARs at decode
+    moe_capacity_override: float = 0.0  # 0 => cfg.moe_capacity_factor
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (exact public dims)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    source: str = ""
+
+    # attention / mlp options
+    mlp_gated: bool = True  # SwiGLU (w1,w3,w2) vs classic 2-matrix MLP
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # moe
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_interleave: int = 1  # every k-th layer is MoE (1 => all layers)
+    moe_d_ff: int = 0
+    moe_shared_expert: bool = False
+    moe_capacity_factor: float = 1.25
+    dense_d_ff: int = 0  # d_ff of non-MoE layers in interleaved MoE stacks
+
+    # ssm (mamba2 / hybrid)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # hybrid (zamba2): shared attention block applied every `attn_every`
+    attn_every: int = 0
+
+    # encdec (seamless)
+    enc_layers: int = 0
+    dec_layers: int = 0
+    decode_enc_len: int = 4096  # encoder memory length for decode shapes
+
+    # vlm (pixtral): stub patch embeddings occupy the first n positions
+    num_img_patches: int = 0
+
+    # layout
+    layout: LayoutConfig = field(default_factory=LayoutConfig)
+    layout_overrides: Tuple[Tuple[str, Tuple[Tuple[str, object], ...]], ...] = ()
+
+    # which shape cells this arch supports (long_500k only sub-quadratic)
+    supports_long_context: bool = False
+
+    def layout_for(self, shape_name: str) -> LayoutConfig:
+        for sname, kvs in self.layout_overrides:
+            if sname == shape_name:
+                return dataclasses.replace(self.layout, **dict(kvs))
+        return self.layout
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding-table rows padded to a multiple of 256 so the vocab
+        dim shards cleanly on a 16-way model axis (standard practice)."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    def n_moe_layers(self) -> int:
+        if self.moe_num_experts == 0:
+            return 0
+        return self.num_layers // self.moe_interleave
+
+    def n_dense_layers(self) -> int:
+        if self.family in ("dense", "vlm"):
+            return self.num_layers
+        if self.family == "moe":
+            return self.num_layers - self.n_moe_layers()
+        return 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline + memory checks)."""
+        D, H, KV, HD = self.d_model, self.num_heads, self.num_kv_heads, self.head_dim
+        attn = D * H * HD + 2 * D * KV * HD + H * HD * D
+        if self.qkv_bias:
+            attn += (H + 2 * KV) * HD
+        mlp = lambda dff: (3 if self.mlp_gated else 2) * D * dff
+        emb = self.vocab_size * D * (1 if self.tie_embeddings else 2)
+        n = emb
+        if self.family in ("dense", "vlm"):
+            n += self.num_layers * (attn + mlp(self.d_ff) + 2 * D)
+        elif self.family == "moe":
+            nm, nd = self.n_moe_layers(), self.n_dense_layers()
+            expert = mlp(self.moe_d_ff)
+            moe_layer = (
+                self.moe_num_experts * expert
+                + D * self.moe_num_experts  # router
+                + (expert if self.moe_shared_expert else 0)
+            )
+            n += nm * (attn + moe_layer + 2 * D)
+            n += nd * (attn + mlp(self.dense_d_ff or self.d_ff) + 2 * D)
+        elif self.family == "ssm":
+            n += self.num_layers * (self._ssm_block_params() + D)
+        elif self.family == "hybrid":
+            n += self.num_layers * (self._ssm_block_params() + D)
+            n += self._attn_block_params()  # shared
+        elif self.family == "encdec":
+            enc = self.enc_layers * (attn + mlp(self.d_ff) + 2 * D)
+            dec = self.dec_layers * (2 * attn + mlp(self.d_ff) + 3 * D)
+            n += enc + dec
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed-in experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        expert = (3 if self.mlp_gated else 2) * self.d_model * self.moe_d_ff
+        inactive = (
+            self.n_moe_layers() * (self.moe_num_experts - self.moe_top_k) * expert
+        )
+        return self.param_count() - inactive
+
+    def _ssm_block_params(self) -> int:
+        D, DI, N, Hs = self.d_model, self.d_inner, self.ssm_state, self.ssm_heads
+        conv_ch = DI + 2 * N
+        return (
+            D * (2 * DI + 2 * N + Hs)  # in_proj
+            + conv_ch * self.ssm_conv + conv_ch  # depthwise conv + bias
+            + 3 * Hs  # A_log, D, dt_bias
+            + DI  # gated rmsnorm
+            + DI * D  # out_proj
+        )
+
+    def _attn_block_params(self) -> int:
+        D, H, KV, HD = self.d_model, self.num_heads, self.num_kv_heads, self.head_dim
+        nm = 3 if self.mlp_gated else 2
+        return D * H * HD + 2 * D * KV * HD + H * HD * D + nm * D * self.d_ff + 2 * D
+
+    def supported_shapes(self) -> Tuple[str, ...]:
+        names = ["train_4k", "prefill_32k", "decode_32k"]
+        if self.supports_long_context:
+            names.append("long_500k")
+        return tuple(names)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+_REDUCED: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig, reduced: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    _REDUCED[cfg.name] = reduced
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def get_reduced(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REDUCED[name]
+
+
+def list_archs() -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import (  # noqa: F401
+        granite_moe_1b,
+        llama3_405b,
+        llama4_maverick,
+        mamba2_27b,
+        pixtral_12b,
+        qwen25_3b,
+        qwen3_17b,
+        seamless_m4t_v2,
+        starcoder2_15b,
+        zamba2_7b,
+    )
+
+    _LOADED = True

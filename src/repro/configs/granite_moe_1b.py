@@ -1,0 +1,50 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8, every layer MoE.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+"""
+from repro.configs.base import ArchConfig, LayoutConfig, register
+
+FULL = ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    rope_theta=10_000.0,
+    moe_num_experts=32,
+    moe_top_k=8,
+    moe_interleave=1,
+    moe_d_ff=512,
+    moe_shared_expert=False,
+    moe_capacity_factor=1.25,
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+    layout=LayoutConfig(microbatch=256, remat="full", seq_parallel=False),
+    layout_overrides=(
+        ("decode_32k", (("parallelism", "serve"), ("decode_logits_bf16", True), ("kv_cache_shard", "hd"))),
+        ("train_4k", (("parallelism", "fsdp"), ("microbatch", 0))),
+    ),
+)
+
+REDUCED = ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=48,
+    vocab_size=256,
+    moe_num_experts=4,
+    moe_top_k=2,
+    moe_interleave=1,
+    moe_d_ff=48,
+    tie_embeddings=True,
+    layout=LayoutConfig(microbatch=0, param_dtype="float32", remat="none", seq_parallel=False),
+)
+
+register(FULL, REDUCED)

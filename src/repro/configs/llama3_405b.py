@@ -1,0 +1,50 @@
+"""llama3-405b [dense] — GQA, 128k vocab. [arXiv:2407.21783; unverified]
+
+The heaviest assigned cell. On a 256-chip v5e pod the fp32-state Adam
+footprint alone (4.9 TB) cannot fit, so this config uses bf16 optimizer
+states + bf16 grad accumulation + microbatched grad-accum + sequence-
+parallel residual checkpoints (see EXPERIMENTS.md §Perf for the
+iteration log that arrived here).
+"""
+from repro.configs.base import ArchConfig, LayoutConfig, register
+
+FULL = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    num_layers=126,
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=53248,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    source="arXiv:2407.21783; unverified",
+    layout=LayoutConfig(
+        microbatch=64,
+        remat="full",
+        remat_group=9,
+        seq_parallel=False,
+        opt_dtype="bfloat16",
+        grad_accum_dtype="bfloat16",
+    ),
+    layout_overrides=(
+        ("decode_32k", (("parallelism", "serve2d"), ("decode_logits_bf16", True),)),
+        ("prefill_32k", (("attn_chunk_kv", 256), ("microbatch", 16))),
+    ),
+)
+
+REDUCED = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    num_layers=3,
+    d_model=96,
+    num_heads=6,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=256,
+    layout=LayoutConfig(microbatch=0, param_dtype="float32", remat="none", seq_parallel=False),
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,57 @@
+"""llama4-maverick-400b-a17b [moe] — 128 routed experts top-1 + shared
+expert, MoE every other layer (interleave=2), early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+"""
+from repro.configs.base import ArchConfig, LayoutConfig, register
+
+FULL = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,  # expert d_ff (brief)
+    vocab_size=202048,
+    rope_theta=500_000.0,
+    moe_num_experts=128,
+    moe_top_k=1,
+    moe_interleave=2,
+    moe_d_ff=8192,
+    moe_shared_expert=True,
+    moe_capacity_factor=1.25,
+    dense_d_ff=16384,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+    layout=LayoutConfig(
+        microbatch=128,
+        remat="full",
+        seq_parallel=False,
+        opt_dtype="bfloat16",
+        grad_accum_dtype="bfloat16",
+    ),
+    layout_overrides=(
+        ("decode_32k", (("parallelism", "serve2d"), ("decode_logits_bf16", True),)),
+    ),
+)
+
+REDUCED = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=256,
+    moe_num_experts=4,
+    moe_top_k=1,
+    moe_interleave=2,
+    moe_d_ff=96,
+    moe_shared_expert=True,
+    dense_d_ff=128,
+    layout=LayoutConfig(microbatch=0, param_dtype="float32", remat="none", seq_parallel=False),
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,53 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060; unverified]
+
+d_inner = 2*d_model = 5120, head_dim 64 => 80 SSD heads, N = 128.
+Sub-quadratic: supports long_500k.
+"""
+from repro.configs.base import ArchConfig, LayoutConfig, register
+
+FULL = ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=256,
+    supports_long_context=True,
+    source="arXiv:2405.21060; unverified",
+    layout=LayoutConfig(microbatch=64, remat="full", seq_parallel=False),
+    layout_overrides=(
+        ("decode_32k", (("parallelism", "serve"), ("decode_logits_bf16", True),)),
+        ("long_500k", (("parallelism", "serve"), ("decode_logits_bf16", True),)),
+        ("train_4k", (("parallelism", "fsdp"), ("microbatch", 0))),
+    ),
+)
+
+REDUCED = ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=2,
+    d_model=64,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=256,
+    ssm_state=16,
+    ssm_head_dim=16,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=32,
+    supports_long_context=True,
+    layout=LayoutConfig(microbatch=0, param_dtype="float32", remat="none", seq_parallel=False),
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,26 @@
+"""The paper's own experimental configuration (§4.1 Implementation Details).
+
+K = 9 arms (0.8..1.6 GHz, 0.1 GHz steps), 10 ms decision interval,
+10 repeats averaged, switching overhead 150 us / 0.3 J per switch
+(§4.4), default frequency = f_max = 1.6 GHz.
+"""
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class PaperSimConfig:
+    freqs_ghz: Tuple[float, ...] = tuple(round(0.8 + 0.1 * i, 1) for i in range(9))
+    decision_interval_s: float = 0.010
+    n_repeats: int = 10
+    switch_latency_s: float = 150e-6
+    switch_energy_j: float = 0.3
+    default_arm: int = 8  # index of 1.6 GHz (arms sorted ascending)
+    # EnergyUCB hyper-parameters (Alg. 1)
+    alpha: float = 0.2
+    switching_penalty: float = 0.05
+    mu_init: float = 0.0  # optimistic prior, in normalized-reward units
+    seed: int = 0
+
+
+PAPER_SIM = PaperSimConfig()

@@ -1,0 +1,45 @@
+"""pixtral-12b [vlm] — pixtral-ViT frontend (STUB) + mistral-nemo-class
+decoder backbone. [hf:mistralai/Pixtral-12B-2409; unverified]
+
+The vision frontend is a stub per the brief: ``input_specs()`` provides
+precomputed patch embeddings occupying the first ``num_img_patches``
+sequence positions; the remaining positions are text tokens. Loss is on
+text positions only.
+"""
+from repro.configs.base import ArchConfig, LayoutConfig, register
+
+FULL = ArchConfig(
+    name="pixtral-12b",
+    family="vlm",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=160,
+    d_ff=14336,
+    vocab_size=131072,
+    rope_theta=1_000_000.0,
+    num_img_patches=1024,
+    source="hf:mistralai/Pixtral-12B-2409; unverified",
+    layout=LayoutConfig(microbatch=64, remat="full", seq_parallel=False),
+    layout_overrides=(
+        ("decode_32k", (("parallelism", "serve"), ("decode_logits_bf16", True), ("kv_cache_shard", "hd"))),
+        ("train_4k", (("parallelism", "fsdp"), ("microbatch", 0))),
+    ),
+)
+
+REDUCED = ArchConfig(
+    name="pixtral-12b",
+    family="vlm",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=256,
+    num_img_patches=8,
+    layout=LayoutConfig(microbatch=0, param_dtype="float32", remat="none", seq_parallel=False),
+)
+
+register(FULL, REDUCED)

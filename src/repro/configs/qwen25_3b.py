@@ -1,0 +1,40 @@
+"""qwen2.5-3b [dense] — GQA, QKV bias. [hf:Qwen/Qwen2.5-0.5B; hf]"""
+from repro.configs.base import ArchConfig, LayoutConfig, register
+
+FULL = ArchConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen2.5-0.5B; hf",
+    layout=LayoutConfig(microbatch=128, remat="full", seq_parallel=False),
+    layout_overrides=(
+        ("decode_32k", (("parallelism", "serve"), ("decode_logits_bf16", True), ("kv_cache_shard", "hd"))),
+        ("train_4k", (("parallelism", "fsdp"), ("microbatch", 0))),
+    ),
+)
+
+REDUCED = ArchConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=256,
+    qkv_bias=True,
+    tie_embeddings=True,
+    layout=LayoutConfig(microbatch=0, param_dtype="float32", remat="none", seq_parallel=False),
+)
+
+register(FULL, REDUCED)

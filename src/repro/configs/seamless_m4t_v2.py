@@ -1,0 +1,51 @@
+"""seamless-m4t-large-v2 [audio] — encoder-decoder, multimodal backbone.
+[arXiv:2308.11596; hf]
+
+The modality frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed frame embeddings (batch, frames, d_model). 24L encoder + 24L
+decoder (brief's "24L" is per stack for the large-v2 backbone). kv=16 on
+16 heads => MHA. Decode shapes cache the decoder self-attn KV over
+seq_len and cross-attend to a fixed 4096-frame encoder memory.
+"""
+from repro.configs.base import ArchConfig, LayoutConfig, register
+
+FULL = ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    num_layers=48,  # 24 enc + 24 dec
+    enc_layers=24,
+    dec_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    mlp_gated=False,
+    vocab_size=256206,
+    decode_enc_len=4096,
+    source="arXiv:2308.11596; hf",
+    layout=LayoutConfig(microbatch=128, remat="full", seq_parallel=False),
+    layout_overrides=(
+        ("decode_32k", (("parallelism", "serve"), ("decode_logits_bf16", True), ("kv_cache_shard", "hd"))),
+        ("train_4k", (("parallelism", "fsdp"), ("microbatch", 0))),
+    ),
+)
+
+REDUCED = ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    num_layers=4,
+    enc_layers=2,
+    dec_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    mlp_gated=False,
+    vocab_size=256,
+    decode_enc_len=32,
+    layout=LayoutConfig(microbatch=0, param_dtype="float32", remat="none", seq_parallel=False),
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,39 @@
+"""starcoder2-15b [dense] — GQA, RoPE. [arXiv:2402.19173; hf]"""
+from repro.configs.base import ArchConfig, LayoutConfig, register
+
+FULL = ArchConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    mlp_gated=False,
+    vocab_size=49152,
+    rope_theta=100_000.0,
+    source="arXiv:2402.19173; hf",
+    layout=LayoutConfig(microbatch=64, remat="full", seq_parallel=False),
+    layout_overrides=(
+        ("train_4k", (("parallelism", "fsdp"), ("microbatch", 0))),
+        ("prefill_32k", (("attn_chunk_kv", 512), ("microbatch", 0))),
+        ("decode_32k", (("parallelism", "serve"), ("decode_logits_bf16", True), ("kv_cache_shard", "hd"))),
+    ),
+)
+
+REDUCED = ArchConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    rope_theta=100_000.0,
+    layout=LayoutConfig(microbatch=0, param_dtype="float32", remat="none", seq_parallel=False),
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,57 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared full-attention block
+applied every 6 layers. [arXiv:2411.15242; unverified]
+
+81 Mamba2 layers; ONE shared attention+MLP block (weight-tied) applied
+before mamba layer i when i % 6 == 0 (14 applications, each with its own
+KV cache at decode time). Sub-quadratic overall: supports long_500k via
+chunked-flash attention in the shared blocks + constant-size SSM state.
+"""
+from repro.configs.base import ArchConfig, LayoutConfig, register
+
+FULL = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=256,
+    attn_every=6,
+    supports_long_context=True,
+    source="arXiv:2411.15242; unverified",
+    layout=LayoutConfig(microbatch=64, remat="full", seq_parallel=False),
+    layout_overrides=(
+        ("decode_32k", (("parallelism", "serve"), ("decode_logits_bf16", True), ("kv_cache_shard", "hd"))),
+        ("train_4k", (("parallelism", "fsdp"), ("microbatch", 0))),
+        ("long_500k", (("parallelism", "serve"), ("decode_logits_bf16", True), ("kv_cache_shard", "hd"), ("attn_chunk_kv", 2048))),
+    ),
+)
+
+REDUCED = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=7,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    ssm_state=16,
+    ssm_head_dim=16,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=32,
+    attn_every=3,
+    supports_long_context=True,
+    layout=LayoutConfig(microbatch=0, param_dtype="float32", remat="none", seq_parallel=False),
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,47 @@
+# The paper's contribution: EnergyUCB and its experimental apparatus.
+from repro.core.calibration import (
+    DEFAULT_ARM,
+    FREQS_GHZ,
+    TABLE1_KJ,
+    AppModel,
+    app_names,
+    get_app,
+)
+from repro.core.policies import (
+    Policy,
+    energy_ts,
+    energy_ucb,
+    eps_greedy,
+    rr_freq,
+    static_policy,
+)
+from repro.core.regret import energy_regret_kj, saved_energy_kj, summarize
+from repro.core.rewards import REWARD_VARIANTS, make_reward_fn
+from repro.core.rl import drlcap, rl_power
+from repro.core.rollout import (
+    run_drlcap_cross,
+    run_drlcap_protocol,
+    run_episode,
+    run_repeats,
+)
+from repro.core.simulator import (
+    K_ARMS,
+    EnvParams,
+    Obs,
+    env_init,
+    env_step,
+    expected_rewards,
+    make_env_params,
+    max_steps_hint,
+    static_energy_kj,
+)
+
+__all__ = [
+    "DEFAULT_ARM", "FREQS_GHZ", "TABLE1_KJ", "AppModel", "app_names", "get_app",
+    "Policy", "energy_ucb", "energy_ts", "eps_greedy", "rr_freq", "static_policy",
+    "drlcap", "rl_power", "make_reward_fn", "REWARD_VARIANTS",
+    "run_episode", "run_repeats", "run_drlcap_protocol", "run_drlcap_cross",
+    "K_ARMS", "EnvParams", "Obs", "env_init", "env_step", "expected_rewards",
+    "make_env_params", "max_steps_hint", "static_energy_kj",
+    "saved_energy_kj", "energy_regret_kj", "summarize",
+]

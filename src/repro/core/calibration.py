@@ -1,0 +1,146 @@
+"""Aurora calibration data (paper Table 1 + Fig. 1b) and the per-app
+DVFS model fit.
+
+Table 1 gives measured per-node GPU energy E(f) for 9 static frequencies
+x 9 applications. We fit the classic DVFS decomposition per app:
+
+    T(f) = T_ref * (c * f_max/f + (1 - c))          execution time
+    P(f) = P_s + P_d * (f/f_max)^gamma               node GPU power
+
+with c = compute-bound fraction. The fit is a grid over (c, gamma) with
+a nonneg least-squares inner solve for (P_s*T_ref, P_d*T_ref); T_ref is
+anchored by Fig. 1b's pot3d wall time (56.42 s @ 1.6 GHz) and by
+E(f_max)/2.277 kW for the other apps (same node power class).
+
+The *simulator* then uses the fitted T(f) for time/progress/utilization
+but pins interval energy to the MEASURED Table-1 value
+(P_used(f) = E_table(f) / T(f)), so static-frequency energies reproduce
+the paper row-for-row by construction and the bandit faces the real
+reward landscape.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+FREQS_GHZ = np.round(np.arange(0.8, 1.61, 0.1), 1)  # arm order: ascending
+F_MAX = 1.6
+DEFAULT_ARM = 8  # 1.6 GHz
+
+# Table 1 static rows, ordered 1.6 -> 0.8 in the paper; stored ascending.
+_TABLE1_DESC = {
+    "lbm": [93.94, 93.71, 97.42, 99.88, 104.42, 109.59, 116.04, 124.28, 131.61],
+    "tealeaf": [109.79, 107.09, 105.52, 105.37, 101.65, 99.81, 98.61, 99.10, 100.59],
+    "clvleaf": [100.65, 98.72, 94.72, 91.61, 90.99, 90.35, 88.41, 89.00, 91.23],
+    "miniswp": [187.13, 177.10, 171.60, 167.25, 164.45, 161.72, 160.17, 160.15, 158.74],
+    "pot3d": [131.13, 129.11, 127.24, 125.75, 126.66, 123.38, 125.19, 125.45, 128.79],
+    "sph_exa": [1353.41, 1259.65, 1216.60, 1191.01, 1163.51, 1146.37, 1116.52, 1107.28, 1090.24],
+    "weather": [134.61, 128.43, 125.52, 122.80, 121.75, 120.47, 122.52, 123.38, 122.97],
+    "llama": [1277.71, 1257.58, 1211.42, 1294.05, 1177.68, 1202.81, 1114.29, 1360.93, 1210.13],
+    "diffusion": [772.21, 771.50, 770.91, 766.59, 771.07, 751.82, 766.73, 805.50, 747.20],
+}
+TABLE1_KJ: Dict[str, np.ndarray] = {
+    k: np.asarray(v[::-1], np.float64) for k, v in _TABLE1_DESC.items()
+}
+
+# Paper-reported EnergyUCB results (used as test targets, not by the code)
+PAPER_ENERGYUCB_KJ = {
+    "lbm": 94.25, "tealeaf": 99.06, "clvleaf": 90.08, "miniswp": 162.72,
+    "pot3d": 124.93, "sph_exa": 1095.89, "weather": 122.73,
+    "llama": 1127.17, "diffusion": 750.90,
+}
+
+POT3D_T_REF_S = 56.42  # Fig. 1b @ 1.6 GHz
+NODE_POWER_KW = 2.277  # Fig. 1b pot3d @ 1.6 GHz; power-class anchor
+SWITCH_LATENCY_S = 150e-6  # §4.4
+SWITCH_ENERGY_J = 0.3  # §4.4
+
+# Published TIME anchors pin the compute-bound fraction c where the paper
+# reports slowdowns (energy alone cannot identify the time/power split):
+#   pot3d  Fig. 1b: T(0.8)/T(1.6) = 75.02/56.42 -> c = 0.33
+#   clvleaf §4.6: ~14.46% slowdown at its energy-optimal ~1.0-1.1 GHz
+#   miniswp §4.6: ~6.26% slowdown at its energy-optimal 0.8 GHz
+C_ANCHORS = {
+    "pot3d": 0.30,
+    "clvleaf": 0.24,
+    "miniswp": 0.063,
+}
+# Unanchored apps: c fitted from the energy curve, bounded to a
+# physically plausible range for saturated offload workloads.
+C_RANGE = (0.02, 0.65)
+
+
+@dataclass(frozen=True)
+class AppModel:
+    name: str
+    e_table_kj: Tuple[float, ...]  # measured static energies (ascending f)
+    c: float  # compute-bound fraction
+    gamma: float  # dynamic-power exponent
+    p_static_kw: float
+    p_dyn_kw: float
+    t_ref_s: float  # wall time at f_max
+    uc_base: float = 0.9  # core (compute-engine) active fraction
+    noise_energy: float = 0.03  # relative counter noise
+    noise_util: float = 0.05
+    early_noise: float = 10.0  # extra early-phase noise multiplier (§3.2:
+    early_tau: float = 40.0  # clock-sync/thermal transients ~0.4 s)
+
+    def time_s(self, f):
+        f = np.asarray(f, np.float64)
+        return self.t_ref_s * (self.c * F_MAX / f + (1.0 - self.c))
+
+    def power_used_kw(self, arm: int) -> float:
+        return float(self.e_table_kj[arm]) / self.time_s(FREQS_GHZ[arm])
+
+
+def fit_app(name: str, e_kj: np.ndarray, t_ref_s: float) -> AppModel:
+    f = FREQS_GHZ
+    x = f / F_MAX
+    best = None
+    if name in C_ANCHORS:
+        c_grid = np.asarray([C_ANCHORS[name]])
+    else:
+        c_grid = np.linspace(C_RANGE[0], C_RANGE[1], 64)
+    for c in c_grid:
+        tf = c * F_MAX / f + (1 - c)  # T(f)/T_ref
+        for gamma in np.linspace(1.0, 3.0, 41):
+            # E(f) = a*tf + b*tf*x^gamma, a=Ps*Tref, b=Pd*Tref (nonneg)
+            A = np.stack([tf, tf * x ** gamma], 1)
+            coef, *_ = np.linalg.lstsq(A, e_kj, rcond=None)
+            coef = np.maximum(coef, 0.0)
+            resid = float(np.sum((A @ coef - e_kj) ** 2))
+            if best is None or resid < best[0]:
+                best = (resid, c, gamma, coef)
+    _, c, gamma, (a, b) = best
+    return AppModel(
+        name=name,
+        e_table_kj=tuple(float(v) for v in e_kj),
+        c=float(c),
+        gamma=float(gamma),
+        p_static_kw=float(a / t_ref_s),
+        p_dyn_kw=float(b / t_ref_s),
+        t_ref_s=float(t_ref_s),
+    )
+
+
+def _build_apps() -> Dict[str, AppModel]:
+    apps = {}
+    for name, e in TABLE1_KJ.items():
+        t_ref = POT3D_T_REF_S if name == "pot3d" else float(e[-1]) / NODE_POWER_KW
+        apps[name] = fit_app(name, e, t_ref)
+    return apps
+
+
+_APPS: Dict[str, AppModel] = {}
+
+
+def get_app(name: str) -> AppModel:
+    if not _APPS:
+        _APPS.update(_build_apps())
+    return _APPS[name]
+
+
+def app_names() -> Tuple[str, ...]:
+    return tuple(TABLE1_KJ)

@@ -1,0 +1,225 @@
+"""Bandit policies: EnergyUCB (Alg. 1) and the paper's baselines.
+
+All policies are triples of pure functions over jnp pytrees:
+
+    init(key) -> state
+    select(state, key) -> arm          (int32)
+    update(state, arm, obs) -> state
+
+so a whole episode runs under lax.scan, vmaps across seeds/apps, and
+scales to a fleet of controllers (repro.core.fleet).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.simulator import K_ARMS, Obs
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Policy:
+    name: str
+    init: Callable[[jax.Array], PyTree]
+    select: Callable[[PyTree, jax.Array], jax.Array]
+    update: Callable[[PyTree, jax.Array, Obs], PyTree]
+
+
+def _masked_argmax(scores: jax.Array, feasible: jax.Array) -> jax.Array:
+    neg = jnp.finfo(scores.dtype).min
+    has_feasible = jnp.any(feasible)
+    masked = jnp.where(feasible, scores, neg)
+    return jnp.where(has_feasible, jnp.argmax(masked), jnp.argmax(scores)).astype(
+        jnp.int32
+    )
+
+
+# ---------------------------------------------------------------------------
+# EnergyUCB (Algorithm 1) + QoS-constrained variant (§3.3)
+# ---------------------------------------------------------------------------
+
+
+def energy_ucb(
+    k: int = K_ARMS,
+    alpha: float = 0.2,
+    switching_penalty: float = 0.05,
+    mu_init: float = 0.0,
+    optimistic_init: bool = True,
+    qos_delta: Optional[float] = None,
+    default_arm: int = K_ARMS - 1,
+    window_discount: Optional[float] = None,
+    prior_mu: Optional[jax.Array] = None,
+    prior_n: float = 0.0,
+    name: Optional[str] = None,
+) -> Policy:
+    """SA-UCB_i = mu_i + alpha*sqrt(ln t / max(1, n_i)) - lam*1{i != prev}.
+
+    - optimistic_init=False reproduces the 'w/o Opt. Ini.' ablation: a
+      forced round-robin warm-up over all K arms (naive UCB1 init).
+    - qos_delta enables Constrained EnergyUCB: arms restricted to the
+      feasible set {i : 1 - p_hat_i / p_hat[f_max] <= delta} (untried
+      arms stay feasible — optimism under uncertainty).
+    - window_discount (gamma<1) gives the beyond-paper sliding-window
+      SW-SA-UCB for non-stationary phases.
+    - prior_mu/prior_n give the beyond-paper RooflineUCB warm start.
+    """
+    lam = switching_penalty
+
+    def init(key):
+        del key
+        mu0 = jnp.full((k,), mu_init, jnp.float32)
+        n0 = jnp.zeros((k,), jnp.float32)
+        if prior_mu is not None:
+            mu0 = jnp.asarray(prior_mu, jnp.float32)
+            n0 = jnp.full((k,), float(prior_n), jnp.float32)
+        return {
+            "mu": mu0,
+            "n": n0,
+            "prev": jnp.int32(default_arm),
+            "t": jnp.float32(0.0),
+            "phat": jnp.zeros((k,), jnp.float32),
+            "pn": jnp.zeros((k,), jnp.float32),
+        }
+
+    def select(state, key):
+        del key
+        t = jnp.maximum(state["t"] + 1.0, 2.0)
+        bonus = alpha * jnp.sqrt(jnp.log(t) / jnp.maximum(state["n"], 1.0))
+        sa = state["mu"] + bonus - lam * (jnp.arange(k) != state["prev"])
+        if not optimistic_init:
+            # round-robin warm-up: play each arm once first
+            tt = state["t"].astype(jnp.int32)
+            rr = jnp.mod(tt, k)
+            untried = state["n"] < 1.0
+            sa = jnp.where(jnp.any(untried), jnp.where(untried, 1e9 - jnp.arange(k) * 1.0, -1e9), sa)
+            del rr
+        feasible = jnp.ones((k,), bool)
+        if qos_delta is not None:
+            p_ref = jnp.where(
+                state["pn"][default_arm] > 0, state["phat"][default_arm], jnp.inf
+            )
+            slowdown = 1.0 - state["phat"] / p_ref
+            feasible = (state["pn"] < 1.0) | (slowdown <= qos_delta)
+        return _masked_argmax(sa, feasible)
+
+    def update(state, arm, obs: Obs):
+        n = state["n"].at[arm].add(1.0)
+        mu = state["mu"]
+        if window_discount is not None:
+            g = window_discount
+            n = state["n"] * g
+            n = n.at[arm].add(1.0)
+            mu = mu * 1.0  # discounted mean via effective counts below
+            mu = mu.at[arm].set(
+                (state["mu"][arm] * state["n"][arm] * g + obs.reward) / n[arm]
+            )
+        else:
+            mu = mu.at[arm].set(
+                state["mu"][arm] + (obs.reward - state["mu"][arm]) / n[arm]
+            )
+        pn = state["pn"].at[arm].add(1.0)
+        phat = state["phat"].at[arm].set(
+            state["phat"][arm] + (obs.progress - state["phat"][arm]) / pn[arm]
+        )
+        return {
+            "mu": mu,
+            "n": n,
+            "prev": jnp.asarray(arm, jnp.int32),
+            "t": state["t"] + 1.0,
+            "phat": phat,
+            "pn": pn,
+        }
+
+    nm = name or (
+        "EnergyUCB"
+        + ("" if optimistic_init else "-noOptInit")
+        + ("" if lam else "-noPenalty")
+        + (f"-QoS{qos_delta}" if qos_delta is not None else "")
+        + (f"-SW{window_discount}" if window_discount else "")
+    )
+    return Policy(nm, init, select, update)
+
+
+# ---------------------------------------------------------------------------
+# Baselines (§4.1)
+# ---------------------------------------------------------------------------
+
+
+def static_policy(arm: int, k: int = K_ARMS) -> Policy:
+    def init(key):
+        return {"t": jnp.float32(0.0)}
+
+    def select(state, key):
+        return jnp.int32(arm)
+
+    def update(state, a, obs):
+        return {"t": state["t"] + 1.0}
+
+    return Policy(f"Static-{arm}", init, select, update)
+
+
+def rr_freq(k: int = K_ARMS) -> Policy:
+    def init(key):
+        return {"t": jnp.int32(0)}
+
+    def select(state, key):
+        return jnp.mod(state["t"], k).astype(jnp.int32)
+
+    def update(state, a, obs):
+        return {"t": state["t"] + 1}
+
+    return Policy("RRFreq", init, select, update)
+
+
+def eps_greedy(k: int = K_ARMS, eps: float = 0.05, mu_init: float = 0.0) -> Policy:
+    def init(key):
+        return {
+            "mu": jnp.full((k,), mu_init, jnp.float32),
+            "n": jnp.zeros((k,), jnp.float32),
+            "t": jnp.float32(0.0),
+        }
+
+    def select(state, key):
+        k1, k2 = jax.random.split(key)
+        explore = jax.random.bernoulli(k1, eps)
+        rand_arm = jax.random.randint(k2, (), 0, k)
+        return jnp.where(explore, rand_arm, jnp.argmax(state["mu"])).astype(jnp.int32)
+
+    def update(state, arm, obs):
+        n = state["n"].at[arm].add(1.0)
+        mu = state["mu"].at[arm].set(
+            state["mu"][arm] + (obs.reward - state["mu"][arm]) / n[arm]
+        )
+        return {"mu": mu, "n": n, "t": state["t"] + 1.0}
+
+    return Policy(f"eps-greedy", init, select, update)
+
+
+def energy_ts(k: int = K_ARMS, sigma0: float = 0.5, mu_init: float = 0.0) -> Policy:
+    """Gaussian Thompson sampling over per-arm mean rewards."""
+
+    def init(key):
+        return {
+            "mu": jnp.full((k,), mu_init, jnp.float32),
+            "n": jnp.zeros((k,), jnp.float32),
+        }
+
+    def select(state, key):
+        std = sigma0 / jnp.sqrt(state["n"] + 1.0)
+        theta = state["mu"] + std * jax.random.normal(key, (k,))
+        return jnp.argmax(theta).astype(jnp.int32)
+
+    def update(state, arm, obs):
+        n = state["n"].at[arm].add(1.0)
+        mu = state["mu"].at[arm].set(
+            state["mu"][arm] + (obs.reward - state["mu"][arm]) / n[arm]
+        )
+        return {"mu": mu, "n": n}
+
+    return Policy("EnergyTS", init, select, update)

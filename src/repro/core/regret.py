@@ -1,0 +1,34 @@
+"""Evaluation metrics (§4.1): saved energy vs. the f_max default, and
+energy regret vs. the best static frequency."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.calibration import DEFAULT_ARM
+from repro.core.simulator import EnvParams, static_energy_kj
+
+
+def saved_energy_kj(params: EnvParams, method_energy_kj: float) -> float:
+    return static_energy_kj(params, DEFAULT_ARM) - float(method_energy_kj)
+
+
+def energy_regret_kj(params: EnvParams, method_energy_kj: float) -> float:
+    best = min(static_energy_kj(params, i) for i in range(len(params.freqs)))
+    return float(method_energy_kj) - best
+
+
+def best_static_arm(params: EnvParams) -> int:
+    es = [static_energy_kj(params, i) for i in range(len(params.freqs))]
+    return int(np.argmin(es))
+
+
+def summarize(params: EnvParams, energies: np.ndarray) -> Dict[str, float]:
+    e = float(np.mean(energies))
+    return {
+        "energy_kj": e,
+        "energy_std": float(np.std(energies)),
+        "saved_energy_kj": saved_energy_kj(params, e),
+        "energy_regret_kj": energy_regret_kj(params, e),
+    }

@@ -1,0 +1,31 @@
+"""Reward formulations (§4.5): r = -(E^a) * (R^b) with (a,b) in
+{(1,1), (2,1), (1,2)}. Components are normalized by their f_max values
+so exponents change the trade-off shape, not the scale."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.simulator import EnvParams, Obs
+
+
+def make_reward_fn(
+    params: EnvParams, e_exp: float = 1.0, r_exp: float = 1.0
+) -> Callable[[Obs], jnp.ndarray]:
+    e_ref = params.e_interval_kj[-1] * 1e3
+    r_ref = params.uc[-1] / params.uu[-1]
+
+    def fn(obs: Obs):
+        e = obs.energy_j / e_ref
+        r = (obs.uc / obs.uu) / r_ref
+        return -(e ** e_exp) * (r ** r_exp)
+
+    return fn
+
+
+REWARD_VARIANTS = {
+    "E*R": (1.0, 1.0),
+    "E^2*R": (2.0, 1.0),
+    "E*R^2": (1.0, 2.0),
+}

@@ -1,0 +1,155 @@
+"""RL baselines adapted to GPU frequency control (paper §4.1):
+
+- RL-Power [Wang+ 2021]: online tabular Q-learning; state = discretized
+  core/uncore utilization ratio, actions = the K frequencies.
+- DRLCap [Wang+ 2024]: a small DQN (MLP over counter features) with a
+  target network. The offline/online protocol variants (20% pretrain +
+  1.25x-scaled deployment, -Online, -Cross) live in repro.core.rollout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import Policy
+from repro.core.simulator import K_ARMS, Obs
+
+N_BINS = 8
+
+
+def _ratio_bin(uc, uu):
+    r = jnp.log(jnp.clip(uc / uu, 1e-3, 1e3))
+    edges = jnp.linspace(-1.5, 2.5, N_BINS - 1)
+    return jnp.searchsorted(edges, r).astype(jnp.int32)
+
+
+def rl_power(
+    k: int = K_ARMS,
+    lr: float = 0.2,
+    gamma: float = 0.9,
+    eps: float = 0.1,
+    q_init: float = 0.0,
+) -> Policy:
+    def init(key):
+        return {
+            "Q": jnp.full((N_BINS, k), q_init, jnp.float32),
+            "s": jnp.int32(N_BINS // 2),
+            "t": jnp.float32(0.0),
+        }
+
+    def select(state, key):
+        k1, k2 = jax.random.split(key)
+        explore = jax.random.bernoulli(k1, eps)
+        rand_arm = jax.random.randint(k2, (), 0, k)
+        greedy = jnp.argmax(state["Q"][state["s"]])
+        return jnp.where(explore, rand_arm, greedy).astype(jnp.int32)
+
+    def update(state, arm, obs: Obs):
+        s, Q = state["s"], state["Q"]
+        s2 = _ratio_bin(obs.uc, obs.uu)
+        td = obs.reward + gamma * jnp.max(Q[s2]) - Q[s, arm]
+        Q = Q.at[s, arm].add(lr * td)
+        return {"Q": Q, "s": s2, "t": state["t"] + 1.0}
+
+    return Policy("RL-Power", init, select, update)
+
+
+# ---------------------------------------------------------------------------
+# DRLCap (DQN)
+# ---------------------------------------------------------------------------
+
+_HID = 32
+_FDIM = K_ARMS + 6
+
+
+def _features(prev_arm, obs: Obs):
+    onehot = jax.nn.one_hot(prev_arm, K_ARMS)
+    return jnp.concatenate(
+        [
+            onehot,
+            jnp.stack(
+                [
+                    obs.uc,
+                    obs.uu,
+                    jnp.clip(obs.uc / jnp.maximum(obs.uu, 1e-3), 0, 20.0) / 10.0,
+                    obs.energy_j / 30.0,
+                    obs.progress * 1e3,
+                    jnp.float32(1.0),
+                ]
+            ),
+        ]
+    )
+
+
+def _qnet(p, phi):
+    h = jax.nn.relu(phi @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def drlcap(
+    k: int = K_ARMS,
+    lr: float = 1e-2,
+    gamma: float = 0.9,
+    sync_every: int = 200,
+    trainable: bool = True,
+    name: str = "DRLCap",
+) -> Policy:
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        net = {
+            "w1": jax.random.normal(k1, (_FDIM, _HID)) * 0.1,
+            "b1": jnp.zeros((_HID,)),
+            "w2": jax.random.normal(k2, (_HID, k)) * 0.1,
+            "b2": jnp.zeros((k,)),
+        }
+        dummy = Obs(
+            energy_j=jnp.float32(20.0), uc=jnp.float32(0.9), uu=jnp.float32(0.3),
+            progress=jnp.float32(1e-4), reward=jnp.float32(-1.0),
+            switched=jnp.bool_(False), active=jnp.bool_(True),
+        )
+        return {
+            "net": net,
+            "target": jax.tree.map(jnp.copy, net),
+            "phi": _features(jnp.int32(k - 1), dummy),
+            "t": jnp.float32(0.0),
+        }
+
+    def select(state, key):
+        k1, k2 = jax.random.split(key)
+        eps = jnp.maximum(0.05, 0.5 * jnp.exp(-state["t"] / 500.0))
+        explore = jax.random.bernoulli(k1, eps)
+        rand_arm = jax.random.randint(k2, (), 0, k)
+        greedy = jnp.argmax(_qnet(state["net"], state["phi"]))
+        return jnp.where(explore, rand_arm, greedy).astype(jnp.int32)
+
+    def update(state, arm, obs: Obs):
+        phi2 = _features(arm, obs)
+        if not trainable:
+            return {**state, "phi": phi2, "t": state["t"] + 1.0}
+        target = obs.reward + gamma * jnp.max(_qnet(state["target"], phi2))
+
+        def td_loss(net):
+            q = _qnet(net, state["phi"])[arm]
+            return jnp.square(q - jax.lax.stop_gradient(target))
+
+        grads = jax.grad(td_loss)(state["net"])
+        net = jax.tree.map(lambda p, g: p - lr * g, state["net"], grads)
+        t = state["t"] + 1.0
+        sync = jnp.mod(t, sync_every) < 0.5
+        tgt = jax.tree.map(
+            lambda tp, np_: jnp.where(sync, np_, tp), state["target"], net
+        )
+        return {"net": net, "target": tgt, "phi": phi2, "t": t}
+
+    return Policy(name, init, select, update)
+
+
+def freeze(policy: Policy, name=None) -> Policy:
+    """Deployment-mode wrapper: state keeps tracking features but stops
+    learning (used by the DRLCap offline->online protocol)."""
+    if policy.name.startswith("DRLCap"):
+        return drlcap(trainable=False, name=name or policy.name + "-frozen")
+    raise ValueError("freeze() currently supports DRLCap policies")

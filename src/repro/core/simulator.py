@@ -1,0 +1,179 @@
+"""The bandit environment: a calibrated Aurora-node DVFS simulator as a
+pure-JAX step function (jit/scan/vmap-friendly).
+
+Semantics per decision interval (10 ms, paper §4.1):
+  - progress  p_i = dt / T(f_i)            (completion-time model, §3.1)
+  - energy    E_i = P_used(f_i) * dt       with P_used = E_table/T (so a
+              static policy reproduces Table 1 exactly), + 0.3 J and
+              150 us added on a frequency switch (§4.4)
+  - counters  UC = core-active fraction ~ uc_base (offload kernels keep
+              compute engines busy at any f); UU = copy-engine active
+              fraction ~ (1-c) * T(f_max)/T(f) (data moved per unit time
+              tracks throughput). The paper's performance proxy
+              R = UC/UU is then ~ energy-per-unit-progress, which is
+              what makes reward = -E*R the right online objective.
+  - noise     multiplicative Gaussian on counters, inflated by
+              early_noise * exp(-t/early_tau) at the start of a job
+              (clock sync / thermal transients, §3.2), motivating
+              optimistic initialization.
+
+Rewards are normalized by the app's f_max scale so policy
+hyper-parameters (alpha, lambda, mu_init) are app-independent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import (
+    DEFAULT_ARM,
+    F_MAX,
+    FREQS_GHZ,
+    SWITCH_ENERGY_J,
+    SWITCH_LATENCY_S,
+    AppModel,
+)
+
+K_ARMS = len(FREQS_GHZ)
+
+
+class EnvParams(NamedTuple):
+    """Static, device-resident app description."""
+
+    freqs: jax.Array  # (K,)
+    p_used_kw: jax.Array  # (K,) energy-table-pinned interval power
+    t_rel: jax.Array  # (K,) T(f)/T_ref
+    progress: jax.Array  # (K,) job fraction per interval (noise-free)
+    uc: jax.Array  # (K,)
+    uu: jax.Array  # (K,)
+    t_ref_s: jax.Array  # ()
+    dt_s: jax.Array  # ()
+    noise_energy: jax.Array
+    noise_util: jax.Array
+    early_noise: jax.Array
+    early_tau: jax.Array
+    reward_scale: jax.Array  # () normalizer: E*R at f_max
+    e_interval_kj: jax.Array  # (K,) = p_used * dt (noise-free)
+
+
+class EnvState(NamedTuple):
+    remaining: jax.Array  # () job fraction left
+    prev_arm: jax.Array  # () int32
+    t: jax.Array  # () int32 step
+    energy_kj: jax.Array  # () total energy so far
+    time_s: jax.Array  # () wall time so far
+    switches: jax.Array  # () int32
+
+
+class Obs(NamedTuple):
+    energy_j: jax.Array  # interval energy (J, noisy, incl. switch)
+    uc: jax.Array
+    uu: jax.Array
+    progress: jax.Array  # noisy progress estimate
+    reward: jax.Array  # normalized -E*R (default formulation)
+    switched: jax.Array
+    active: jax.Array  # pre-step: job still running
+
+
+def make_env_params(app: AppModel, dt_s: float = 0.010) -> EnvParams:
+    f = np.asarray(FREQS_GHZ)
+    t_rel = app.c * F_MAX / f + (1 - app.c)
+    t_abs = app.t_ref_s * t_rel
+    p_used = np.asarray(app.e_table_kj) / t_abs  # kW
+    uc = np.full(K_ARMS, app.uc_base)
+    uu = np.clip((1 - app.c) / t_rel * app.uc_base, 1e-3, 1.0)
+    progress = dt_s / t_abs
+    e_interval = p_used * dt_s  # kJ
+    r_scale = float(e_interval[-1] * uc[-1] / uu[-1] * 1e3)  # J-scale at fmax
+    return EnvParams(
+        freqs=jnp.asarray(f, jnp.float32),
+        p_used_kw=jnp.asarray(p_used, jnp.float32),
+        t_rel=jnp.asarray(t_rel, jnp.float32),
+        progress=jnp.asarray(progress, jnp.float32),
+        uc=jnp.asarray(uc, jnp.float32),
+        uu=jnp.asarray(uu, jnp.float32),
+        t_ref_s=jnp.float32(app.t_ref_s),
+        dt_s=jnp.float32(dt_s),
+        noise_energy=jnp.float32(app.noise_energy),
+        noise_util=jnp.float32(app.noise_util),
+        early_noise=jnp.float32(app.early_noise),
+        early_tau=jnp.float32(app.early_tau),
+        reward_scale=jnp.float32(r_scale),
+        e_interval_kj=jnp.asarray(e_interval, jnp.float32),
+    )
+
+
+def env_init(params: EnvParams) -> EnvState:
+    return EnvState(
+        remaining=jnp.float32(1.0),
+        prev_arm=jnp.int32(DEFAULT_ARM),
+        t=jnp.int32(0),
+        energy_kj=jnp.float32(0.0),
+        time_s=jnp.float32(0.0),
+        switches=jnp.int32(0),
+    )
+
+
+def env_step(params: EnvParams, state: EnvState, arm, key) -> tuple:
+    """One decision interval. Returns (new_state, obs)."""
+    arm = jnp.asarray(arm, jnp.int32)
+    active = state.remaining > 0.0
+    switched = (arm != state.prev_arm) & active
+
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    early = 1.0 + params.early_noise * jnp.exp(
+        -state.t.astype(jnp.float32) / params.early_tau
+    )
+    n_e = 1.0 + params.noise_energy * early * jax.random.normal(k1)
+    n_uc = 1.0 + params.noise_util * early * jax.random.normal(k2)
+    n_uu = 1.0 + params.noise_util * early * jax.random.normal(k3)
+    n_p = 1.0 + params.noise_util * jax.random.normal(k4)
+
+    e_kj = params.e_interval_kj[arm] * jnp.maximum(n_e, 0.05)
+    e_kj = e_kj + switched * (SWITCH_ENERGY_J / 1e3)
+    uc = jnp.clip(params.uc[arm] * jnp.maximum(n_uc, 0.05), 1e-3, 1.0)
+    uu = jnp.clip(params.uu[arm] * jnp.maximum(n_uu, 0.05), 1e-3, 1.0)
+    # switch latency eats into the interval's useful time
+    eff = 1.0 - switched * (SWITCH_LATENCY_S / params.dt_s)
+    prog = params.progress[arm] * jnp.maximum(n_p, 0.0) * eff
+
+    reward = -(e_kj * 1e3) * (uc / uu) / params.reward_scale
+
+    new_state = EnvState(
+        remaining=jnp.maximum(state.remaining - prog * active, 0.0),
+        prev_arm=jnp.where(active, arm, state.prev_arm),
+        t=state.t + active.astype(jnp.int32),
+        energy_kj=state.energy_kj + e_kj * active,
+        time_s=state.time_s + (params.dt_s + switched * SWITCH_LATENCY_S) * active,
+        switches=state.switches + switched.astype(jnp.int32),
+    )
+    obs = Obs(
+        energy_j=e_kj * 1e3,
+        uc=uc,
+        uu=uu,
+        progress=prog,
+        reward=reward,
+        switched=switched,
+        active=active,
+    )
+    return new_state, obs
+
+
+def expected_rewards(params: EnvParams) -> jax.Array:
+    """Noise-free E[r] per arm (for regret traces / oracle)."""
+    return -(params.e_interval_kj * 1e3) * (params.uc / params.uu) / params.reward_scale
+
+
+def static_energy_kj(params: EnvParams, arm: int) -> float:
+    """Total job energy at a static frequency (closed form)."""
+    steps = 1.0 / params.progress[arm]
+    return float(params.e_interval_kj[arm] * steps)
+
+
+def max_steps_hint(params: EnvParams, slack: float = 1.35) -> int:
+    worst = float(jnp.max(1.0 / params.progress))
+    return int(worst * slack) + K_ARMS

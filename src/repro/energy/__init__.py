@@ -1,0 +1,12 @@
+from repro.energy.geopm import FrequencyActuator, SimulatedGEOPM, Telemetry
+from repro.energy.model import StepEnergyModel, env_params_from_roofline
+from repro.energy.runtime import EnergyAwareRuntime
+
+__all__ = [
+    "FrequencyActuator",
+    "Telemetry",
+    "SimulatedGEOPM",
+    "StepEnergyModel",
+    "env_params_from_roofline",
+    "EnergyAwareRuntime",
+]

@@ -1,0 +1,94 @@
+"""GEOPM-shaped actuation/telemetry interface (paper §4.1 uses the GEOPM
+Service + Runtime on Aurora; this is the TPU-fleet equivalent surface).
+
+A real deployment implements ``FrequencyActuator`` against the platform
+power API and ``Telemetry`` against hardware counters; this container
+wires in the simulated implementation, which is driven by the
+StepEnergyModel calibrated from the dry-run roofline terms.
+"""
+from __future__ import annotations
+
+import abc
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.calibration import (
+    FREQS_GHZ,
+    SWITCH_ENERGY_J,
+    SWITCH_LATENCY_S,
+)
+
+
+class FrequencyActuator(abc.ABC):
+    """Sets the accelerator core-frequency ladder index."""
+
+    @property
+    @abc.abstractmethod
+    def ladder_ghz(self) -> Sequence[float]:
+        ...
+
+    @abc.abstractmethod
+    def set_arm(self, arm: int) -> None:
+        ...
+
+    @abc.abstractmethod
+    def current_arm(self) -> int:
+        ...
+
+
+class Telemetry(abc.ABC):
+    """Monotonic energy counter + core/uncore active-time counters."""
+
+    @abc.abstractmethod
+    def read(self) -> Dict[str, float]:
+        """{'energy_j': monotonic, 'core_active_s': .., 'uncore_active_s': ..,
+        'timestamp_s': ..}"""
+        ...
+
+
+@dataclass
+class SimulatedGEOPM(FrequencyActuator, Telemetry):
+    """Simulated node: integrates the StepEnergyModel between reads."""
+
+    model: "StepEnergyModel"  # noqa: F821  (repro.energy.model)
+    arm: int = len(FREQS_GHZ) - 1
+    _energy_j: float = 0.0
+    _core_s: float = 0.0
+    _uncore_s: float = 0.0
+    _clock_s: float = 0.0
+    switches: int = 0
+    switch_overhead_j: float = 0.0
+
+    @property
+    def ladder_ghz(self):
+        return tuple(FREQS_GHZ)
+
+    def set_arm(self, arm: int) -> None:
+        arm = int(arm)
+        if arm != self.arm:
+            self.switches += 1
+            self._energy_j += SWITCH_ENERGY_J
+            self.switch_overhead_j += SWITCH_ENERGY_J
+            self._clock_s += SWITCH_LATENCY_S
+        self.arm = arm
+
+    def current_arm(self) -> int:
+        return self.arm
+
+    def advance_one_step(self) -> Dict[str, float]:
+        """Simulate one train/serve step at the current frequency."""
+        m = self.model.step(self.arm)
+        self._energy_j += m["energy_j"]
+        self._core_s += m["core_active_s"]
+        self._uncore_s += m["uncore_active_s"]
+        self._clock_s += m["step_time_s"]
+        return m
+
+    def read(self) -> Dict[str, float]:
+        return {
+            "energy_j": self._energy_j,
+            "core_active_s": self._core_s,
+            "uncore_active_s": self._uncore_s,
+            "timestamp_s": self._clock_s,
+        }

@@ -1,0 +1,113 @@
+"""StepEnergyModel: the hardware-adaptation bridge between the dry-run
+roofline and the EnergyUCB controller (DESIGN.md §2).
+
+Given a cell's three roofline terms at f_max, the step time at relative
+core frequency x = f/f_max is the max-overlap model
+
+    t(x) = max(t_compute / x, t_memory, t_collective)
+
+(MXU throughput scales with core clock; HBM and ICI do not). Chip power
+follows the DVFS decomposition P(x) = P_idle + P_dyn * x^gamma * activity.
+The paper's counters map to:
+
+    UC (core)   = (t_compute/x) / t(x)      MXU-busy fraction
+    UU (uncore) = max(t_mem, t_coll)/ t(x)  HBM+ICI-busy fraction
+
+so compute-bound cells (train) are energy-optimal near f_max while
+memory/collective-bound cells (decode, long-context) favor low f —
+exactly the per-app structure the paper measures on Aurora.
+
+``env_params_from_roofline`` repackages a cell as a bandit EnvParams so
+every policy/rollout in repro.core runs unchanged on framework cells.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import FREQS_GHZ, F_MAX
+from repro.core.simulator import EnvParams
+
+# TPU-v5e-like chip power envelope (public TDP ~170-220 W class)
+P_IDLE_W = 75.0
+P_DYN_W = 125.0
+GAMMA = 2.2
+
+
+@dataclass(frozen=True)
+class StepEnergyModel:
+    """One (arch x shape x mesh) cell's energy behavior per step."""
+
+    t_compute_s: float
+    t_memory_s: float
+    t_collective_s: float
+    n_chips: int = 256
+    steps_total: int = 1000  # job length in steps (sets episode horizon)
+    p_idle_w: float = P_IDLE_W
+    p_dyn_w: float = P_DYN_W
+    gamma: float = GAMMA
+
+    def step(self, arm: int) -> Dict[str, float]:
+        x = float(FREQS_GHZ[arm]) / F_MAX
+        t_comp = self.t_compute_s / x
+        t_other = max(self.t_memory_s, self.t_collective_s)
+        t = max(t_comp, t_other, 1e-9)
+        activity = (t_comp + t_other) / (2 * t)
+        p_chip = self.p_idle_w + self.p_dyn_w * (x ** self.gamma) * activity
+        return {
+            "step_time_s": t,
+            "power_w": p_chip * self.n_chips,
+            "energy_j": p_chip * self.n_chips * t,
+            "core_active_s": t_comp,
+            "uncore_active_s": t_other,
+            "uc": t_comp / t,
+            "uu": max(t_other / t, 1e-3),
+        }
+
+    def static_energy_j(self, arm: int) -> float:
+        return self.step(arm)["energy_j"] * self.steps_total
+
+    def optimal_arm(self) -> int:
+        return int(np.argmin([self.static_energy_j(i) for i in range(len(FREQS_GHZ))]))
+
+
+def env_params_from_roofline(
+    model: StepEnergyModel,
+    noise_energy: float = 0.03,
+    noise_util: float = 0.05,
+    early_noise: float = 4.0,
+    early_tau: float = 30.0,
+) -> EnvParams:
+    """Package a framework cell as a bandit environment (decision interval
+    = one train/serve step; progress = steps completed)."""
+    k = len(FREQS_GHZ)
+    rows = [model.step(i) for i in range(k)]
+    t = np.array([r["step_time_s"] for r in rows])
+    p_kw = np.array([r["power_w"] for r in rows]) / 1e3
+    uc = np.array([r["uc"] for r in rows])
+    uu = np.array([r["uu"] for r in rows])
+    # decision interval = one f_max-step of wall time; progress per
+    # interval = dt / (t(f) * steps_total); energy per interval = P(f)*dt
+    dt = float(t[-1])
+    e_kj = p_kw * dt
+    progress = dt / (t * model.steps_total)
+    r_scale = float(e_kj[-1] * 1e3 * uc[-1] / uu[-1])
+    return EnvParams(
+        freqs=jnp.asarray(FREQS_GHZ, jnp.float32),
+        p_used_kw=jnp.asarray(p_kw, jnp.float32),
+        t_rel=jnp.asarray(t / t[-1], jnp.float32),
+        progress=jnp.asarray(progress, jnp.float32),
+        uc=jnp.asarray(uc, jnp.float32),
+        uu=jnp.asarray(uu, jnp.float32),
+        t_ref_s=jnp.float32(t[-1] * model.steps_total),
+        dt_s=jnp.float32(t[-1]),
+        noise_energy=jnp.float32(noise_energy),
+        noise_util=jnp.float32(noise_util),
+        early_noise=jnp.float32(early_noise),
+        early_tau=jnp.float32(early_tau),
+        reward_scale=jnp.float32(r_scale),
+        e_interval_kj=jnp.asarray(e_kj, jnp.float32),
+    )

@@ -1,0 +1,111 @@
+"""Causal GQA flash-attention forward kernel (Pallas, TPU target).
+
+TPU-native design (not a CUDA port): the grid is (batch, q_head,
+q_block); each program streams the KV sequence in VMEM-resident chunks
+with an online-softmax accumulator held in VREGs/VMEM scratch. GQA is
+expressed in the BlockSpec index_map (q head h reads kv head h // group)
+— no materialized head broadcast. Block shapes keep the MXU fed:
+(BLOCK_Q x HD) @ (HD x BLOCK_K) with HD, BLOCK_* multiples of the
+128-lane register tiling.
+
+Causality is exploited structurally: kv chunks strictly above the
+diagonal are skipped by bounding the fori_loop, and only the diagonal
+chunk applies an element mask.
+
+Validated in interpret mode against kernels.ref.ref_attention (CPU
+container); engaged on real TPUs via kernels.ops.flash_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, scale,
+                      seq_len, causal):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (BQ, HD)
+    hd = q.shape[-1]
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+
+    q_start = qi * block_q
+    # causal: last kv chunk that can contribute
+    hi = (
+        (q_start + block_q + block_k - 1) // block_k
+        if causal
+        else seq_len // block_k
+    )
+    n_chunks = seq_len // block_k
+
+    def body(ki, carry):
+        m, l, acc = carry
+        ks = k_ref[0, 0, pl.dslice(ki * block_k, block_k), :]
+        vs = v_ref[0, 0, pl.dslice(ki * block_k, block_k), :]
+        s = jnp.dot(q, ks.astype(jnp.float32).T)  # (BQ, BK)
+        if causal:
+            q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_idx = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(q_idx >= k_idx, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p.astype(vs.dtype), vs
+        ).astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    hi = jnp.minimum(hi, n_chunks) if causal else n_chunks
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (B, H, S, HD)
+    k: jax.Array,  # (B, KV, S, HD)
+    v: jax.Array,  # (B, KV, S, HD)
+    *,
+    causal: bool = True,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        scale=scale,
+        seq_len=s,
+        causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, s, hd), lambda b_, h_, i: (b_, h_ // g, 0, 0)),
+            pl.BlockSpec((1, 1, s, hd), lambda b_, h_, i: (b_, h_ // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, i: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,46 @@
+"""Jitted dispatch wrappers for the Pallas kernels.
+
+On TPU the real kernels run; elsewhere (this CPU container) callers
+either get interpret-mode execution (tests) or the XLA fallback paths in
+repro.models.layers. ``layers.attention(impl="pallas")`` routes here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.fleet_ucb import fleet_select as _fleet_select
+from repro.kernels.ssd_scan import chunk_scan as _chunk_scan
+
+
+def pallas_available() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, interpret: bool = False):
+    """q: (B, S, H, HD); k/v: (B, S, KV, HD) — model layout; kernel uses
+    head-major layout internally."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    interp = interpret or not pallas_available()
+    o = flash_attention_fwd(qt, kt, vt, causal=causal, interpret=interp)
+    return o.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_scan(states, decay, init_state, *, interpret: bool = False):
+    interp = interpret or not pallas_available()
+    return _chunk_scan(states, decay, init_state, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "lam", "interpret"))
+def fleet_select(mu, n, prev, t, *, alpha: float = 0.2, lam: float = 0.05,
+                 interpret: bool = False):
+    interp = interpret or not pallas_available()
+    return _fleet_select(mu, n, prev, t, alpha=alpha, lam=lam, interpret=interp)

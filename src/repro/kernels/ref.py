@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal=True):
+    """q: (B,H,S,HD); k/v: (B,KV,S,HD). Dense softmax attention."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    logits = logits / (hd ** 0.5)
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def ref_chunk_scan(states, decay, init_state):
+    """states: (B,H,NC,P,N); decay: (B,H,NC); init: (B,H,P,N).
+    prev[c] = state entering chunk c; final = state after last chunk."""
+
+    def scan_one(init, st, dec):  # (P,N), (NC,P,N), (NC,)
+        def step(s, inp):
+            st_c, d = inp
+            return s * d + st_c, s
+
+        final, prev = jax.lax.scan(step, init, (st, dec))
+        return final, prev
+
+    f = jax.vmap(jax.vmap(scan_one))
+    final, prev = f(
+        init_state.astype(jnp.float32),
+        states.astype(jnp.float32),
+        decay.astype(jnp.float32),
+    )
+    return prev, final
+
+
+def ref_fleet_select(mu, n, prev, t, *, alpha=0.2, lam=0.05):
+    t = jnp.maximum(t, 2.0)
+    bonus = alpha * jnp.sqrt(jnp.log(t)[:, None] / jnp.maximum(n, 1.0))
+    k = mu.shape[1]
+    arms = jnp.arange(k)[None, :]
+    sa = mu + bonus - lam * (arms != prev[:, None]).astype(mu.dtype)
+    return jnp.argmax(sa, axis=1).astype(jnp.int32)

@@ -1,0 +1,68 @@
+"""Mamba2 SSD inter-chunk state recurrence kernel (Pallas, TPU target).
+
+The chunked SSD algorithm splits into (a) intra-chunk matmuls — dense
+MXU work XLA already schedules well — and (b) a strictly sequential
+inter-chunk recurrence over NC chunk states:
+
+    state <- state * decay_c + chunk_state_c ;  emit state (pre-update)
+
+(b) is latency-bound, not FLOP-bound: the TPU-native choice is one
+program per (batch, head) holding the running (P, N) state in VMEM
+scratch and streaming chunk states through, instead of XLA's generic
+while-loop with HBM round-trips per chunk. P x N tiles are
+(64..128 x 64..128) — register-tiling aligned.
+
+Validated in interpret mode against kernels.ref.ref_chunk_scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chunk_scan_kernel(states_ref, decay_ref, init_ref, prev_ref, final_ref, *, nc):
+    # states_ref: (1, 1, NC, P, N); decay_ref: (1, 1, NC); init_ref: (1, 1, P, N)
+    state0 = init_ref[0, 0].astype(jnp.float32)  # (P, N)
+
+    def body(c, state):
+        prev_ref[0, 0, c] = state.astype(prev_ref.dtype)
+        dec = decay_ref[0, 0, c]
+        st_c = states_ref[0, 0, c].astype(jnp.float32)
+        return state * dec + st_c
+
+    state = jax.lax.fori_loop(0, nc, body, state0)
+    final_ref[0, 0] = state.astype(final_ref.dtype)
+
+
+def chunk_scan(
+    states: jax.Array,  # (B, H, NC, P, N) per-chunk contributions
+    decay: jax.Array,  # (B, H, NC) chunk decays
+    init_state: jax.Array,  # (B, H, P, N)
+    *,
+    interpret: bool = False,
+):
+    """Returns (prev_states (B,H,NC,P,N) — state entering each chunk —
+    and final_state (B,H,P,N))."""
+    b, h, nc, p, n = states.shape
+    kernel = functools.partial(_chunk_scan_kernel, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, nc, p, n), lambda b_, h_: (b_, h_, 0, 0, 0)),
+            pl.BlockSpec((1, 1, nc), lambda b_, h_: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, nc, p, n), lambda b_, h_: (b_, h_, 0, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(states, decay, init_state)

@@ -1,0 +1,260 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell
+against the production mesh with ShapeDtypeStruct inputs (no allocation),
+then extract memory/cost/collective facts for the roofline.
+
+MUST set XLA_FLAGS before ANY other import (jax locks the device count on
+first init) — hence the lines above.
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-15b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+  python -m repro.launch.dryrun --arch X --shape Y --multi-pod
+
+--all forks one subprocess per cell (failure isolation + a fresh XLA
+compilation cache per cell keeps memory bounded on the 1-core host).
+"""
+import argparse
+import functools
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+PyTree = Any
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        out[k] = v
+    return out
+
+
+def _build_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import SHAPES, get_arch
+    from repro.launch.input_specs import batch_logical_axes, input_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import build_model
+    from repro.parallel.sharding import Sharder
+    from repro.train.optimizer import AdamWConfig, adamw_init
+    from repro.train.train_step import make_train_step
+
+    import dataclasses
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if shape_name not in cfg.supported_shapes():
+        return None  # N/A by design (long_500k on quadratic archs)
+    layout = cfg.layout_for(shape_name)
+    if overrides:
+        layout = dataclasses.replace(layout, **overrides)
+    if multi_pod and layout.parallelism == "fsdp":
+        # a 256-batch cannot shard 512 ways; cross-pod runs use 2d + pod-DP
+        layout = dataclasses.replace(layout, parallelism="2d")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sharder = Sharder(
+        mesh, seq_parallel=layout.seq_parallel, profile=layout.parallelism
+    )
+    bundle = build_model(cfg, layout, sharder)
+
+    params_shapes = jax.eval_shape(bundle.init, jax.random.key(0))
+    p_shard = sharder.params_sharding(bundle.logical_axes(), params_shapes)
+    batch_sds = input_specs(cfg, shape_name)
+    b_axes = batch_logical_axes(cfg, shape.kind)
+    b_shard = {
+        k: sharder.named(*b_axes[k], shape=batch_sds[k].shape) for k in batch_sds
+    }
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=layout.opt_dtype)
+        opt_shapes = jax.eval_shape(
+            functools.partial(adamw_init, opt_cfg), params_shapes
+        )
+        o_shard = {
+            "m": p_shard,
+            "v": p_shard,
+            "count": NamedSharding(mesh, P()),
+        }
+        step = make_train_step(bundle, opt_cfg, layout)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_shapes, opt_shapes, batch_sds)
+    elif shape.kind == "prefill":
+        jitted = jax.jit(bundle.prefill, in_shardings=(p_shard, b_shard))
+        args = (params_shapes, batch_sds)
+    else:  # decode
+        cache_shapes = jax.eval_shape(
+            functools.partial(bundle.init_cache, shape.global_batch, shape.seq_len)
+        )
+        c_shard = sharder.params_sharding(bundle.cache_logical_axes(), cache_shapes)
+        jitted = jax.jit(
+            bundle.decode,
+            in_shardings=(p_shard, c_shard, b_shard),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+        args = (params_shapes, cache_shapes, batch_sds)
+    return jitted, args, mesh, cfg, layout
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None) -> Dict[str, Any]:
+    import jax
+
+    from repro.roofline.hlo_parse import collective_bytes_from_hlo
+
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "layout_overrides": overrides or {},
+    }
+    built = _build_cell(arch, shape_name, multi_pod, overrides)
+    if built is None:
+        rec["status"] = "skipped_na"
+        return rec
+    jitted, args, mesh, cfg, layout = built
+    t0 = time.time()
+    with mesh:
+        lowered = jitted.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory_per_device"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_est_bytes": int(
+            ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes
+        ),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["hlo_cost"] = {
+        "flops_raw": float(ca.get("flops", -1.0)),
+        "bytes_raw": float(ca.get("bytes accessed", -1.0)),
+        "note": "XLA counts while/scan bodies once; see roofline.analysis",
+    }
+    hlo = compiled.as_text()
+    rec["hlo_chars"] = len(hlo)
+    coll = collective_bytes_from_hlo(hlo)
+    rec["collectives"] = {
+        "per_kind_bytes": coll["per_kind"],
+        "total_bytes_per_device": coll["total"],
+        "op_sites": coll["count"],
+    }
+    rec["status"] = "ok"
+    return rec
+
+
+def out_path(outdir: str, arch: str, shape: str, multi_pod: bool) -> str:
+    mesh = "multipod" if multi_pod else "pod"
+    return os.path.join(outdir, f"{arch}__{shape}__{mesh}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--set", action="append", dest="overrides", metavar="K=V",
+        help="layout override, e.g. --set seq_parallel=False --set microbatch=32",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        from repro.configs import get_arch, list_archs
+
+        cells = []
+        for a in list_archs():
+            for s in get_arch(a).supported_shapes():
+                for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
+                    cells.append((a, s, mp))
+        failures = 0
+        for a, s, mp in cells:
+            path = out_path(args.out, a, s, mp)
+            if os.path.exists(path) and not args.force:
+                print(f"CACHED {path}")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", a, "--shape", s, "--out", args.out,
+            ] + (["--multi-pod"] if mp else [])
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                failures += 1
+                print(f"FAIL {a} {s} mp={mp}\n{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
+            else:
+                print(r.stdout.strip().splitlines()[-1] if r.stdout.strip() else "")
+        print(f"dry-run sweep complete; failures={failures}")
+        return 1 if failures else 0
+
+    rec = {}
+    try:
+        rec = run_cell(
+            args.arch, args.shape, args.multi_pod, _parse_overrides(args.overrides)
+        )
+    except Exception as e:
+        rec = {
+            "arch": args.arch, "shape": args.shape,
+            "mesh": "2x16x16" if args.multi_pod else "16x16",
+            "status": "error", "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        path = out_path(args.out, args.arch, args.shape, args.multi_pod)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(json.dumps({k: rec[k] for k in ("arch", "shape", "mesh", "status")}))
+        print(rec["error"], file=sys.stderr)
+        return 1
+    path = out_path(args.out, args.arch, args.shape, args.multi_pod)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    brief = {k: rec.get(k) for k in ("arch", "shape", "mesh", "status", "compile_s")}
+    if rec.get("status") == "ok":
+        brief["peak_gb"] = round(rec["memory_per_device"]["peak_est_bytes"] / 2**30, 2)
+        brief["coll_gb"] = round(
+            rec["collectives"]["total_bytes_per_device"] / 2**30, 3
+        )
+    print(json.dumps(brief))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,109 @@
+"""Input stand-ins for every (arch x shape) cell.
+
+``input_specs`` returns jax.ShapeDtypeStruct pytrees (weak-type-correct,
+shardable, no device allocation) used by the dry-run; ``make_batch``
+returns small concrete arrays for smoke tests / real runs with the same
+structure.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+
+PyTree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def train_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    emb_dtype = jnp.dtype(cfg.layout.param_dtype)
+    if cfg.family == "vlm":
+        P = cfg.num_img_patches
+        return {
+            "tokens": _sds((B, S - P), jnp.int32),
+            "img_emb": _sds((B, P, cfg.d_model), emb_dtype),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    if cfg.family == "encdec":
+        return {
+            "frames": _sds((B, S, cfg.d_model), emb_dtype),
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    return {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    sp = train_specs(cfg, shape)
+    sp.pop("labels")
+    return sp
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    return {"token": _sds((B,), jnp.int32), "index": _sds((), jnp.int32)}
+
+
+def batch_logical_axes(cfg: ArchConfig, kind: str) -> Dict[str, tuple]:
+    if kind == "decode":
+        return {"token": ("batch",), "index": ()}
+    ax: Dict[str, tuple] = {"tokens": ("batch", None)}
+    if kind == "train":
+        ax["labels"] = ("batch", None)
+    if cfg.family == "vlm":
+        ax["img_emb"] = ("batch", None, None)
+    if cfg.family == "encdec":
+        ax["frames"] = ("batch", None, None)
+    return ax
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    kind = shape.kind
+    if kind == "train":
+        return train_specs(cfg, shape)
+    if kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)
+
+
+def make_batch(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    key: Optional[jax.Array] = None,
+    kind: Optional[str] = None,
+) -> PyTree:
+    """Concrete random batch with the input_specs structure."""
+    key = jax.random.key(0) if key is None else key
+    kind = kind or shape.kind
+    specs = {
+        "train": train_specs,
+        "prefill": prefill_specs,
+        "decode": decode_specs,
+    }[kind](cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if np.issubdtype(s.dtype, np.integer):
+            if name == "index":
+                out[name] = jnp.asarray(shape.seq_len // 2, s.dtype)
+            else:
+                hi = cfg.vocab_size if name in ("tokens", "token", "labels") else 2
+                out[name] = jax.random.randint(sub, s.shape, 0, hi, s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+    if "labels" in out and cfg.family == "vlm":
+        P = cfg.num_img_patches
+        out["labels"] = out["labels"].at[:, :P].set(-1)
+    return out

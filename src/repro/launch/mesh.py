@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first jax init, and
+smoke tests must see 1 device while the dry-run forces 512).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh over the first prod(shape) local devices."""
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def host_mesh_or_none(min_devices: int = 2):
+    """Small local mesh for CPU integration tests; None if single-device."""
+    n = len(jax.devices())
+    if n < min_devices:
+        return None
+    d = n - (n % 2)
+    return make_mesh((d // 2, 2), ("data", "model"))

@@ -1,0 +1,65 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --steps 50 --batch 8 --seq 128 [--reduced] [--energy] [--ckpt DIR]
+
+Uses the REDUCED config by default on this CPU container (--full-config
+selects the real architecture; on actual hardware pair it with the
+production mesh via repro.launch.mesh.make_production_mesh and the
+layout's sharding profile — the dry-run proves those configs compile).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_arch, get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core.policies import energy_ucb
+from repro.energy.model import StepEnergyModel
+from repro.energy.runtime import EnergyAwareRuntime
+from repro.models import build_model
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--energy", action="store_true",
+                    help="run the EnergyUCB controller in the loop")
+    ap.add_argument("--qos", type=float, default=None)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch) if args.full_config else get_reduced(args.arch)
+    bundle = build_model(cfg)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    runtime = None
+    if args.energy:
+        pol = energy_ucb(qos_delta=args.qos) if args.qos else energy_ucb()
+        runtime = EnergyAwareRuntime(
+            pol,
+            StepEnergyModel(t_compute_s=0.2, t_memory_s=0.3, t_collective_s=0.1,
+                            n_chips=8, steps_total=args.steps),
+        )
+    tr = Trainer(
+        bundle, shape,
+        tcfg=TrainerConfig(total_steps=args.steps, ckpt_every=max(10, args.steps // 4),
+                           ckpt_dir=args.ckpt, log_every=max(1, args.steps // 10)),
+        energy_runtime=runtime,
+    )
+    start = tr.init_or_restore()
+    print(f"arch={cfg.name} family={cfg.family} start_step={start}")
+    res = tr.run()
+    for m in res["metrics"]:
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}")
+    if runtime is not None:
+        print({k: round(v, 2) if isinstance(v, float) else v
+               for k, v in res["energy"].items()})
+
+
+if __name__ == "__main__":
+    main()

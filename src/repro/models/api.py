@@ -1,0 +1,101 @@
+"""Unified model API: ``build_model(cfg, layout, sharder)`` returns a
+ModelBundle of pure functions shared by the trainer, the serving engine,
+and the dry-run launcher.
+
+Batch formats
+  train   : {"tokens": (B,S) i32, "labels": (B,S) i32}
+            vlm adds {"img_emb": (B,P,D)}; encdec swaps in
+            {"frames": (B,Se,D)} and tokens/labels are decoder-side.
+  prefill : same minus labels -> (last_logits, cache)
+  decode  : {"token": (B,) i32, "index": () i32} -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayoutConfig
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import ssm as SM
+from repro.models import transformer as TF
+from repro.parallel.sharding import Sharder
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    layout: LayoutConfig
+    init: Callable[[jax.Array], PyTree]
+    loss: Callable[[PyTree, PyTree], jax.Array]
+    prefill: Callable[[PyTree, PyTree], Any]
+    decode: Callable[[PyTree, PyTree, PyTree], Any]
+    init_cache: Callable[[int, int], PyTree]
+    logical_axes: Callable[[], PyTree]
+    cache_logical_axes: Callable[[], PyTree]
+
+
+def build_model(
+    cfg: ArchConfig,
+    layout: Optional[LayoutConfig] = None,
+    sharder: Optional[Sharder] = None,
+) -> ModelBundle:
+    layout = layout or cfg.layout
+    sharder = sharder or Sharder(None, seq_parallel=layout.seq_parallel)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        init = functools.partial(TF.transformer_init, cfg, layout)
+        loss = functools.partial(TF.transformer_loss, cfg, layout, sharder)
+        prefill = functools.partial(TF.transformer_prefill, cfg, layout, sharder)
+        decode = functools.partial(TF.transformer_decode, cfg, layout, sharder)
+        init_cache = functools.partial(TF._cache_zero, cfg, layout)
+        log_ax = functools.partial(TF.transformer_logical_axes, cfg)
+        cache_ax = functools.partial(TF.cache_logical_axes, cfg, layout)
+    elif cfg.family == "ssm":
+        init = functools.partial(SM.ssm_init, cfg, layout)
+        loss = functools.partial(SM.ssm_loss, cfg, layout, sharder)
+        prefill = functools.partial(SM.ssm_prefill, cfg, layout, sharder)
+        decode = functools.partial(SM.ssm_decode, cfg, layout, sharder)
+        init_cache = lambda b, s: SM.ssm_state_zero(cfg, b)
+        log_ax = functools.partial(SM.ssm_logical_axes, cfg)
+        cache_ax = functools.partial(SM.ssm_cache_logical_axes, cfg, layout)
+    elif cfg.family == "hybrid":
+        init = functools.partial(HY.hybrid_init, cfg, layout)
+        loss = functools.partial(HY.hybrid_loss, cfg, layout, sharder)
+        prefill = functools.partial(HY.hybrid_prefill, cfg, layout, sharder)
+        decode = functools.partial(HY.hybrid_decode, cfg, layout, sharder)
+        init_cache = functools.partial(HY.hybrid_cache_zero, cfg)
+        log_ax = functools.partial(HY.hybrid_logical_axes, cfg)
+        cache_ax = functools.partial(HY.hybrid_cache_logical_axes, cfg, layout)
+    elif cfg.family == "encdec":
+        init = functools.partial(ED.encdec_init, cfg, layout)
+        loss = functools.partial(ED.encdec_loss, cfg, layout, sharder)
+        prefill = functools.partial(ED.encdec_prefill, cfg, layout, sharder)
+        decode = functools.partial(ED.encdec_decode, cfg, layout, sharder)
+        init_cache = functools.partial(ED.encdec_cache_zero, cfg)
+        log_ax = functools.partial(ED.encdec_logical_axes, cfg)
+        cache_ax = functools.partial(ED.encdec_cache_logical_axes, cfg, layout)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+
+    def logical_axes_pruned():
+        shapes = jax.eval_shape(init, jax.random.key(0))
+        return TF.prune_axes_to_params(log_ax(), shapes)
+
+    return ModelBundle(
+        cfg=cfg,
+        layout=layout,
+        init=init,
+        loss=loss,
+        prefill=prefill,
+        decode=decode,
+        init_cache=init_cache,
+        logical_axes=logical_axes_pruned,
+        cache_logical_axes=cache_ax,
+    )

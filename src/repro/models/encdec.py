@@ -1,0 +1,222 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2). The speech/vision
+frontend is a STUB per the brief: the encoder consumes precomputed frame
+embeddings (B, S_enc, D). Decoder = causal self-attn + cross-attn.
+
+Serving: ``prefill`` encodes the frames, precomputes per-layer cross
+K/V from the encoder memory, and prefixes the decoder self-attn cache;
+``decode`` consumes one target token per step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayoutConfig
+from repro.models import layers as L
+from repro.models.transformer import (
+    _ATTN_AXES,
+    _MLP_AXES,
+    _attn_shapes,
+    _init_from_shapes,
+    _mlp_shapes,
+    _project_qkv,
+    _unembed,
+    attn_block,
+    mlp_block,
+)
+from repro.parallel.sharding import Sharder
+
+PyTree = Any
+
+_CROSS_AXES = {
+    "xln": ("layers", None),
+    "xwq": ("layers", "embed_fsdp", "tp"),
+    "xwk": ("layers", "embed_fsdp", "tp"),
+    "xwv": ("layers", "embed_fsdp", "tp"),
+    "xwo": ("layers", "tp", "embed_fsdp"),
+}
+
+
+def _cross_shapes(cfg: ArchConfig, n: int, dtype):
+    D, H, KV, HD = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "xln": ((n, D), dtype),
+        "xwq": ((n, D, H * HD), dtype),
+        "xwk": ((n, D, KV * HD), dtype),
+        "xwv": ((n, D, KV * HD), dtype),
+        "xwo": ((n, H * HD, D), dtype),
+    }
+
+
+def encdec_init(cfg: ArchConfig, layout: LayoutConfig, key) -> PyTree:
+    dtype = jnp.dtype(layout.param_dtype)
+    D, V = cfg.d_model, cfg.padded_vocab
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc = _init_from_shapes(
+        k1, _attn_shapes(cfg, cfg.enc_layers, dtype)
+        | _mlp_shapes(cfg, cfg.enc_layers, cfg.d_ff, dtype)
+    )
+    dec = _init_from_shapes(
+        k2, _attn_shapes(cfg, cfg.dec_layers, dtype)
+        | _mlp_shapes(cfg, cfg.dec_layers, cfg.d_ff, dtype)
+        | _cross_shapes(cfg, cfg.dec_layers, dtype)
+    )
+    return {
+        "emb": L.embed_init(k3, V, D, dtype),
+        "unemb": L.embed_init(k4, V, D, dtype),
+        "enc_norm": jnp.ones((D,), dtype),
+        "final_norm": jnp.ones((D,), dtype),
+        "enc_layers": enc,
+        "dec_layers": dec,
+    }
+
+
+def encdec_logical_axes(cfg: ArchConfig) -> PyTree:
+    return {
+        "emb": ("vocab", "embed_fsdp"),
+        "unemb": ("vocab", "embed_fsdp"),
+        "enc_norm": (None,),
+        "final_norm": (None,),
+        "enc_layers": {**_ATTN_AXES, **_MLP_AXES},
+        "dec_layers": {**_ATTN_AXES, **_MLP_AXES, **_CROSS_AXES},
+    }
+
+
+def _cross_attn_block(cfg, layout, sharder, w, x, memory_kv, positions_q):
+    """x: (B,Sd,D); memory_kv: (k,v) each (B,Se,KV,HD)."""
+    h = L.rms_norm(x, w["xln"], cfg.norm_eps)
+    b, s = h.shape[:2]
+    q = jnp.einsum("bsd,dh->bsh", h, w["xwq"]).reshape(
+        b, s, cfg.num_heads, cfg.head_dim
+    )
+    q = sharder.act(q, "batch", None, "heads", None)
+    mk, mv = memory_kv
+    o = L.attention(
+        q, mk, mv, causal=False, impl=layout.attn_impl,
+        chunk_kv=min(layout.attn_chunk_kv, mk.shape[1]),
+    )
+    o = o.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    x = x + jnp.einsum("bsh,hd->bsd", o, w["xwo"])
+    return sharder.act(x, "batch", "seq", None)
+
+
+def _memory_kv(cfg, w, memory):
+    """Project encoder memory to per-layer cross K/V. memory: (B,Se,D)."""
+    b, s = memory.shape[:2]
+    mk = jnp.einsum("bsd,dh->bsh", memory, w["xwk"]).reshape(
+        b, s, cfg.num_kv_heads, cfg.head_dim
+    )
+    mv = jnp.einsum("bsd,dh->bsh", memory, w["xwv"]).reshape(
+        b, s, cfg.num_kv_heads, cfg.head_dim
+    )
+    return mk, mv
+
+
+def _encode(cfg, layout, sharder, params, frames):
+    """frames: (B, Se, D) stub embeddings -> encoder memory (B,Se,D)."""
+    x = sharder.act(frames.astype(jnp.dtype(layout.param_dtype)), "batch", "seq", None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+
+    def body(x, w):
+        h = L.rms_norm(x, w["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, w, h)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        q = sharder.act(q, "batch", None, "heads", None)
+        o = L.attention(
+            q, k, v, causal=False, impl=layout.attn_impl,
+            chunk_kv=layout.attn_chunk_kv, chunk_q=layout.attn_chunk_q,
+        )
+        o = o.reshape(x.shape[0], x.shape[1], cfg.num_heads * cfg.head_dim)
+        x = x + jnp.einsum("bsh,hd->bsd", o, w["wo"])
+        x = sharder.act(x, "batch", "seq", None)
+        x = mlp_block(cfg, layout, sharder, w, x)
+        return x, None
+
+    body = L.remat_wrap(body, layout.remat)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decoder_stack(cfg, layout, sharder, params, x, memory, *, mode,
+                   cache=None, cache_index=None, positions=None):
+    """memory: (B,Se,D) for train/prefill; cache carries (self_k, self_v,
+    cross_k, cross_v) stacks at decode."""
+
+    def body(carry, xs):
+        x, cache_index = carry
+        if mode == "decode":
+            w, (ck, cv, mk, mv) = xs
+            x, (nk, nv) = attn_block(cfg, layout, sharder, w, x, positions,
+                                     mode="decode", cache=(ck, cv),
+                                     cache_index=cache_index)
+            x = _cross_attn_block(cfg, layout, sharder, w, x, (mk, mv), positions)
+            x = mlp_block(cfg, layout, sharder, w, x)
+            return (x, cache_index), (nk, nv)
+        w = xs
+        x, kv = attn_block(cfg, layout, sharder, w, x, positions, mode=mode)
+        memory_kv = _memory_kv(cfg, w, memory)
+        x = _cross_attn_block(cfg, layout, sharder, w, x, memory_kv, positions)
+        x = mlp_block(cfg, layout, sharder, w, x)
+        out = (kv, memory_kv) if mode == "prefill" else None
+        return (x, cache_index), out
+
+    body = L.remat_wrap(body, layout.remat)
+    xs = (params["dec_layers"], cache) if mode == "decode" else params["dec_layers"]
+    (x, _), ys = jax.lax.scan(body, (x, cache_index), xs)
+    return x, ys
+
+
+def encdec_loss(cfg, layout, sharder, params, batch):
+    memory = _encode(cfg, layout, sharder, params, batch["frames"])
+    x = jnp.take(params["emb"], batch["tokens"], axis=0)
+    x = sharder.act(x, "batch", "seq", None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x, _ = _decoder_stack(cfg, layout, sharder, params, x, memory,
+                          mode="train", positions=positions)
+    logits = _unembed(cfg, layout, params, x, sharder)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def encdec_prefill(cfg, layout, sharder, params, batch):
+    memory = _encode(cfg, layout, sharder, params, batch["frames"])
+    x = jnp.take(params["emb"], batch["tokens"], axis=0)
+    x = sharder.act(x, "batch", "seq", None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x, ys = _decoder_stack(cfg, layout, sharder, params, x, memory,
+                           mode="prefill", positions=positions)
+    (k, v), (mk, mv) = ys
+    logits = _unembed(cfg, layout, params, x[:, -1:], sharder)
+    return logits[:, 0], (k, v, mk, mv)
+
+
+def encdec_decode(cfg, layout, sharder, params, cache, batch):
+    token, index = batch["token"], batch["index"]
+    x = jnp.take(params["emb"], token[:, None], axis=0)
+    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    (ck, cv, mk, mv) = cache
+    x, new_kv = _decoder_stack(
+        cfg, layout, sharder, params, x, None, mode="decode",
+        cache=(ck, cv, mk, mv), cache_index=index, positions=positions,
+    )
+    logits = _unembed(cfg, layout, params, x, sharder)
+    return logits[:, 0], (new_kv[0], new_kv[1], mk, mv)
+
+
+def encdec_cache_zero(cfg: ArchConfig, batch_size: int, cache_len: int):
+    KV, HD, Ld = cfg.num_kv_heads, cfg.head_dim, cfg.dec_layers
+    Se = cfg.decode_enc_len
+    z = lambda s: jnp.zeros((Ld, batch_size, s, KV, HD), jnp.bfloat16)
+    return (z(cache_len), z(cache_len), z(Se), z(Se))
+
+
+def encdec_cache_logical_axes(cfg, layout):
+    per = {
+        "hd": ("cache_batch", None, None, "head_dim"),
+        "heads": ("cache_batch", None, "heads", None),
+        "seq": ("cache_batch", "seq", None, None),
+    }[layout.kv_cache_shard]
+    one = ("layers",) + per
+    return (one, one, one, one)

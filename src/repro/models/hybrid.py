@@ -1,0 +1,173 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE weight-shared
+full-attention block applied every ``attn_every`` layers.
+[arXiv:2411.15242]
+
+Simplifications vs. the released checkpoint (recorded in DESIGN.md):
+the shared block is a standard pre-norm attention+MLP block on the
+current hidden state (Zamba2 additionally concatenates the embedding
+stream and applies per-application LoRA deltas). The weight-sharing,
+placement cadence, and per-application KV caches are faithful.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayoutConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import (
+    _ATTN_AXES,
+    _MLP_AXES,
+    _attn_shapes,
+    _embed,
+    _init_from_shapes,
+    _mlp_shapes,
+    _unembed,
+    attn_block,
+    mlp_block,
+)
+from repro.parallel.sharding import Sharder
+
+PyTree = Any
+
+
+def n_attn_applications(cfg: ArchConfig) -> int:
+    return (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def hybrid_init(cfg: ArchConfig, layout: LayoutConfig, key) -> PyTree:
+    dtype = jnp.dtype(layout.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    base = S.ssm_init(cfg, layout, k1)
+    shared_shapes = _attn_shapes(cfg, 1, dtype) | _mlp_shapes(cfg, 1, cfg.d_ff, dtype)
+    shared = _init_from_shapes(k2, shared_shapes)
+    base["shared_attn"] = {k: v[0] for k, v in shared.items()}  # unstacked
+    return base
+
+
+def hybrid_logical_axes(cfg: ArchConfig) -> PyTree:
+    ax = S.ssm_logical_axes(cfg)
+    shared = {**_ATTN_AXES, **_MLP_AXES}
+    ax["shared_attn"] = {k: tuple(v[1:]) for k, v in shared.items()}  # drop "layers"
+    return ax
+
+
+def hybrid_cache_zero(cfg: ArchConfig, batch_size: int, cache_len: int):
+    na = n_attn_applications(cfg)
+    kv = jnp.zeros((na, batch_size, cache_len, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16)
+    return {"ssm": S.ssm_state_zero(cfg, batch_size), "k": kv, "v": kv}
+
+
+def hybrid_cache_logical_axes(cfg, layout):
+    per = {
+        "hd": ("cache_batch", None, None, "head_dim"),
+        "heads": ("cache_batch", None, "heads", None),
+        "seq": ("cache_batch", "seq", None, None),
+    }[layout.kv_cache_shard]
+    return {
+        "ssm": S.ssm_cache_logical_axes(cfg, layout),
+        "k": ("layers",) + per,
+        "v": ("layers",) + per,
+    }
+
+
+def _hybrid_stack(cfg, layout, sharder, params, x, *, mode, cache=None,
+                  cache_index=None, positions=None):
+    na = n_attn_applications(cfg)
+    shared_w = params["shared_attn"]
+
+    def body(carry, xs):
+        x, kcache, vcache, i = carry
+        w, ssm_st = xs
+
+        def with_attn(args):
+            x, kc, vc = args
+            j = i // cfg.attn_every
+            if mode == "decode":
+                ck = jax.lax.dynamic_index_in_dim(kc, j, axis=0, keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(vc, j, axis=0, keepdims=False)
+                xo, (nk, nv) = attn_block(
+                    cfg, layout, sharder, shared_w, x, positions,
+                    mode="decode", cache=(ck, cv), cache_index=cache_index,
+                )
+                kc = jax.lax.dynamic_update_index_in_dim(kc, nk, j, axis=0)
+                vc = jax.lax.dynamic_update_index_in_dim(vc, nv, j, axis=0)
+            else:
+                xo, new = attn_block(
+                    cfg, layout, sharder, shared_w, x, positions, mode=mode
+                )
+                if mode == "prefill":
+                    kc = jax.lax.dynamic_update_index_in_dim(
+                        kc, new[0].astype(kc.dtype), j, axis=0
+                    )
+                    vc = jax.lax.dynamic_update_index_in_dim(
+                        vc, new[1].astype(vc.dtype), j, axis=0
+                    )
+            xo = mlp_block(cfg, layout, sharder, shared_w, xo)
+            return xo, kc, vc
+
+        x, kcache, vcache = jax.lax.cond(
+            i % cfg.attn_every == 0, with_attn, lambda a: a, (x, kcache, vcache)
+        )
+        st = None if mode != "decode" else ssm_st
+        x, new_ssm = S.mamba2_block(cfg, sharder, w, x, mode=mode, state=st)
+        return (x, kcache, vcache, i + 1), new_ssm
+
+    body = L.remat_wrap(body, layout.remat)
+    if cache is None:
+        if mode == "train":
+            # dummy loop-invariant carries (never read)
+            kcache = vcache = jnp.zeros((), jnp.bfloat16)
+        else:
+            seq = x.shape[1]
+            kcache = jnp.zeros(
+                (na, x.shape[0], seq, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16
+            )
+            vcache = kcache
+        ssm_xs = None
+    else:
+        kcache, vcache = cache["k"], cache["v"]
+        ssm_xs = (
+            (cache["ssm"][0].astype(jnp.bfloat16), cache["ssm"][1])
+            if mode == "decode" else None
+        )
+    (x, kcache, vcache, _), ssm_states = jax.lax.scan(
+        body, (x, kcache, vcache, jnp.int32(0)), (params["layers"], ssm_xs)
+    )
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"ssm": ssm_states, "k": kcache, "v": vcache}
+    return x, new_cache
+
+
+def hybrid_loss(cfg, layout, sharder, params, batch):
+    x = _embed(cfg, params, batch["tokens"], sharder)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x, _ = _hybrid_stack(cfg, layout, sharder, params, x, mode="train",
+                         positions=positions)
+    logits = _unembed(cfg, layout, params, x, sharder)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def hybrid_prefill(cfg, layout, sharder, params, batch):
+    x = _embed(cfg, params, batch["tokens"], sharder)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x, cache = _hybrid_stack(cfg, layout, sharder, params, x, mode="prefill",
+                             positions=positions)
+    logits = _unembed(cfg, layout, params, x[:, -1:], sharder)
+    return logits[:, 0], cache
+
+
+def hybrid_decode(cfg, layout, sharder, params, cache, batch):
+    token, index = batch["token"], batch["index"]
+    x = _embed(cfg, params, token[:, None], sharder)
+    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    x, new_cache = _hybrid_stack(
+        cfg, layout, sharder, params, x, mode="decode", cache=cache,
+        cache_index=index, positions=positions,
+    )
+    logits = _unembed(cfg, layout, params, x, sharder)
+    return logits[:, 0], new_cache

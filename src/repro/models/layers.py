@@ -1,0 +1,281 @@
+"""Shared layer primitives: norms, RoPE, attention (dense + chunked-flash
+XLA paths + Pallas dispatch), MLPs, embeddings.
+
+Attention shapes: q (B, Sq, H, HD); k, v (B, Skv, KV, HD); GQA via
+H = KV * G. The chunked path is an online-softmax scan over KV blocks —
+the XLA-everywhere equivalent of flash attention (no S^2 buffer) used by
+the dry-run; on real TPU the Pallas kernel (repro.kernels) takes over.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with a hand-written VJP that keeps x in ITS OWN dtype on
+    both passes: stock AD consumes an f32 upcast of x in the backward,
+    and XLA's float-normalization then stores the scan-AD checkpoint
+    stack in f32 — a +31.5 GB image of the whole residual stream on the
+    405B train cell (measured; EXPERIMENTS.md §Perf). All reductions
+    still accumulate in f32; only elementwise math stays in x.dtype."""
+    return _rms_fwd(x, scale, eps)[0]
+
+
+def _rms_inv(x, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return jax.lax.rsqrt(var + eps)
+
+
+def _rms_fwd(x, scale, eps):
+    inv = _rms_inv(x, eps)
+    out = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    return out, (x, scale)
+
+
+def _rms_bwd(eps, res, g):
+    x, scale = res
+    inv = _rms_inv(x, eps).astype(x.dtype)  # cheap recompute, (…,1)
+    xhat = x * inv
+    red_axes = tuple(range(x.ndim - len(scale.shape)))
+    dscale = jnp.sum(
+        (g * xhat).astype(jnp.float32), axis=red_axes
+    ).astype(scale.dtype).reshape(scale.shape)
+    gs = g * scale.astype(g.dtype)
+    m = jnp.mean(
+        (gs * xhat).astype(jnp.float32), axis=-1, keepdims=True
+    ).astype(x.dtype)
+    dx = inv * (gs - xhat * m)
+    return dx.astype(x.dtype), dscale
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    scale: float,
+    q_offset=0,
+    kv_valid_len: Optional[jax.Array] = None,
+    logits_dtype=jnp.float32,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    _, skv, kv, _ = k.shape
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k, preferred_element_type=logits_dtype
+    ).astype(jnp.float32) * scale
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        qi = jnp.arange(sq) + q_offset
+        mask = qi[:, None] >= jnp.arange(skv)[None, :]
+    if kv_valid_len is not None:
+        valid = jnp.arange(skv)[None, :] < kv_valid_len[:, None]  # (B, Skv)
+        logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    scale: float,
+    chunk_kv: int,
+    q_offset=0,
+) -> jax.Array:
+    """Online-softmax scan over KV blocks; O(S * chunk) memory."""
+    b, sq, h, hd = q.shape
+    _, skv, kv, _ = k.shape
+    g = h // kv
+    cb = min(chunk_kv, skv)
+    nb = skv // cb
+    assert skv % cb == 0, f"kv len {skv} not divisible by chunk {cb}"
+    qg = q.reshape(b, sq, kv, g, hd)
+    q_idx = jnp.arange(sq) + q_offset
+
+    def block(carry, i):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, i * cb, cb, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * cb, cb, axis=1)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, ks).astype(jnp.float32) * scale
+        if causal:
+            kv_idx = i * cb + jnp.arange(cb)
+            mask = q_idx[:, None] >= kv_idx[None, :]
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None].astype(acc.dtype) + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(v.dtype), vs
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, hd), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(block, (m0, l0, a0), jnp.arange(nb))
+    l = jnp.maximum(l, 1e-20)
+    out = acc / l[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    impl: str = "chunked",
+    chunk_kv: int = 512,
+    chunk_q: int = 0,
+    q_offset=0,
+    kv_valid_len: Optional[jax.Array] = None,
+    logits_dtype=jnp.float32,
+) -> jax.Array:
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        if kops.pallas_available() and causal and kv_valid_len is None:
+            return kops.flash_attention(q, k, v, causal=True)
+        impl = "chunked"
+    if impl == "dense" or q.shape[1] == 1 or kv_valid_len is not None:
+        return _dense_attention(
+            q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+            kv_valid_len=kv_valid_len, logits_dtype=logits_dtype,
+        )
+    if chunk_q and q.shape[1] > chunk_q:
+        b, sq, h, hd = q.shape
+        nq = sq // chunk_q
+        assert sq % chunk_q == 0
+
+        def one(i):
+            qs = jax.lax.dynamic_slice_in_dim(q, i * chunk_q, chunk_q, axis=1)
+            return _chunked_attention(
+                qs, k, v, causal=causal, scale=scale, chunk_kv=chunk_kv,
+                q_offset=q_offset + i * chunk_q,
+            )
+
+        out = jax.lax.map(one, jnp.arange(nq))  # (nq, B, cq, H, HD)
+        return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+    return _chunked_attention(
+        q, k, v, causal=causal, scale=scale, chunk_kv=chunk_kv, q_offset=q_offset
+    )
+
+
+# ---------------------------------------------------------------------------
+# mlp
+# ---------------------------------------------------------------------------
+
+
+def mlp_gated(x, w1, w3, w2):
+    h = jax.nn.silu(jnp.einsum("...d,df->...f", x, w1)) * jnp.einsum(
+        "...d,df->...f", x, w3
+    )
+    return jnp.einsum("...f,fd->...d", h, w2)
+
+
+def mlp_classic(x, w1, w2):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w1))
+    return jnp.einsum("...f,fd->...d", h, w2)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(
+    logits: jax.Array, labels: jax.Array, z_loss: float = 0.0
+) -> jax.Array:
+    """Cross-entropy with label mask (labels < 0 ignored); one-hot dot so a
+    vocab-sharded logits tensor never round-trips through a gather."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1], dtype=jnp.float32)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    w = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def trunc_normal(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    """Embedding/unembedding table init, std 1/sqrt(D): O(1) logits when
+    tied (and when untied, since the contraction is over D either way)."""
+    std = 1.0 / (d_model ** 0.5)
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d_model), jnp.float32)
+        * std
+    ).astype(dtype)
+
+
+def remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.remat(fn)
+    if policy == "dots":
+        return jax.remat(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    raise ValueError(f"unknown remat policy {policy}")

@@ -1,0 +1,126 @@
+"""Mixture-of-experts MLP sublayer (GShard-style capacity dispatch).
+
+Top-k routing is decomposed into k sequential top-1 dispatch slots, each
+with per-slot capacity C = ceil(S * cf / E). This keeps the transient
+dispatch tensor at (B, S, E, C_slot) instead of (B, S, E, k*C_slot),
+which matters for high-k configs (granite: k=8, E=32). A per-expert
+running count carries across slots so total capacity is enforced.
+
+Sharding: experts -> "model" (expert parallelism); the (B, E, C, D)
+dispatched activations are constrained to ("batch", "experts", ...), so
+GSPMD materializes the token shuffle as an all-to-all on the model axis.
+Aux losses: GShard load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+PyTree = Any
+
+
+def moe_params_init(cfg, n: int, dtype, key) -> Dict[str, jax.Array]:
+    D, E, F = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln2": jnp.ones((n, D), dtype),
+        "router": L.trunc_normal(ks[0], (n, D, E), jnp.float32),
+        "we1": L.trunc_normal(ks[1], (n, E, D, F), dtype),
+        "we2": L.trunc_normal(ks[2], (n, E, F, D), dtype),
+    }
+    if cfg.mlp_gated:
+        p["we3"] = L.trunc_normal(ks[3], (n, E, D, F), dtype)
+    if cfg.moe_shared_expert:
+        p["ws1"] = L.trunc_normal(ks[4], (n, D, F), dtype)
+        p["ws2"] = L.trunc_normal(ks[5], (n, F, D), dtype)
+        if cfg.mlp_gated:
+            p["ws3"] = L.trunc_normal(ks[6], (n, D, F), dtype)
+    return p
+
+
+def moe_logical_axes(cfg) -> Dict[str, Tuple]:
+    return {
+        "ln2": ("layers", None),
+        "router": ("layers", "embed_fsdp", None),
+        "we1": ("layers", "experts", "embed_fsdp", None),
+        "we2": ("layers", "experts", None, "embed_fsdp"),
+        "we3": ("layers", "experts", "embed_fsdp", None),
+        "ws1": ("layers", "embed_fsdp", "tp"),
+        "ws2": ("layers", "tp", "embed_fsdp"),
+        "ws3": ("layers", "embed_fsdp", "tp"),
+    }
+
+
+def slot_capacity(cfg, seq_len: int, layout=None) -> int:
+    cf = cfg.moe_capacity_factor
+    if layout is not None and getattr(layout, "moe_capacity_override", 0.0):
+        cf = layout.moe_capacity_override
+    c = math.ceil(seq_len * cf / cfg.moe_num_experts)
+    return max(4, min(seq_len, int(c)))
+
+
+def moe_mlp_block(cfg, layout, sharder, w, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (B, S, D), aux loss scalar."""
+    B, S, D = x.shape
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    C = slot_capacity(cfg, S, layout)
+    h = L.rms_norm(x, w["ln2"], cfg.norm_eps)
+
+    router_logits = jnp.einsum(
+        "bsd,de->bse", h.astype(jnp.float32), w["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (B,S,E) fp32
+
+    # aux losses (GShard load-balance + z-loss)
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), E, dtype=jnp.float32)
+    ce = jnp.mean(top1, axis=(0, 1))
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(router_logits, axis=-1)))
+    aux = 0.01 * lb_loss + 1e-3 * z_loss
+
+    def slot(carry, _):
+        out, masked_probs, counts = carry
+        gate = jnp.max(masked_probs, axis=-1)  # (B,S)
+        idx = jnp.argmax(masked_probs, axis=-1)  # (B,S)
+        oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (B,S,E)
+        # position of each token within its expert buffer this slot
+        pos_in_e = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]  # (B,S,E)
+        pos = jnp.sum(pos_in_e * oh, axis=-1)  # (B,S)
+        keep = (pos < C).astype(jnp.float32)
+        disp = (oh * keep[..., None])[..., None] * jax.nn.one_hot(
+            jnp.minimum(pos, C - 1).astype(jnp.int32), C, dtype=jnp.float32
+        )[:, :, None, :]  # (B,S,E,C)
+        disp = disp.astype(h.dtype)
+        xe = jnp.einsum("bsec,bsd->becd", disp, h)
+        xe = sharder.act(xe, "batch", "experts", None, None)
+        if cfg.mlp_gated:
+            ye = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, w["we1"])) * jnp.einsum(
+                "becd,edf->becf", xe, w["we3"]
+            )
+        else:
+            ye = jax.nn.gelu(jnp.einsum("becd,edf->becf", xe, w["we1"]))
+        ye = jnp.einsum("becf,efd->becd", ye, w["we2"])
+        ye = sharder.act(ye, "batch", "experts", None, None)
+        combine = disp * gate[:, :, None, None].astype(disp.dtype)
+        out = out + jnp.einsum("bsec,becd->bsd", combine, ye)
+        # mask out chosen expert for next slot; update counts
+        masked_probs = masked_probs * (1.0 - oh)
+        counts = counts + jnp.sum(oh * keep[..., None], axis=1)
+        return (out, masked_probs, counts), None
+
+    out0 = jnp.zeros_like(x)
+    counts0 = jnp.zeros((B, E), jnp.float32)
+    (out, _, _), _ = jax.lax.scan(slot, (out0, probs, counts0), None, length=K)
+
+    if cfg.moe_shared_expert:
+        if cfg.mlp_gated:
+            out = out + L.mlp_gated(h, w["ws1"], w["ws3"], w["ws2"])
+        else:
+            out = out + L.mlp_classic(h, w["ws1"], w["ws2"])
+    return sharder.act(x + out, "batch", "seq", None), aux

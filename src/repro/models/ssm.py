@@ -1,0 +1,346 @@
+"""Mamba2 (SSD — state-space duality) blocks and LM. [arXiv:2405.21060]
+
+The chunked SSD algorithm: within-chunk quadratic term (a Q x Q masked
+decay kernel per head) + inter-chunk state recurrence carried by a
+lax.scan over chunks. The same core serves training, prefill (returns
+final states), and single-token decode (constant-size state), which is
+what makes mamba2/zamba2 the two long_500k-capable archs.
+
+Sharding: SSD heads -> "model" (TP); B/C projections are per-group
+(g=1) and replicated across head shards.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayoutConfig
+from repro.models import layers as L
+from repro.parallel.sharding import Sharder
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def ssm_block_shapes(cfg: ArchConfig, n: int, dtype):
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = DI + 2 * N
+    return {
+        "ln": ((n, D), dtype),
+        "in_proj": ((n, D, 2 * DI + 2 * N + H), dtype),
+        "conv_w": ((n, cfg.ssm_conv, conv_ch), dtype),
+        "conv_b": ((n, conv_ch), dtype),
+        "A_log": ((n, H), jnp.float32),
+        "D_skip": ((n, H), jnp.float32),
+        "dt_bias": ((n, H), jnp.float32),
+        "gnorm": ((n, DI), dtype),
+        "out_proj": ((n, DI, D), dtype),
+    }
+
+
+SSM_AXES = {
+    "ln": ("layers", None),
+    "in_proj": ("layers", "embed_fsdp", "tp"),
+    "conv_w": ("layers", None, "tp"),
+    "conv_b": ("layers", "tp"),
+    "A_log": ("layers", "ssm_heads"),
+    "D_skip": ("layers", "ssm_heads"),
+    "dt_bias": ("layers", "ssm_heads"),
+    "gnorm": ("layers", "tp"),
+    "out_proj": ("layers", "tp", "embed_fsdp"),
+}
+
+
+def ssm_init(cfg: ArchConfig, layout: LayoutConfig, key) -> PyTree:
+    dtype = jnp.dtype(layout.param_dtype)
+    D, V = cfg.d_model, cfg.padded_vocab
+    shapes = ssm_block_shapes(cfg, cfg.num_layers, dtype)
+    ks = jax.random.split(key, len(shapes) + 3)
+    layers = {}
+    for k_, (name, (shape, dt)) in zip(ks, sorted(shapes.items())):
+        if name in ("ln", "gnorm"):
+            layers[name] = jnp.ones(shape, dt)
+        elif name == "A_log":
+            layers[name] = jnp.log(
+                jax.random.uniform(k_, shape, jnp.float32, 1.0, 16.0)
+            )
+        elif name == "dt_bias":
+            # softplus^-1 of dt in [1e-3, 1e-1]
+            dt0 = jnp.exp(
+                jax.random.uniform(k_, shape, jnp.float32)
+                * (jnp.log(1e-1) - jnp.log(1e-3))
+                + jnp.log(1e-3)
+            )
+            layers[name] = dt0 + jnp.log(-jnp.expm1(-dt0))
+        elif name == "D_skip":
+            layers[name] = jnp.ones(shape, jnp.float32)
+        elif name == "conv_b":
+            layers[name] = jnp.zeros(shape, dt)
+        else:
+            layers[name] = L.trunc_normal(k_, shape, dt)
+    return {
+        "emb": L.embed_init(ks[-1], V, D, dtype),
+        "unemb": L.embed_init(ks[-2], V, D, dtype),
+        "final_norm": jnp.ones((D,), dtype),
+        "layers": layers,
+    }
+
+
+def ssm_logical_axes(cfg: ArchConfig) -> PyTree:
+    return {
+        "emb": ("vocab", "embed_fsdp"),
+        "unemb": ("vocab", "embed_fsdp"),
+        "final_norm": (None,),
+        "layers": dict(SSM_AXES),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., Q) -> (..., Q, Q); out[i,j] = sum_{j<k<=i} x_k, -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    xh: jax.Array,  # (B, S, H, P) post-conv inputs
+    dt: jax.Array,  # (B, S, H) fp32, post-softplus
+    A: jax.Array,  # (H,) fp32, negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N) fp32
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} % chunk {Q} != 0"
+    NC = S // Q
+    dtype = xh.dtype
+
+    xd = (xh.astype(jnp.float32) * dt[..., None]).astype(dtype)  # (B,S,H,P)
+    dA = dt * A  # (B,S,H) fp32, negative
+
+    rc = lambda t: t.reshape(Bsz, NC, Q, *t.shape[2:])
+    xc, dAc, Bc, Cc = rc(xd), rc(dA), rc(Bm), rc(Cm)
+
+    dA_h = dAc.transpose(0, 1, 3, 2)  # (B,NC,H,Q)
+    cs = jnp.cumsum(dA_h, axis=-1)  # (B,NC,H,Q)
+    Ldec = jnp.exp(_segsum(dA_h)).astype(dtype)  # (B,NC,H,Q,Q)
+
+    # intra-chunk (diagonal blocks)
+    G = jnp.einsum("bcin,bcjn->bcij", Cc.astype(dtype), Bc.astype(dtype))
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", G, Ldec, xc)
+
+    # chunk -> end-of-chunk states
+    decay_states = jnp.exp(cs[:, :, :, -1:] - cs)  # (B,NC,H,Q)
+    states = jnp.einsum(
+        "bcjn,bchj,bcjhp->bchpn",
+        Bc.astype(jnp.float32),
+        decay_states,
+        xc.astype(jnp.float32),
+    )  # fp32 (B,NC,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[:, :, :, -1])  # (B,NC,H)
+    s0 = (
+        jnp.zeros((Bsz, H, P, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        st_c, dec = inp  # (B,H,P,N), (B,H)
+        s_new = s * dec[..., None, None] + st_c
+        return s_new, s  # emit state *entering* the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N)
+
+    state_decay_out = jnp.exp(cs).transpose(0, 1, 3, 2)  # (B,NC,Q,H)
+    y_off = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp",
+        Cc.astype(jnp.float32),
+        prev_states,
+        state_decay_out.astype(jnp.float32),
+    ).astype(dtype)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, final_state
+
+
+def ssd_decode_step(
+    x_t: jax.Array,  # (B, H, P) post-conv single token
+    dt_t: jax.Array,  # (B, H) fp32
+    A: jax.Array,  # (H,)
+    B_t: jax.Array,  # (B, N)
+    C_t: jax.Array,  # (B, N)
+    state: jax.Array,  # (B, H, P, N) fp32
+) -> Tuple[jax.Array, jax.Array]:
+    dA = jnp.exp(dt_t * A)  # (B,H)
+    xd = x_t.astype(jnp.float32) * dt_t[..., None]  # (B,H,P)
+    new_state = state * dA[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xd, B_t.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block (conv + ssd + gated norm)
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,CH); w: (K,CH)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        shift = K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i]
+    return jax.nn.silu(out + b)
+
+
+def mamba2_block(
+    cfg: ArchConfig,
+    sharder: Sharder,
+    w: Dict[str, jax.Array],
+    x: jax.Array,  # (B,S,D)
+    *,
+    mode: str = "train",
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,  # (conv_state, ssm_state)
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    B_, S, D = x.shape
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = L.rms_norm(x, w["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dk->bsk", h, w["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [DI, 2 * DI + 2 * N], axis=-1)
+    new_state = None
+    if mode == "decode":
+        conv_state, ssm_state = state
+        # roll conv buffer, append xbc_t
+        conv_state = jnp.concatenate(
+            [conv_state[:, 1:], xbc.astype(conv_state.dtype)], axis=1
+        )  # (B,K,CH)
+        xbc_t = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", conv_state, w["conv_w"]) + w["conv_b"]
+        )
+        xs, Bm, Cm = jnp.split(xbc_t, [DI, DI + N], axis=-1)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + w["dt_bias"])
+        A = -jnp.exp(w["A_log"])
+        xr = xs.reshape(B_, H, P)
+        y, ssm_state = ssd_decode_step(xr, dt, A, Bm, Cm, ssm_state)
+        y = y + xr * w["D_skip"].astype(xr.dtype)[None, :, None]
+        y = y.reshape(B_, 1, DI)
+        new_state = (conv_state, ssm_state)
+    else:
+        xbc = _causal_conv(xbc, w["conv_w"], w["conv_b"])
+        xs, Bm, Cm = jnp.split(xbc, [DI, DI + N], axis=-1)
+        xs = sharder.act(xs, "batch", None, "tp")
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + w["dt_bias"])
+        A = -jnp.exp(w["A_log"])
+        xh = xs.reshape(B_, S, H, P)
+        y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+        y = y + xh * w["D_skip"].astype(xh.dtype)[None, None, :, None]
+        y = y.reshape(B_, S, DI)
+        if mode == "prefill":
+            # conv buffer = last K raw (pre-activation) xbc inputs
+            K = cfg.ssm_conv
+            raw_xbc = proj[..., DI : 2 * DI + 2 * N]
+            if S < K:  # short prompt: left-pad with zeros
+                raw_xbc = jnp.pad(raw_xbc, ((0, 0), (K - S, 0), (0, 0)))
+            conv_state = raw_xbc[:, -K:].astype(jnp.bfloat16)
+            new_state = (conv_state, final)
+    y = L.rms_norm(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+        w["gnorm"],
+        cfg.norm_eps,
+    )
+    out = x + jnp.einsum("bsk,kd->bsd", y, w["out_proj"])
+    return sharder.act(out, "batch", "seq", None), new_state
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 LM
+# ---------------------------------------------------------------------------
+
+
+def ssm_state_zero(cfg: ArchConfig, batch_size: int, dtype=jnp.float32):
+    Lz = cfg.num_layers
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return (
+        jnp.zeros((Lz, batch_size, cfg.ssm_conv, conv_ch), jnp.bfloat16),
+        jnp.zeros(
+            (Lz, batch_size, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+    )
+
+
+def ssm_cache_logical_axes(cfg, layout):
+    return (
+        ("layers", "cache_batch", None, "tp"),
+        ("layers", "cache_batch", "ssm_heads", None, None),
+    )
+
+
+def _ssm_stack(cfg, layout, sharder, params, x, *, mode, state=None):
+    def body(carry, xs):
+        x = carry
+        w, st = xs
+        x, new_st = mamba2_block(cfg, sharder, w, x, mode=mode, state=st)
+        return x, new_st
+
+    body = L.remat_wrap(body, layout.remat)
+    if mode == "decode":
+        st = (state[0].astype(jnp.bfloat16), state[1])
+        x, new_state = jax.lax.scan(body, x, (params["layers"], st))
+    else:
+        x, new_state = jax.lax.scan(body, x, (params["layers"], None))
+    return x, new_state
+
+
+def ssm_loss(cfg, layout, sharder, params, batch):
+    from repro.models.transformer import _embed, _unembed
+
+    x = _embed(cfg, params, batch["tokens"], sharder)
+    x, _ = _ssm_stack(cfg, layout, sharder, params, x, mode="train")
+    logits = _unembed(cfg, layout, params, x, sharder)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def ssm_prefill(cfg, layout, sharder, params, batch):
+    from repro.models.transformer import _embed, _unembed
+
+    x = _embed(cfg, params, batch["tokens"], sharder)
+    x, cache = _ssm_stack(cfg, layout, sharder, params, x, mode="prefill")
+    logits = _unembed(cfg, layout, params, x[:, -1:], sharder)
+    return logits[:, 0], cache
+
+
+def ssm_decode(cfg, layout, sharder, params, cache, batch):
+    from repro.models.transformer import _embed, _unembed
+
+    x = _embed(cfg, params, batch["token"][:, None], sharder)
+    x, new_cache = _ssm_stack(cfg, layout, sharder, params, x, mode="decode", state=cache)
+    logits = _unembed(cfg, layout, params, x, sharder)
+    return logits[:, 0], new_cache

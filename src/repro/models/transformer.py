@@ -1,0 +1,430 @@
+"""Decoder-only transformer stack: dense, interleaved-MoE, and VLM
+(prefix patch embeddings) variants. Covers 7 of the 10 assigned archs.
+
+Layout: per-layer weights are stacked on a leading "layers" dim and the
+stack is traversed with jax.lax.scan (compact HLO, O(1) compile in depth),
+with configurable remat. MoE stacks scan over "super-layers" of
+``moe_interleave`` sublayers (the last one MoE) so interleaved patterns
+(llama4) need no control flow.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayoutConfig
+from repro.models import layers as L
+from repro.models.moe import moe_logical_axes, moe_mlp_block, moe_params_init
+from repro.parallel.sharding import Sharder
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def _attn_shapes(cfg: ArchConfig, n: int, dtype) -> Dict[str, Any]:
+    D, H, KV, HD = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    sh = {
+        "ln1": ((n, D), dtype),
+        "wq": ((n, D, H * HD), dtype),
+        "wk": ((n, D, KV * HD), dtype),
+        "wv": ((n, D, KV * HD), dtype),
+        "wo": ((n, H * HD, D), dtype),
+    }
+    if cfg.qkv_bias:
+        sh |= {"bq": ((n, H * HD), dtype), "bk": ((n, KV * HD), dtype),
+               "bv": ((n, KV * HD), dtype)}
+    if cfg.qk_norm:
+        sh |= {"qnorm": ((n, HD), dtype), "knorm": ((n, HD), dtype)}
+    return sh
+
+
+def _mlp_shapes(cfg: ArchConfig, n: int, d_ff: int, dtype) -> Dict[str, Any]:
+    D = cfg.d_model
+    sh = {"ln2": ((n, D), dtype), "w1": ((n, D, d_ff), dtype),
+          "w2": ((n, d_ff, D), dtype)}
+    if cfg.mlp_gated:
+        sh["w3"] = ((n, D, d_ff), dtype)
+    return sh
+
+
+_ATTN_AXES = {
+    "ln1": ("layers", None),
+    "wq": ("layers", "embed_fsdp", "tp"),
+    "wk": ("layers", "embed_fsdp", "tp"),
+    "wv": ("layers", "embed_fsdp", "tp"),
+    "wo": ("layers", "tp", "embed_fsdp"),
+    "bq": ("layers", "tp"),
+    "bk": ("layers", "tp"),
+    "bv": ("layers", "tp"),
+    "qnorm": ("layers", None),
+    "knorm": ("layers", None),
+}
+_MLP_AXES = {
+    "ln2": ("layers", None),
+    "w1": ("layers", "embed_fsdp", "tp"),
+    "w2": ("layers", "tp", "embed_fsdp"),
+    "w3": ("layers", "embed_fsdp", "tp"),
+}
+
+
+def _init_from_shapes(key, shapes: Dict[str, Any]) -> Dict[str, jax.Array]:
+    out = {}
+    keys = jax.random.split(key, len(shapes))
+    for k_, (name, (shape, dtype)) in zip(keys, sorted(shapes.items())):
+        if name.startswith(("ln", "qnorm", "knorm")) or "norm" in name:
+            out[name] = jnp.ones(shape, dtype)
+        elif name.startswith("b"):
+            out[name] = jnp.zeros(shape, dtype)
+        else:
+            out[name] = L.trunc_normal(k_, shape, dtype)
+    return out
+
+
+def transformer_init(cfg: ArchConfig, layout: LayoutConfig, key) -> PyTree:
+    dtype = jnp.dtype(layout.param_dtype)
+    D, V = cfg.d_model, cfg.padded_vocab
+    k_emb, k_unemb, k_layers, k_moe = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "emb": L.embed_init(k_emb, V, D, dtype),
+        "final_norm": jnp.ones((D,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unemb"] = L.embed_init(k_unemb, V, D, dtype)
+    if cfg.moe_num_experts:
+        n_super = cfg.num_layers // cfg.moe_interleave
+        nd = cfg.moe_interleave - 1
+        if nd:
+            sh = _attn_shapes(cfg, n_super * nd, dtype) | _mlp_shapes(
+                cfg, n_super * nd, cfg.dense_d_ff or cfg.d_ff, dtype
+            )
+            params["dense_layers"] = _init_from_shapes(k_layers, sh)
+        sh = _attn_shapes(cfg, n_super, dtype)
+        moe = _init_from_shapes(jax.random.fold_in(k_layers, 1), sh)
+        moe |= moe_params_init(cfg, n_super, dtype, k_moe)
+        params["moe_layers"] = moe
+    else:
+        sh = _attn_shapes(cfg, cfg.num_layers, dtype) | _mlp_shapes(
+            cfg, cfg.num_layers, cfg.d_ff, dtype
+        )
+        params["layers"] = _init_from_shapes(k_layers, sh)
+    return params
+
+
+def transformer_logical_axes(cfg: ArchConfig) -> PyTree:
+    ax: Dict[str, Any] = {
+        "emb": ("vocab", "embed_fsdp"),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        ax["unemb"] = ("vocab", "embed_fsdp")
+    block = dict(_ATTN_AXES)
+    if cfg.moe_num_experts:
+        if cfg.moe_interleave > 1:
+            ax["dense_layers"] = {**block, **_MLP_AXES}
+        ax["moe_layers"] = {**block, **moe_logical_axes(cfg)}
+    else:
+        ax["layers"] = {**block, **_MLP_AXES}
+    return ax
+
+
+def prune_axes_to_params(axes: PyTree, params: PyTree) -> PyTree:
+    """Drop logical-axis entries with no matching param leaf (bias/qk_norm
+    options make the param set config-dependent)."""
+    if isinstance(params, dict):
+        return {k: prune_axes_to_params(axes[k], v) for k, v in params.items()}
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg, w, x):
+    q = jnp.einsum("bsd,dh->bsh", x, w["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, w["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, w["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
+    b, s = x.shape[:2]
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, w["qnorm"], cfg.norm_eps)
+        k = L.rms_norm(k, w["knorm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_block(
+    cfg: ArchConfig,
+    layout: LayoutConfig,
+    sharder: Sharder,
+    w: Dict[str, jax.Array],
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    mode: str = "train",  # train | prefill | decode
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    h = L.rms_norm(x, w["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(cfg, w, h)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = sharder.act(q, "batch", None, "heads", None)
+    new_cache = None
+    if mode == "decode":
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
+        new_cache = (ck, cv)
+        if layout.kv_cache_shard == "hd":
+            # match q's sharding to the head_dim-sharded cache: the QK
+            # contraction becomes partial sums + an O(B x S_cache) logits
+            # all-reduce instead of all-gathering the whole cache.
+            q = sharder.act(q, "batch", None, None, "head_dim")
+        valid = jnp.full((x.shape[0],), cache_index + 1, jnp.int32)
+        ldt = jnp.bfloat16 if layout.decode_logits_bf16 else jnp.float32
+        o = L.attention(q, ck, cv, causal=False, impl="dense",
+                        kv_valid_len=valid, logits_dtype=ldt)
+    else:
+        if mode == "prefill":
+            new_cache = (k, v)  # cache stores KV heads (pre-repeat)
+        # Repeat KV to the full head count for the compute: under TP each
+        # shard then holds exactly its q-heads' KV (same per-device bytes
+        # as replicated GQA heads) and every attention tensor stays 4D
+        # with a clean heads->model sharding — this is what lets
+        # sequence-parallel residuals coexist with TP attention without
+        # SPMD "involuntary full rematerialization" conflicts.
+        g = cfg.num_heads // max(cfg.num_kv_heads, 1)
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+            k = sharder.act(k, "batch", None, "heads", None)
+            v = sharder.act(v, "batch", None, "heads", None)
+        o = L.attention(
+            q, k, v, causal=True, impl=layout.attn_impl,
+            chunk_kv=layout.attn_chunk_kv, chunk_q=layout.attn_chunk_q,
+        )
+    o = o.reshape(x.shape[0], x.shape[1], cfg.num_heads * cfg.head_dim)
+    x = x + jnp.einsum("bsh,hd->bsd", o, w["wo"])
+    return sharder.act(x, "batch", "seq", None), new_cache
+
+
+def mlp_block(cfg, layout, sharder, w, x, d_ff_override=None):
+    h = L.rms_norm(x, w["ln2"], cfg.norm_eps)
+    if cfg.mlp_gated:
+        y = L.mlp_gated(h, w["w1"], w["w3"], w["w2"])
+    else:
+        y = L.mlp_classic(h, w["w1"], w["w2"])
+    return sharder.act(x + y, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _split_layer(tree: Dict[str, jax.Array], idx=None):
+    return tree if idx is None else {k: v[idx] for k, v in tree.items()}
+
+
+def _embed(cfg, params, tokens, sharder):
+    x = jnp.take(params["emb"], tokens, axis=0)
+    return sharder.act(x.astype(jnp.bfloat16) if params["emb"].dtype == jnp.bfloat16 else x,
+                       "batch", "seq", None)
+
+
+def _unembed(cfg, layout, params, x, sharder):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["emb"] if cfg.tie_embeddings else params["unemb"]
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    if layout.logits_fp32:
+        logits = logits.astype(jnp.float32)
+    return sharder.act(logits, "batch", None, "vocab")
+
+
+def _stack_body(cfg, layout, sharder, mode):
+    """Returns the scan body over (super-)layers."""
+    nd = cfg.moe_interleave - 1 if cfg.moe_num_experts else 0
+
+    def body(carry, xs):
+        # pin the layer inputs inside the loop: without the barrier XLA
+        # sinks loop-invariant elementwise ops out of the (scan-AD) while
+        # loop, e.g. convert(slice(stack)) -> slice(convert(stack)),
+        # materializing an f32 copy of the WHOLE residual-checkpoint
+        # stack (+31.5 GB measured on the 405B cell, EXPERIMENTS.md §Perf).
+        carry, xs = jax.lax.optimization_barrier((carry, xs))
+        x, positions, cache_index = carry
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.moe_num_experts:
+            dense_w, moe_w, layer_cache = xs
+            new_caches = []
+            for j in range(nd):
+                wj = {k: v[j] for k, v in dense_w.items()}
+                cj = None if layer_cache is None else jax.tree.map(lambda c: c[j], layer_cache[0])
+                x, nc = attn_block(cfg, layout, sharder, wj, x, positions,
+                                   mode=mode, cache=cj, cache_index=cache_index)
+                x = mlp_block(cfg, layout, sharder, wj, x)
+                new_caches.append(nc)
+            cm = None if layer_cache is None else layer_cache[1]
+            x, nc_moe = attn_block(cfg, layout, sharder, moe_w, x, positions,
+                                   mode=mode, cache=cm, cache_index=cache_index)
+            x, moe_aux = moe_mlp_block(cfg, layout, sharder, moe_w, x)
+            aux = aux + moe_aux
+            if mode == "train":
+                out_cache = None
+            else:
+                dense_c = (
+                    jax.tree.map(lambda *cs: jnp.stack(cs), *new_caches)
+                    if nd else None
+                )
+                out_cache = (dense_c, nc_moe)
+        else:
+            w, layer_cache = xs
+            x, out_cache = attn_block(cfg, layout, sharder, w, x, positions,
+                                      mode=mode, cache=layer_cache,
+                                      cache_index=cache_index)
+            x = mlp_block(cfg, layout, sharder, w, x)
+        return (x, positions, cache_index), (out_cache, aux)
+
+    return body
+
+
+def _run_stack(cfg, layout, sharder, params, x, positions, *, mode,
+               cache=None, cache_index=None):
+    body = _stack_body(cfg, layout, sharder, mode)
+
+    def scan_body(carry, xs):
+        return L.remat_wrap(body, layout.remat)(carry, xs)
+
+    if cfg.moe_num_experts:
+        n_super = cfg.num_layers // cfg.moe_interleave
+        nd = cfg.moe_interleave - 1
+        dense = params.get("dense_layers")
+        dense_stacked = (
+            jax.tree.map(lambda a: a.reshape(n_super, nd, *a.shape[1:]), dense)
+            if nd else {}
+        )
+        xs = (dense_stacked, params["moe_layers"], cache)
+    else:
+        xs = (params["layers"], cache)
+
+    # group-remat: checkpoint the residual every G layers instead of every
+    # layer — activation-checkpoint memory / G at the cost of recomputing
+    # G layers per group in bwd (same total recompute as remat="full").
+    G = max(1, int(layout.remat_group))
+    n_scan = cfg.num_layers // cfg.moe_interleave if cfg.moe_num_experts else cfg.num_layers
+    if mode == "train" and layout.scan_layers and G > 1 and n_scan % G == 0:
+        gxs = jax.tree.map(lambda a: a.reshape(n_scan // G, G, *a.shape[1:]), xs)
+
+        def group_body(carry, g):
+            aux = jnp.zeros((), jnp.float32)
+            for j in range(G):
+                xj = jax.tree.map(lambda a: a[j], g)
+                # nested remat: the group recompute itself re-checkpoints
+                # per layer, so bwd never holds G layers of intermediates
+                carry, (_, a) = L.remat_wrap(body, layout.remat)(carry, xj)
+                aux = aux + a
+            return carry, (None, aux)
+
+        gbody = L.remat_wrap(group_body, layout.remat)
+        carry, (_, aux) = jax.lax.scan(gbody, (x, positions, cache_index), gxs)
+        return carry[0], None, jnp.sum(aux)
+
+    if not layout.scan_layers:
+        n = cfg.num_layers // cfg.moe_interleave if cfg.moe_num_experts else cfg.num_layers
+        caches, aux_sum = [], jnp.zeros((), jnp.float32)
+        carry = (x, positions, cache_index)
+        for i in range(n):
+            xi = jax.tree.map(lambda a: a[i], xs)
+            carry, (c, a) = scan_body(carry, xi)
+            caches.append(c)
+            aux_sum = aux_sum + a
+        x = carry[0]
+        new_cache = (
+            None if caches[0] is None
+            else jax.tree.map(lambda *cs: jnp.stack(cs), *caches)
+        )
+        return x, new_cache, aux_sum
+    carry, (new_cache, aux) = jax.lax.scan(scan_body, (x, positions, cache_index), xs)
+    return carry[0], new_cache, jnp.sum(aux)
+
+
+def _prep_inputs(cfg, params, batch, sharder):
+    """Embed tokens; VLM prepends stub patch embeddings."""
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens, sharder)
+    if cfg.family == "vlm" and "img_emb" in batch:
+        img = batch["img_emb"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+        x = sharder.act(x, "batch", "seq", None)
+    return x
+
+
+def transformer_loss(cfg, layout, sharder, params, batch):
+    x = _prep_inputs(cfg, params, batch, sharder)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x, _, aux = _run_stack(cfg, layout, sharder, params, x, positions, mode="train")
+    logits = _unembed(cfg, layout, params, x, sharder)
+    loss = L.softmax_xent(logits, batch["labels"])
+    return loss + aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def _cache_zero(cfg, layout, batch_size, cache_len, dtype=jnp.bfloat16):
+    KV, HD = cfg.num_kv_heads, cfg.head_dim
+    z = lambda *lead: jnp.zeros((*lead, batch_size, cache_len, KV, HD), dtype)
+    if cfg.moe_num_experts:
+        n_super = cfg.num_layers // cfg.moe_interleave
+        nd = cfg.moe_interleave - 1
+        dense = (z(n_super, nd), z(n_super, nd)) if nd else None
+        return (dense, (z(n_super), z(n_super)))
+    return (z(cfg.num_layers), z(cfg.num_layers))
+
+
+def cache_logical_axes(cfg, layout):
+    mode = layout.kv_cache_shard
+    per = {
+        "hd": ("cache_batch", None, None, "head_dim"),
+        "heads": ("cache_batch", None, "heads", None),
+        "seq": ("cache_batch", "seq", None, None),
+    }[mode]
+    if cfg.moe_num_experts:
+        nd = cfg.moe_interleave - 1
+        dense = (("layers", None) + per, ("layers", None) + per) if nd else None
+        moe = (("layers",) + per, ("layers",) + per)
+        return (dense, moe)
+    return (("layers",) + per, ("layers",) + per)
+
+
+def transformer_prefill(cfg, layout, sharder, params, batch):
+    x = _prep_inputs(cfg, params, batch, sharder)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x, cache, _ = _run_stack(cfg, layout, sharder, params, x, positions, mode="prefill")
+    logits = _unembed(cfg, layout, params, x[:, -1:], sharder)
+    return logits[:, 0], cache
+
+
+def transformer_decode(cfg, layout, sharder, params, cache, batch):
+    token, index = batch["token"], batch["index"]
+    x = _embed(cfg, params, token[:, None], sharder)
+    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    x, new_cache, _ = _run_stack(
+        cfg, layout, sharder, params, x, positions, mode="decode",
+        cache=cache, cache_index=index,
+    )
+    logits = _unembed(cfg, layout, params, x, sharder)
+    return logits[:, 0], new_cache

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import DEFAULT_RULES, Sharder, spec_for_axes
+
+__all__ = ["DEFAULT_RULES", "Sharder", "spec_for_axes"]

@@ -1,0 +1,210 @@
+"""Logical-axis sharding rules (MaxText-style) and the Sharder helper.
+
+Models name tensor dims with *logical* axes; the rules table maps logical
+axes onto mesh axes that exist in the current mesh. One mesh axis is never
+assigned twice within a single spec (first logical axis wins), which lets
+e.g. ``seq -> model`` (sequence parallelism) coexist with ``heads ->
+model`` (tensor parallelism) across different tensors.
+
+Parallelism scheme encoded by DEFAULT_RULES:
+  - batch        -> ("pod", "data")   pure DP across pods, DP within pod
+  - embed_fsdp   -> ("data",)         ZeRO-3/FSDP weight sharding in-pod
+  - tp / heads / vocab / experts -> ("model",)  tensor/expert parallelism
+  - seq          -> ("model",)        sequence-parallel residual stream
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+LogicalAxis = Optional[str]
+
+# "2d": FSDP over "data" x TP over "model" (+ pure DP over "pod").
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+    "heads": ("model",),
+    "kv_heads": (),
+    "head_dim": ("model",),
+    "tp": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "embed": (),
+    "embed_fsdp": ("data",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "layers": (),
+    "state": (),
+    "capacity": (),
+    "frames": (),
+    "expert_group": ("data",),
+}
+
+# "fsdp": no tensor parallelism — batch and weight-shard both span the
+# whole pod (data x model). Right profile for <5B models at train time:
+# zero per-layer activation collectives; only weight all-gathers +
+# gradient reduce-scatters. (Multi-pod runs fall back to "2d"; a 256
+# batch cannot shard 512 ways.)
+FSDP_RULES: Dict[str, Tuple[str, ...]] = {
+    **{k: () for k in DEFAULT_RULES},
+    "batch": ("data", "model"),
+    "embed_fsdp": ("data", "model"),
+}
+
+# "serve": weight-stationary decoding for models that fit TP-sharded on
+# one model row (<=~16B bf16): weights replicated across "data", TP over
+# "model"; batch over "data". Zero per-token weight gathers — per-layer
+# collectives shrink to O(batch x d_model) activation reductions.
+SERVE_RULES: Dict[str, Tuple[str, ...]] = {
+    **DEFAULT_RULES,
+    "embed_fsdp": (),
+    "seq": (),
+}
+
+# "serve2d": 400B-class decoding — weights 2D-sharded (D -> data,
+# heads/ffn -> model; nothing re-gathered per token), activations
+# replicated (partial-sum reductions are O(batch x d_model)), KV cache
+# sharded batch -> data, head_dim -> model.
+SERVE2D_RULES: Dict[str, Tuple[str, ...]] = {
+    **DEFAULT_RULES,
+    "batch": (),
+    "cache_batch": ("data",),
+    "seq": (),
+}
+DEFAULT_RULES["cache_batch"] = ("pod", "data")
+FSDP_RULES["cache_batch"] = ("data", "model")
+SERVE_RULES["cache_batch"] = ("pod", "data")
+
+PROFILES = {
+    "2d": DEFAULT_RULES,
+    "fsdp": FSDP_RULES,
+    "serve": SERVE_RULES,
+    "serve2d": SERVE2D_RULES,
+}
+
+
+def rules_for(profile: str) -> Dict[str, Tuple[str, ...]]:
+    return dict(PROFILES[profile])
+
+
+def spec_for_axes(
+    axes: Sequence[LogicalAxis],
+    rules: Dict[str, Tuple[str, ...]],
+    mesh_axis_names: Sequence[str],
+) -> P:
+    used: set = set()
+    out = []
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+            continue
+        if ax not in rules:
+            raise KeyError(f"unknown logical axis {ax!r}")
+        mesh_axes = tuple(
+            m for m in rules[ax] if m in mesh_axis_names and m not in used
+        )
+        used.update(mesh_axes)
+        if len(mesh_axes) == 0:
+            out.append(None)
+        elif len(mesh_axes) == 1:
+            out.append(mesh_axes[0])
+        else:
+            out.append(mesh_axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+class Sharder:
+    """Applies logical-axis sharding constraints; no-op without a mesh.
+
+    Models receive a Sharder so the same code runs (a) un-meshed on CPU in
+    smoke tests, (b) under the production mesh in the dry-run/launcher.
+    """
+
+    def __init__(
+        self,
+        mesh: Optional[Mesh] = None,
+        rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+        seq_parallel: bool = True,
+        profile: str = "2d",
+    ):
+        self.mesh = mesh
+        base = rules_for(profile) if rules is None else rules
+        self.rules = dict(base)
+        if not seq_parallel or profile == "fsdp":
+            self.rules["seq"] = ()
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names) if self.mesh is not None else ()
+
+    def spec(self, *axes: LogicalAxis) -> P:
+        return spec_for_axes(axes, self.rules, self.axis_names)
+
+    def _axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[name]
+
+    def _fit_spec_to_shape(self, spec: P, shape) -> P:
+        """Drop mesh axes that do not divide the corresponding dim (e.g.
+        batch=1 long-context decode, odd vocab) — degrade, don't fail."""
+        out = []
+        for i, entry in enumerate(tuple(spec)):
+            if entry is None or i >= len(shape):
+                out.append(entry)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            kept = []
+            prod = 1
+            for a in axes:
+                sz = self._axis_size(a)
+                if shape[i] % (prod * sz) == 0:
+                    kept.append(a)
+                    prod *= sz
+            out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def named(self, *axes: LogicalAxis, shape=None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        spec = self.spec(*axes)
+        if shape is not None:
+            spec = self._fit_spec_to_shape(spec, tuple(shape))
+        return NamedSharding(self.mesh, spec)
+
+    def act(self, x: jax.Array, *axes: LogicalAxis) -> jax.Array:
+        """Constrain an activation's sharding (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        if len(axes) != x.ndim:
+            raise ValueError(
+                f"rank mismatch: {len(axes)} logical axes for rank-{x.ndim}"
+            )
+        return jax.lax.with_sharding_constraint(
+            x, self.named(*axes, shape=x.shape)
+        )
+
+    def params_sharding(self, logical_tree, shapes_tree=None):
+        """Map a pytree of logical-axis tuples to NamedShardings; if
+        shapes_tree (matching structure of ShapeDtypeStructs) is given,
+        shardings are shape-fitted."""
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        )
+        if self.mesh is None:
+            return jax.tree.map(lambda _: None, logical_tree, is_leaf=is_axes)
+        if shapes_tree is None:
+            return jax.tree.map(
+                lambda axes: self.named(*axes), logical_tree, is_leaf=is_axes
+            )
+        return jax.tree.map(
+            lambda axes, s: self.named(*axes, shape=s.shape),
+            logical_tree,
+            shapes_tree,
+            is_leaf=is_axes,
+        )

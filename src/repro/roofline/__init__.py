@@ -1,0 +1,4 @@
+from repro.roofline.hlo_parse import collective_bytes_from_hlo
+from repro.roofline.analysis import analytic_cell, roofline_terms, HW
+
+__all__ = ["collective_bytes_from_hlo", "analytic_cell", "roofline_terms", "HW"]

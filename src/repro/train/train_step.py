@@ -1,0 +1,74 @@
+"""Microbatched train step: grad-accumulation lax.scan over microbatches,
+then one AdamW update. Accumulation dtype is configurable (bf16 for the
+400B cells). The step fn is pure and jit/pjit-friendly; shardings are
+applied by the caller (launcher / dry-run) via in_shardings +
+with_sharding_constraint inside the model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayoutConfig
+from repro.models.api import ModelBundle
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+PyTree = Any
+
+
+def _microbatch(batch: PyTree, n_micro: int) -> PyTree:
+    def r(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, f"batch {b} % n_micro {n_micro}"
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(
+    bundle: ModelBundle,
+    opt_cfg: AdamWConfig,
+    layout: LayoutConfig = None,
+) -> Callable:
+    layout = layout or bundle.layout
+
+    def train_step(params, opt_state, batch):
+        loss_fn = lambda p, b: bundle.loss(p, b)
+        accum_dt = jnp.dtype(layout.grad_accum_dtype)
+
+        mb = layout.microbatch
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        n_micro = gb // mb if mb else 1
+        if n_micro > 1:
+            mbatch = _microbatch(batch, n_micro)
+
+            def accum(carry, micro):
+                g_acc, loss_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, micro)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dt), g_acc, g
+                )
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dt), params)
+            (grads, loss_sum), _ = jax.lax.scan(accum, (g0, 0.0), mbatch)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(bundle: ModelBundle) -> Callable:
+    def eval_step(params, batch):
+        return bundle.loss(params, batch)
+
+    return eval_step

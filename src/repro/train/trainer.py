@@ -1,0 +1,164 @@
+"""Trainer: the fault-tolerant, energy-aware training loop.
+
+Composition of the substrates:
+  - jitted microbatched train step (repro.train.train_step)
+  - deterministic restartable data pipeline (repro.train.data)
+  - atomic/async checkpointing + restore-on-restart (repro.train.checkpoint)
+  - EnergyUCB controller in the loop (repro.energy.runtime) — one
+    decision per step, real step executed, energy simulated/telemetered
+  - fault injection + automatic restart (repro.train.fault)
+  - straggler watch: flags steps whose wall time exceeds the trailing
+    median by a configurable factor (on real fleets this feeds the
+    coordinated controller / preemption logic).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.api import ModelBundle
+from repro.train import checkpoint as ckpt
+from repro.train.data import SyntheticTokens, make_pipeline
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    async_ckpt: bool = True
+    seed: int = 0
+    log_every: int = 10
+    straggler_factor: float = 2.0
+
+
+class Trainer:
+    def __init__(
+        self,
+        bundle: ModelBundle,
+        shape: ShapeConfig,
+        opt_cfg: Optional[AdamWConfig] = None,
+        tcfg: Optional[TrainerConfig] = None,
+        energy_runtime=None,
+        data: Optional[SyntheticTokens] = None,
+    ):
+        self.bundle = bundle
+        self.shape = shape
+        self.tcfg = tcfg or TrainerConfig()
+        self.opt_cfg = opt_cfg or AdamWConfig(
+            moment_dtype=bundle.layout.opt_dtype,
+            total_steps=self.tcfg.total_steps,
+            warmup_steps=max(1, self.tcfg.total_steps // 20),
+        )
+        self.energy = energy_runtime
+        self.data = data or make_pipeline(bundle.cfg, shape, seed=self.tcfg.seed)
+        self._step_fn = jax.jit(
+            make_train_step(bundle, self.opt_cfg, bundle.layout), donate_argnums=(0, 1)
+        )
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+        self.metrics: List[Dict[str, float]] = []
+        self.straggler_events: List[int] = []
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self):
+        key = jax.random.key(self.tcfg.seed)
+        self.params = self.bundle.init(key)
+        self.opt_state = adamw_init(self.opt_cfg, self.params)
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is not None:
+            step, state, extra = ckpt.restore(
+                self.tcfg.ckpt_dir, {"p": self.params, "o": self.opt_state}
+            )
+            self.params, self.opt_state = state["p"], state["o"]
+            self.step = step
+            self.data.restore(extra["data"])
+        return self.step
+
+    def save(self):
+        fn = ckpt.async_save if self.tcfg.async_ckpt else ckpt.save
+        fn(
+            self.tcfg.ckpt_dir,
+            self.step,
+            {"p": self.params, "o": self.opt_state},
+            extra={"data": self.data.state()},
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, fail_at: Optional[Callable[[int], bool]] = None) -> Dict[str, Any]:
+        if self.params is None:
+            self.init_or_restore()
+        times: List[float] = []
+        while self.step < self.tcfg.total_steps:
+            if fail_at is not None and fail_at(self.step):
+                raise RuntimeError(f"injected failure at step {self.step}")
+            batch = self.data.batch_at(self.step)
+            self.data.step = self.step + 1
+
+            def work():
+                nonlocal_metrics = {}
+                self.params, self.opt_state, m = self._step_fn(
+                    self.params, self.opt_state, batch
+                )
+                return m
+
+            t0 = time.perf_counter()
+            if self.energy is not None:
+                out = self.energy.step(work)
+                m = out["work"]
+            else:
+                m = work()
+            wall = time.perf_counter() - t0
+            times.append(wall)
+            med = float(np.median(times[-20:]))
+            if len(times) > 5 and wall > self.tcfg.straggler_factor * med:
+                self.straggler_events.append(self.step)
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or self.step == 1:
+                self.metrics.append(
+                    {"step": self.step, "loss": float(m["loss"]),
+                     "grad_norm": float(m["grad_norm"]), "wall_s": wall}
+                )
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+        self.save()
+        ckpt.wait_for_saves(self.tcfg.ckpt_dir)
+        out = {
+            "final_step": self.step,
+            "metrics": self.metrics,
+            "stragglers": self.straggler_events,
+        }
+        if self.energy is not None:
+            out["energy"] = self.energy.summary()
+        return out
+
+
+def run_with_restarts(make_trainer: Callable[[], Trainer],
+                      fail_at_steps: List[int], max_restarts: int = 5):
+    """Fault-tolerance driver: inject failures, restart from the latest
+    checkpoint, continue to completion. Returns (result, n_restarts)."""
+    fails = set(fail_at_steps)
+    fired = set()
+    restarts = 0
+    while True:
+        tr = make_trainer()
+        tr.init_or_restore()
+
+        def fail_at(step, _fired=fired, _fails=fails):
+            return step in _fails and step not in _fired
+        try:
+            res = tr.run(fail_at=fail_at)
+            return res, restarts
+        except RuntimeError as e:
+            if "injected failure" not in str(e) or restarts >= max_restarts:
+                raise
+            fired.add(tr.step)
+            restarts += 1

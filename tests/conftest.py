@@ -1,0 +1,10 @@
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real single device; only the dry-run
+# launcher forces 512 (in its own process).
+import os
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,114 @@
+"""EnergyUCB behavior: optimism, convergence, switching suppression,
+QoS feasibility, ablations (paper §4.2-4.6 claims as assertions)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    energy_ucb,
+    eps_greedy,
+    energy_ts,
+    expected_rewards,
+    get_app,
+    make_env_params,
+    rr_freq,
+    run_episode,
+    run_repeats,
+    TABLE1_KJ,
+)
+
+
+def test_optimistic_init_tries_all_arms():
+    p = make_env_params(get_app("clvleaf"))
+    out = run_episode(energy_ucb(), p, jax.random.key(0), max_steps=2000)
+    arms = np.asarray(out["arms"])[: int(out["steps"])]
+    assert len(np.unique(arms)) == 9  # every frequency explored
+
+
+def test_converges_to_best_arm():
+    name = "miniswp"
+    p = make_env_params(get_app(name))
+    out = run_episode(energy_ucb(), p, jax.random.key(0))
+    arms = np.asarray(out["arms"])[: int(out["steps"])]
+    tail = arms[len(arms) // 2 :]
+    best = int(np.argmin(TABLE1_KJ[name]))
+    frac_best = np.mean(tail == best)
+    assert frac_best > 0.8, f"tail fraction on best arm {frac_best:.2f}"
+
+
+def test_switching_penalty_reduces_switches():
+    p = make_env_params(get_app("llama"))
+    with_pen = run_repeats(energy_ucb(switching_penalty=0.05), p, jax.random.key(1), 3)
+    no_pen = run_repeats(energy_ucb(switching_penalty=0.0), p, jax.random.key(1), 3)
+    ratio = no_pen["switches"].mean() / max(with_pen["switches"].mean(), 1)
+    assert ratio > 3.0, f"penalty only cut switches {ratio:.1f}x (paper: 6.7x)"
+
+
+def test_regret_sublinear_vs_rrfreq():
+    # miniswp has clear per-arm gaps; tealeaf's are sub-1% (flat landscape)
+    p = make_env_params(get_app("miniswp"))
+    ucb = run_episode(energy_ucb(), p, jax.random.key(0))
+    rr = run_episode(rr_freq(), p, jax.random.key(0))
+    T = int(min(ucb["steps"], rr["steps"])) - 1
+    cu, cr = np.asarray(ucb["cum_regret"]), np.asarray(rr["cum_regret"])
+    assert cu[T] < 0.2 * cr[T]
+    # sublinear: second-half regret growth much smaller than first half
+    assert (cu[T] - cu[T // 2]) < 0.6 * cu[T // 2]
+
+
+def test_regret_beats_rrfreq_even_on_flat_landscape():
+    p = make_env_params(get_app("tealeaf"))
+    ucb = run_episode(energy_ucb(), p, jax.random.key(0))
+    rr = run_episode(rr_freq(), p, jax.random.key(0))
+    T = int(min(ucb["steps"], rr["steps"])) - 1
+    assert np.asarray(ucb["cum_regret"])[T] < 0.4 * np.asarray(rr["cum_regret"])[T]
+
+
+def test_qos_constrained_respects_budget():
+    name = "clvleaf"  # strongly compute-bound: unconstrained slows a lot
+    p = make_env_params(get_app(name))
+    delta = 0.05
+    out = run_repeats(energy_ucb(qos_delta=delta), p, jax.random.key(0), 5)
+    t_base = float(p.t_ref_s)
+    slowdown = out["time_s"].mean() / t_base - 1.0
+    assert slowdown <= delta + 0.02, f"slowdown {slowdown:.3f} > budget {delta}"
+    # and still saves energy vs f_max default
+    assert out["energy_kj"].mean() <= TABLE1_KJ[name][-1] * 1.01
+
+
+def test_unconstrained_beats_constrained_on_energy():
+    p = make_env_params(get_app("clvleaf"))
+    unc = run_repeats(energy_ucb(), p, jax.random.key(2), 3)["energy_kj"].mean()
+    con = run_repeats(energy_ucb(qos_delta=0.05), p, jax.random.key(2), 3)[
+        "energy_kj"
+    ].mean()
+    assert unc <= con * 1.02
+
+
+def test_ablation_optimistic_init_helps():
+    p = make_env_params(get_app("sph_exa"))
+    with_oi = run_repeats(energy_ucb(), p, jax.random.key(3), 3)["energy_kj"].mean()
+    without = run_repeats(
+        energy_ucb(optimistic_init=False), p, jax.random.key(3), 3
+    )["energy_kj"].mean()
+    assert with_oi <= without + 1.0  # kJ
+
+
+def test_policies_state_invariants():
+    p = make_env_params(get_app("weather"))
+    out = run_episode(energy_ucb(), p, jax.random.key(0), max_steps=500)
+    st = out["pstate"]
+    n = np.asarray(st["n"])
+    assert n.sum() == pytest.approx(float(st["t"]), abs=0.5)
+    assert (n >= 0).all()
+    mu = np.asarray(st["mu"])
+    assert (mu <= 0.05).all()  # rewards are negative
+
+
+@pytest.mark.parametrize("mk", [eps_greedy, energy_ts])
+def test_dynamic_baselines_complete(mk):
+    p = make_env_params(get_app("weather"))
+    out = run_repeats(mk(), p, jax.random.key(0), 2)
+    assert out["completed"].all()
+    assert (out["energy_kj"] > 0).all()

@@ -1,0 +1,73 @@
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+@pytest.fixture()
+def tdir(tmp_path):
+    return str(tmp_path / "ck")
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "w": jax.random.normal(k, (8, 16)),
+        "nested": {"b": jnp.arange(5, dtype=jnp.int32)},
+        "scalar": jnp.float32(3.5),
+    }
+
+
+def test_roundtrip(tdir):
+    s = _state()
+    ckpt.save(tdir, 7, s, extra={"data": {"step": 7, "seed": 0}})
+    step, s2, extra = ckpt.restore(tdir, s)
+    assert step == 7 and extra["data"]["step"] == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)), s, s2)
+
+
+def test_latest_and_prune(tdir):
+    s = _state()
+    for i in (1, 2, 3, 4, 5):
+        ckpt.save(tdir, i, s, keep_last=3)
+    assert ckpt.latest_step(tdir) == 5
+    kept = sorted(d for d in os.listdir(tdir) if d.startswith("step_"))
+    assert len(kept) == 3
+
+
+def test_no_partial_checkpoint_visible(tdir):
+    """tmp dirs must never be mistaken for checkpoints."""
+    s = _state()
+    ckpt.save(tdir, 1, s)
+    os.makedirs(os.path.join(tdir, ".tmp_step_00000009"))
+    assert ckpt.latest_step(tdir) == 1
+
+
+def test_async_save_then_restore(tdir):
+    s = _state(3)
+    ckpt.async_save(tdir, 11, s, extra={"data": {"step": 11, "seed": 0}})
+    ckpt.wait_for_saves(tdir)
+    step, s2, _ = ckpt.restore(tdir, s)
+    assert step == 11
+    np.testing.assert_array_equal(np.asarray(s["w"]), np.asarray(s2["w"]))
+
+
+def test_elastic_restore_with_shardings(tdir):
+    """Restore re-places leaves per provided shardings (the elastic
+    path: save under mesh A, restore under mesh B)."""
+    s = _state(4)
+    ckpt.save(tdir, 2, s)
+    shardings = jax.tree.map(lambda _: None, s)
+    step, s2, _ = ckpt.restore(tdir, s, shardings=shardings)
+    assert step == 2
+    assert s2["w"].shape == (8, 16)
+
+
+def test_restore_missing_raises(tdir):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tdir, {"a": jnp.zeros(1)})

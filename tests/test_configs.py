@@ -1,0 +1,72 @@
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_arch, get_reduced, list_archs
+
+EXPECTED_PARAMS_B = {
+    "starcoder2-15b": (14, 18),
+    "qwen2.5-3b": (2.5, 3.6),
+    "llama3-405b": (390, 420),
+    "qwen3-1.7b": (1.4, 2.1),
+    "mamba2-2.7b": (2.4, 3.1),
+    "llama4-maverick-400b-a17b": (380, 420),
+    "granite-moe-1b-a400m": (1.0, 1.7),
+    "seamless-m4t-large-v2": (1.2, 2.4),
+    "pixtral-12b": (11, 14),
+    "zamba2-7b": (6, 8),
+}
+
+
+def test_all_ten_archs_registered():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("name", list(EXPECTED_PARAMS_B))
+def test_param_counts_match_model_names(name):
+    lo, hi = EXPECTED_PARAMS_B[name]
+    n = get_arch(name).param_count() / 1e9
+    assert lo <= n <= hi, f"{name}: {n:.1f}B outside [{lo},{hi}]"
+
+
+def test_active_params_moe():
+    c = get_arch("llama4-maverick-400b-a17b")
+    assert 14 <= c.active_param_count() / 1e9 <= 20
+    g = get_arch("granite-moe-1b-a400m")
+    assert 0.25 <= g.active_param_count() / 1e9 <= 0.6
+
+
+def test_padded_vocab_divisible():
+    for a in list_archs():
+        c = get_arch(a)
+        assert c.padded_vocab % 256 == 0
+        assert c.padded_vocab >= c.vocab_size
+
+
+def test_shape_registry():
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_only_subquadratic():
+    long_archs = [a for a in list_archs() if "long_500k" in get_arch(a).supported_shapes()]
+    assert sorted(long_archs) == ["mamba2-2.7b", "zamba2-7b"]
+
+
+def test_cell_count():
+    cells = sum(len(get_arch(a).supported_shapes()) for a in list_archs())
+    assert cells == 32  # 10*3 + 2 long-context
+
+
+def test_reduced_configs_are_small():
+    for a in list_archs():
+        r = get_reduced(a)
+        assert r.d_model <= 128 and r.num_layers <= 8
+
+
+def test_layout_overrides_apply():
+    c = get_arch("qwen3-1.7b")
+    assert c.layout_for("train_4k").parallelism == "fsdp"
+    assert c.layout_for("decode_32k").parallelism == "serve"
+    assert c.layout_for("decode_32k").decode_logits_bf16
+    assert get_arch("llama3-405b").layout_for("decode_32k").parallelism == "serve2d"

@@ -1,0 +1,42 @@
+"""End-to-end dry-run regression: one real cell compiled in a subprocess
+(fresh process so the 512 fake devices never leak into this test run),
+guarding both the launcher path and the sharding-profile wins of
+EXPERIMENTS.md §Perf."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_qwen3_train_cell(tmp_path):
+    out = str(tmp_path)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3-1.7b", "--shape", "train_4k", "--out", out],
+        capture_output=True, text=True, timeout=560,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.load(open(f"{out}/qwen3-1.7b__train_4k__pod.json"))
+    assert rec["status"] == "ok"
+    # fsdp profile regression guard: collectives stay ~20 GB/dev (the 2d
+    # baseline was 193 GB; a sharding regression would blow past this)
+    assert rec["collectives"]["total_bytes_per_device"] < 40 * 2**30
+    # fits a 16 GB chip
+    assert rec["memory_per_device"]["peak_est_bytes"] < 14 * 2**30
+
+
+@pytest.mark.slow
+def test_dryrun_decode_serve_profile(tmp_path):
+    out = str(tmp_path)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3-1.7b", "--shape", "decode_32k", "--out", out],
+        capture_output=True, text=True, timeout=560,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.load(open(f"{out}/qwen3-1.7b__decode_32k__pod.json"))
+    assert rec["status"] == "ok"
+    # weight-stationary serving: per-token collectives far below weights
+    assert rec["collectives"]["total_bytes_per_device"] < 2 * 2**30

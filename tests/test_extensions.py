@@ -1,0 +1,94 @@
+"""Beyond-paper extensions: RooflineUCB warm start, sliding-window
+SA-UCB under phase change, DRLCap protocol plumbing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    energy_ucb,
+    expected_rewards,
+    get_app,
+    make_env_params,
+    run_episode,
+    run_repeats,
+)
+from repro.core.simulator import EnvParams
+
+
+def test_roofline_ucb_warm_start_cuts_exploration():
+    """Priors from a (roughly right) cost model => less exploration spend
+    than the flat optimistic init."""
+    p = make_env_params(get_app("sph_exa"))
+    mu = np.asarray(expected_rewards(p))
+    # measured (EXPERIMENTS.md): priors must be WEAK (prior_n ~ 1) —
+    # confident priors (n>=3) exploit during the noisy early phase and
+    # get corrupted faster than flat-optimistic init explores.
+    noisy_prior = mu + 0.002 * np.random.default_rng(0).normal(size=mu.shape)
+    flat = run_repeats(energy_ucb(), p, jax.random.key(0), 4)
+    warm = run_repeats(
+        energy_ucb(prior_mu=jnp.asarray(noisy_prior), prior_n=1.0,
+                   name="RooflineUCB"),
+        p, jax.random.key(0), 4,
+    )
+    assert warm["energy_kj"].mean() <= flat["energy_kj"].mean() + 0.5
+
+
+def test_sliding_window_adapts_to_phase_change():
+    """Swap the environment mid-episode (train -> eval phase): the
+    discounted controller re-converges; the stationary one is slower."""
+    from repro.core.simulator import env_init
+
+    p1 = make_env_params(get_app("miniswp"))   # memory-bound: low f best
+    p2 = make_env_params(get_app("lbm"))       # compute-bound: high f best
+    sw = energy_ucb(window_discount=0.995, name="SW")
+    st = energy_ucb()
+
+    def run_two_phase(pol, key):
+        out1 = run_episode(pol, p1, key, max_steps=4000)
+        # carry the learned state into a different reward landscape
+        out2 = run_episode(pol, p2, key, max_steps=6000,
+                           init_pstate=out1["pstate"])
+        arms = np.asarray(out2["arms"])[:int(out2["steps"])]
+        tail = arms[len(arms) // 2:]
+        mu2 = np.asarray(expected_rewards(p2))
+        best2 = int(np.argmax(mu2))
+        # tail quality: mean expected reward of chosen arms vs the best
+        qual = float(np.mean(mu2[tail])) / float(mu2[best2])
+        return np.mean(tail == best2), qual
+
+    frac_sw, q_sw = run_two_phase(sw, jax.random.key(0))
+    frac_st, q_st = run_two_phase(st, jax.random.key(0))
+    assert frac_sw >= frac_st - 0.05  # no worse at re-identifying the arm
+    # rewards negative: qual is the tail-arm reward relative to the best
+    # arm (1.0 = optimal, larger = worse); SW must stay near-optimal
+    assert q_sw < 1.05
+
+
+def test_drlcap_protocol_energy_accounting():
+    from repro.core.rl import drlcap
+    from repro.core.rollout import run_drlcap_protocol
+
+    p = make_env_params(get_app("tealeaf"))
+    out = run_drlcap_protocol(drlcap, p, jax.random.key(0))
+    # 20% at some energy + 1.25 x 80%: must exceed any static total * 0.9
+    assert float(out["energy_kj"]) > 90.0
+
+
+def test_fit_spec_shape_awareness_on_real_cells():
+    """B=1 long-context decode must drop batch sharding, not fail."""
+    from repro.parallel.sharding import Sharder
+    import numpy as np_
+
+    s = Sharder.__new__(Sharder)
+    s.mesh = type("M", (), {"axis_names": ("data", "model"),
+                            "devices": np_.zeros((16, 16))})()
+    from repro.parallel.sharding import rules_for
+
+    s.rules = rules_for("serve")
+    from jax.sharding import PartitionSpec as P
+
+    fitted = s._fit_spec_to_shape(P("data", None, None, "model"), (1, 524288, 32, 112))
+    assert fitted == P(None, None, None, "model")

@@ -1,0 +1,94 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYP = True
+except Exception:  # hypothesis not installed
+    HAVE_HYP = False
+
+pytestmark = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis unavailable")
+
+from repro.core import energy_ucb, get_app, make_env_params, env_init, env_step
+from repro.core.simulator import Obs
+from repro.parallel.sharding import DEFAULT_RULES, spec_for_axes
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rewards=st.lists(st.floats(-3.0, -0.01), min_size=5, max_size=40),
+    arms=st.lists(st.integers(0, 8), min_size=5, max_size=40),
+)
+def test_ucb_counts_and_means_bounded(rewards, arms):
+    n = min(len(rewards), len(arms))
+    pol = energy_ucb()
+    s = pol.init(jax.random.key(0))
+    for r, a in zip(rewards[:n], arms[:n]):
+        obs = Obs(
+            energy_j=jnp.float32(1.0), uc=jnp.float32(0.9), uu=jnp.float32(0.3),
+            progress=jnp.float32(1e-4), reward=jnp.float32(r),
+            switched=jnp.bool_(False), active=jnp.bool_(True),
+        )
+        s = pol.update(s, jnp.int32(a), obs)
+    cnt = np.asarray(s["n"])
+    assert cnt.sum() == pytest.approx(n)
+    mu = np.asarray(s["mu"])
+    seen = np.unique(np.asarray(arms[:n]))
+    lo, hi = min(rewards[:n]), max(rewards[:n])
+    for a in seen:
+        assert lo - 1e-5 <= mu[a] <= hi + 1e-5 or mu[a] == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(delta=st.floats(0.0, 0.5))
+def test_feasible_set_monotone_in_delta(delta):
+    """A larger slowdown budget never shrinks the feasible set."""
+    pol_a = energy_ucb(qos_delta=delta)
+    pol_b = energy_ucb(qos_delta=min(delta + 0.1, 0.9))
+    s = pol_a.init(jax.random.key(0))
+    # fabricate progress estimates
+    phat = jnp.linspace(0.5, 1.0, 9)
+    s = {**s, "phat": phat, "pn": jnp.ones(9)}
+    slow = 1.0 - phat / phat[8]
+    feas_a = (slow <= delta)
+    feas_b = (slow <= min(delta + 0.1, 0.9))
+    assert bool(jnp.all(feas_b | ~feas_a))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    arm=st.integers(0, 8),
+    seed=st.integers(0, 2**30),
+)
+def test_env_step_invariants(arm, seed):
+    p = make_env_params(get_app("pot3d"))
+    s = env_init(p)
+    s2, obs = env_step(p, s, jnp.int32(arm), jax.random.key(seed))
+    assert float(obs.energy_j) > 0
+    assert 0 < float(obs.uc) <= 1
+    assert 0 < float(obs.uu) <= 1
+    assert float(obs.reward) < 0
+    assert float(s2.remaining) <= 1.0
+    assert float(s2.energy_kj) >= 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    axes=st.lists(
+        st.sampled_from([None, "batch", "heads", "tp", "vocab", "embed_fsdp", "seq"]),
+        min_size=1,
+        max_size=4,
+    )
+)
+def test_spec_never_reuses_mesh_axis(axes):
+    spec = spec_for_axes(axes, DEFAULT_RULES, ("pod", "data", "model"))
+    used = []
+    for e in tuple(spec):
+        if e is None:
+            continue
+        used.extend(e if isinstance(e, tuple) else (e,))
+    assert len(used) == len(set(used))

@@ -1,0 +1,66 @@
+"""The paper's headline claims as assertions (Table 1 + §4.2):
+EnergyUCB saves energy vs. the 1.6 GHz default, stays within small
+energy-regret of the best static arm, and beats the dynamic baselines.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    TABLE1_KJ,
+    app_names,
+    energy_ts,
+    energy_ucb,
+    eps_greedy,
+    get_app,
+    make_env_params,
+    rr_freq,
+    run_repeats,
+)
+
+APPS = ("tealeaf", "miniswp", "sph_exa")  # one per regime, keeps CI fast
+
+
+@pytest.mark.parametrize("name", APPS)
+def test_saves_energy_vs_default(name):
+    p = make_env_params(get_app(name))
+    out = run_repeats(energy_ucb(), p, jax.random.key(0), 5)
+    assert out["completed"].all()
+    e = out["energy_kj"].mean()
+    default = TABLE1_KJ[name][-1]
+    assert e < default, f"{name}: {e:.1f} !< default {default:.1f}"
+
+
+@pytest.mark.parametrize("name", APPS)
+def test_energy_regret_small(name):
+    p = make_env_params(get_app(name))
+    e = run_repeats(energy_ucb(), p, jax.random.key(0), 5)["energy_kj"].mean()
+    best = TABLE1_KJ[name].min()
+    assert (e - best) / best < 0.03, f"{name}: regret {(e-best)/best:.3f}"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", APPS)
+def test_beats_dynamic_baselines(name):
+    p = make_env_params(get_app(name))
+    key = jax.random.key(0)
+    e_ucb = run_repeats(energy_ucb(), p, key, 5)["energy_kj"].mean()
+    for mk in (rr_freq, eps_greedy, energy_ts):
+        e_b = run_repeats(mk(), p, key, 5)["energy_kj"].mean()
+        assert e_ucb <= e_b * 1.005, f"{name}: UCB {e_ucb:.1f} vs {mk().name} {e_b:.1f}"
+
+
+@pytest.mark.slow
+def test_beats_rl_baselines():
+    from repro.core import rl_power
+    from repro.core.rl import drlcap
+    from repro.core.rollout import run_drlcap_protocol
+
+    name = "miniswp"
+    p = make_env_params(get_app(name))
+    key = jax.random.key(0)
+    e_ucb = run_repeats(energy_ucb(), p, key, 5)["energy_kj"].mean()
+    e_rl = run_repeats(rl_power(), p, key, 3)["energy_kj"].mean()
+    assert e_ucb < e_rl
+    e_drl = float(run_drlcap_protocol(drlcap, p, key)["energy_kj"])
+    assert e_ucb < e_drl

@@ -1,0 +1,54 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.mark.parametrize("name", ["qwen3-1.7b", "mamba2-2.7b"])
+def test_engine_generates(name):
+    cfg = get_reduced(name)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    eng = ServeEngine(bundle, params, n_slots=2, max_len=64)
+    reqs = [
+        Request(0, np.arange(5, dtype=np.int32) + 3, max_new=4),
+        Request(1, np.arange(7, dtype=np.int32) + 11, max_new=6),
+        Request(2, np.arange(3, dtype=np.int32) + 2, max_new=3),
+    ]
+    done = eng.generate(reqs)
+    assert [len(r.out) for r in done] == [4, 6, 3]
+    for r in done:
+        assert all(0 <= t < cfg.padded_vocab for t in r.out)
+
+
+def test_engine_greedy_matches_prefill_path():
+    """First generated token == argmax of the prefill logits (greedy)."""
+    cfg = get_reduced("starcoder2-15b")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(1))
+    prompt = np.arange(6, dtype=np.int32) + 1
+    eng = ServeEngine(bundle, params, n_slots=1, max_len=32)
+    [req] = eng.generate([Request(0, prompt, max_new=2)])
+    logits, _ = jax.jit(bundle.prefill)(params, {"tokens": jnp.asarray(prompt)[None]})
+    want = int(jnp.argmax(logits[0, : cfg.vocab_size]))
+    assert req.out[0] == want
+
+
+def test_engine_with_energy_runtime():
+    from repro.core.policies import energy_ucb
+    from repro.energy.model import StepEnergyModel
+    from repro.energy.runtime import EnergyAwareRuntime
+
+    cfg = get_reduced("qwen2.5-3b")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    m = StepEnergyModel(t_compute_s=0.02, t_memory_s=0.08, t_collective_s=0.01,
+                        n_chips=1, steps_total=100)
+    rt = EnergyAwareRuntime(energy_ucb(), m)
+    eng = ServeEngine(bundle, params, n_slots=2, max_len=32, energy_runtime=rt)
+    eng.generate([Request(0, np.arange(4, dtype=np.int32), max_new=5)])
+    assert len(rt.history) >= 5

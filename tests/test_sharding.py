@@ -1,0 +1,75 @@
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    FSDP_RULES,
+    Sharder,
+    spec_for_axes,
+)
+
+
+def test_spec_basic():
+    sp = spec_for_axes(("batch", None, "heads"), DEFAULT_RULES, ("data", "model"))
+    assert sp == P("data", None, "model")
+
+
+def test_spec_multipod_batch():
+    sp = spec_for_axes(("batch", None), DEFAULT_RULES, ("pod", "data", "model"))
+    assert sp == P(("pod", "data"))
+
+
+def test_spec_dedup_axis():
+    # seq and heads both want "model": first wins, second degrades
+    sp = spec_for_axes(("seq", "heads"), DEFAULT_RULES, ("data", "model"))
+    assert sp == P("model")
+
+
+def test_fsdp_profile_spans_pod():
+    sp = spec_for_axes(("batch",), FSDP_RULES, ("data", "model"))
+    assert sp == P(("data", "model"))
+    sp = spec_for_axes(("heads",), FSDP_RULES, ("data", "model"))
+    assert sp == P()
+
+
+def test_trailing_nones_trimmed():
+    sp = spec_for_axes(("batch", None, None), DEFAULT_RULES, ("data", "model"))
+    assert sp == P("data")
+
+
+def test_sharder_noop_without_mesh():
+    s = Sharder(None)
+    import jax.numpy as jnp
+
+    x = jnp.zeros((4, 4))
+    assert s.act(x, "batch", None) is x
+
+
+def test_fit_spec_to_shape_degrades():
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = np.asarray(jax.devices() * 1)[:1]
+    # fake 1-device mesh: every axis has size 1, so everything divides;
+    # exercise the arithmetic directly instead
+    s = Sharder.__new__(Sharder)
+    s.mesh = type(
+        "M", (), {"axis_names": ("data", "model"), "devices": np.zeros((16, 16))}
+    )()
+    s.rules = dict(DEFAULT_RULES)
+    fitted = s._fit_spec_to_shape(P("data", "model"), (8, 64))
+    assert fitted == P(None, "model")  # 8 % 16 != 0 -> dropped
+    fitted = s._fit_spec_to_shape(P(("data", "model")), (64,))
+    assert fitted == P("data")  # 64 % 16 ok, 64 % 256 not
+    fitted = s._fit_spec_to_shape(P("data"), (32,))
+    assert fitted == P("data")
+
+
+def test_rank_mismatch_raises():
+    s = Sharder(None)
+    import jax.numpy as jnp
+
+    # no mesh => no-op even on mismatch? No: act() checks only with mesh.
+    x = jnp.zeros((2, 2))
+    assert s.act(x, "batch", None) is x

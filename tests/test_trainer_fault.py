@@ -1,0 +1,54 @@
+"""Fault tolerance: injected failures + restart-from-checkpoint must
+reproduce the exact no-failure trajectory (bitwise-deterministic data +
+full optimizer state in the checkpoint)."""
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.train.trainer import Trainer, TrainerConfig, run_with_restarts
+
+SH = ShapeConfig("tiny", 32, 8, "train")
+
+
+def _mk(ckpt_dir, steps=30):
+    cfg = get_reduced("qwen2.5-3b")
+    bundle = build_model(cfg)
+    return Trainer(
+        bundle,
+        SH,
+        tcfg=TrainerConfig(
+            total_steps=steps, ckpt_every=10, ckpt_dir=ckpt_dir,
+            async_ckpt=False, log_every=steps,
+        ),
+    )
+
+
+@pytest.mark.slow
+def test_restart_matches_clean_run(tmp_path):
+    clean_dir = str(tmp_path / "clean")
+    crash_dir = str(tmp_path / "crash")
+
+    clean = _mk(clean_dir)
+    res_clean = clean.run()
+    loss_clean = res_clean["metrics"][-1]["loss"]
+
+    res_crash, restarts = run_with_restarts(
+        lambda: _mk(crash_dir), fail_at_steps=[13, 27]
+    )
+    assert restarts == 2
+    loss_crash = res_crash["metrics"][-1]["loss"]
+    assert loss_clean == pytest.approx(loss_crash, rel=1e-5)
+
+
+@pytest.mark.slow
+def test_loss_decreases(tmp_path):
+    tr = _mk(str(tmp_path / "ck"), steps=60)
+    res = tr.run()
+    first = res["metrics"][0]["loss"]
+    last = res["metrics"][-1]["loss"]
+    assert last < first - 0.3, f"loss did not improve: {first} -> {last}"
