@@ -1,7 +1,8 @@
 """Controller-plane overhead: us per decision for a single jitted
 controller (select+update) and for the full Aurora-scale fleet (63,720
-controllers) through the fused fleet kernel. The paper's feasibility
-argument ('lightweight') quantified."""
+controllers) — vmapped, and through the fused Pallas select+update
+fleet step. The paper's feasibility argument ('lightweight')
+quantified."""
 from __future__ import annotations
 
 import jax
@@ -22,13 +23,15 @@ def run(fast: bool = True, out_json=None):
     es = env_init(p)
     key = jax.random.key(1)
 
-    sel = jax.jit(pol.select)
-    arm = sel(st, key)
+    # hyperparams-as-data: params ride as operands, fns are the only
+    # static part, so every config shares these two traces
+    sel = jax.jit(pol.fns.select)
+    arm = sel(pol.params, st, key)
     _, obs = env_step(p, es, arm, key)
-    upd = jax.jit(pol.update)
+    upd = jax.jit(pol.fns.update)
 
-    us_sel = time_us(lambda: jax.block_until_ready(sel(st, key)))
-    us_upd = time_us(lambda: jax.block_until_ready(upd(st, arm, obs)))
+    us_sel = time_us(lambda: jax.block_until_ready(sel(pol.params, st, key)))
+    us_upd = time_us(lambda: jax.block_until_ready(upd(pol.params, st, arm, obs)))
     print(f"single controller: select {us_sel:.1f} us, update {us_upd:.1f} us "
           f"(decision interval 10,000 us => overhead {(us_sel+us_upd)/100:.2f}%)")
     rows.append({"name": "controller_select", "us_per_call": f"{us_sel:.1f}",
@@ -37,7 +40,8 @@ def run(fast: bool = True, out_json=None):
                  "derived": "single"})
 
     n = 63_720 if not fast else 8192
-    fleet = Fleet(pol, n)
+    # pin the vmap path so the vmap-vs-kernel rows stay distinct on TPU
+    fleet = Fleet(pol, n, use_kernel=False)
     states = fleet.init(jax.random.key(2))
     us_fleet = time_us(
         lambda: jax.block_until_ready(fleet.select(states, jax.random.key(3))),
@@ -48,17 +52,39 @@ def run(fast: bool = True, out_json=None):
     rows.append({"name": f"fleet_select_vmap_n{n}", "us_per_call": f"{us_fleet:.1f}",
                  "derived": f"{us_fleet/n*1000:.2f} ns/controller"})
 
-    mu, cnt = states["mu"], states["n"]
-    prev, t = states["prev"], jnp.maximum(states["t"], 2.0)
-    us_kernel = time_us(
+    # full fused interval step (update + select), vmapped fallback path
+    arms = fleet.select(states, jax.random.key(3))
+    fobs = Obs(
+        energy_j=jnp.full((n,), 20.0), uc=jnp.full((n,), 0.9),
+        uu=jnp.full((n,), 0.3), progress=jnp.full((n,), 1e-4),
+        reward=jnp.full((n,), -1.0), switched=jnp.zeros((n,), bool),
+        active=jnp.ones((n,), bool),
+    )
+    us_step = time_us(
         lambda: jax.block_until_ready(
-            ops.fleet_select(mu, cnt, prev, t, interpret=not ops.pallas_available())
+            fleet.step(states, arms, fobs, jax.random.key(4))[1]
         ),
+        n=20,
+    )
+    print(f"fleet of {n}: fused step (vmap path) {us_step:.1f} us "
+          f"({us_step/n*1000:.1f} ns/controller)")
+    rows.append({"name": f"fleet_step_vmap_n{n}", "us_per_call": f"{us_step:.1f}",
+                 "derived": f"{us_step/n*1000:.2f} ns/controller"})
+
+    # the fused Pallas kernel (interpret mode off-TPU, so time a small N)
+    nk = n if ops.pallas_available() else 2048
+    kf = Fleet(pol, nk, use_kernel=True, interpret=not ops.pallas_available())
+    kstates = kf.init(jax.random.key(5))
+    karms = kf.select(kstates, jax.random.key(6))
+    kobs = jax.tree.map(lambda x: x[:nk], fobs)
+    us_kernel = time_us(
+        lambda: jax.block_until_ready(kf.step(kstates, karms, kobs)[1]),
         n=5,
     )
-    rows.append({"name": f"fleet_select_kernel_n{n}", "us_per_call": f"{us_kernel:.1f}",
-                 "derived": "pallas (interpret mode on CPU)"})
-    print(f"fleet kernel (interpret on CPU): {us_kernel:.1f} us")
+    rows.append({"name": f"fleet_step_kernel_n{nk}", "us_per_call": f"{us_kernel:.1f}",
+                 "derived": "pallas" + ("" if ops.pallas_available()
+                                        else " (interpret mode on CPU)")})
+    print(f"fleet kernel step n={nk}: {us_kernel:.1f} us")
     return rows
 
 

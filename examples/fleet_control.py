@@ -1,6 +1,7 @@
 """Fleet-scale control plane: 63,720 controllers (10,620 Aurora nodes x
-6 GPUs) advanced in lockstep, plus the coordinated gang mode for
-synchronous data-parallel training.
+6 GPUs) advanced in lockstep through the fused select+update fleet
+step, plus the coordinated gang mode for synchronous data-parallel
+training.
 
   PYTHONPATH=src python examples/fleet_control.py
 """
@@ -12,6 +13,7 @@ import numpy as np
 
 from repro.core import energy_ucb, get_app, make_env_params, static_energy_kj
 from repro.core.fleet import Fleet, run_fleet_episode
+from repro.core.simulator import Obs
 from repro.kernels import ops
 
 
@@ -20,21 +22,56 @@ def main():
     fleet = Fleet(energy_ucb(), n)
     states = fleet.init(jax.random.key(0))
     arms = fleet.select(states, jax.random.key(1))  # warm up jit
+    kobs_keys = jax.random.split(jax.random.key(7), 3)
+    obs = Obs(
+        energy_j=jnp.full((n,), 20.0),
+        uc=jax.random.uniform(kobs_keys[0], (n,), minval=0.6, maxval=1.0),
+        uu=jax.random.uniform(kobs_keys[1], (n,), minval=0.2, maxval=0.5),
+        progress=jnp.full((n,), 1e-4),
+        reward=-jax.random.uniform(kobs_keys[2], (n,), minval=0.6, maxval=1.4),
+        switched=jnp.zeros((n,), bool),
+        active=jnp.ones((n,), bool),
+    )
+    states, arms = fleet.step(states, arms, obs, jax.random.key(10))  # warm up
     t0 = time.perf_counter()
     for i in range(10):
-        arms = fleet.select(states, jax.random.key(i))
+        states, arms = fleet.step(states, arms, obs, jax.random.key(11 + i))
     jax.block_until_ready(arms)
     dt = (time.perf_counter() - t0) / 10
-    print(f"fleet of {n} controllers: select {dt*1e3:.2f} ms/step "
-          f"({dt/n*1e9:.0f} ns/controller, vmap)")
+    print(f"fleet of {n} controllers: fused update+select {dt*1e3:.2f} ms/interval "
+          f"({dt/n*1e9:.0f} ns/controller, "
+          f"{'pallas' if fleet.use_kernel else 'vmap fallback'})")
 
-    arms_k = ops.fleet_select(
-        states["mu"], states["n"], states["prev"],
-        jnp.maximum(states["t"], 2.0),
-        interpret=not ops.pallas_available(),
+    # the fused Pallas kernel agrees with the per-controller policy path
+    nk = 2048
+    kern = Fleet(energy_ucb(), nk, use_kernel=True,
+                 interpret=not ops.pallas_available())
+    ref = Fleet(energy_ucb(), nk, use_kernel=False)
+    ks = kern.init(jax.random.key(2))
+    ka = kern.select(ks, jax.random.key(3))
+    kobs = jax.tree.map(lambda x: x[:nk], obs)
+    s1, a1 = kern.step(ks, ka, kobs)
+    s2, a2 = ref.step(ks, ka, kobs, jax.random.key(4))
+    agree = float(jnp.mean((a1 == a2).astype(jnp.float32)))
+    print(f"fused Pallas fleet step agrees with vmapped policy: {agree:.3f}")
+
+    # hyperparams-as-data: one fleet sweeps alpha per controller in the
+    # SAME kernel launch — no per-config retrace. Desynchronize the
+    # controllers first (every arm sampled with per-node noise) so the
+    # alpha lanes actually disagree.
+    for i in range(12):
+        noisy = kobs._replace(
+            reward=-jax.random.uniform(jax.random.key(100 + i), (nk,),
+                                       minval=0.6, maxval=1.4))
+        s1, a1 = kern.step(s1, a1, noisy)
+    alphas = jnp.linspace(0.05, 0.3, nk)
+    out = ops.fleet_step(
+        s1["mu"], s1["n"], s1["phat"], s1["pn"], s1["prev"], s1["t"],
+        a1, kobs.reward, kobs.progress, kobs.active.astype(jnp.float32),
+        alphas, 0.02, interpret=not ops.pallas_available(),
     )
-    agree = float(jnp.mean((arms_k == fleet.select(states, jax.random.key(3))).astype(jnp.float32)))
-    print(f"fused Pallas fleet kernel agrees with policy select: {agree:.3f}")
+    print(f"per-controller alpha sweep ({nk} configs, one launch): "
+          f"{len(np.unique(np.asarray(out[-1])))} distinct arms selected")
 
     # coordinated vs independent on a memory-bound app (8-node gang demo)
     p = make_env_params(get_app("miniswp"))

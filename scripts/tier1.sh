@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verification (ROADMAP.md).
+#
+#   scripts/tier1.sh          full tier-1 gate: pytest -x -q
+#   scripts/tier1.sh fast     fast lane: skip tests marked `slow`
+#
+# Extra args are forwarded to pytest, e.g. scripts/tier1.sh fast -k fleet
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+lane="${1:-full}"
+if [ "$lane" = "fast" ]; then
+  shift
+  exec python -m pytest -x -q -m "not slow" "$@"
+fi
+[ "$lane" = "full" ] && shift || true
+exec python -m pytest -x -q "$@"

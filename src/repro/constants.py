@@ -1,0 +1,12 @@
+"""Shared leaf constants (no intra-repro imports, so both the core and
+kernels packages can depend on it without layering cycles).
+
+Default EnergyUCB hyperparameters, recalibrated to the normalized
+reward scale in PR 1: rewards are ~[-1, 0], per-arm gaps on flat
+landscapes sit below 0.01, so the switching penalty must stay under
+that gap scale or SA-UCB locks into a near-best arm forever (see
+ROADMAP.md design notes and tests/test_bandit.py).
+"""
+
+DEFAULT_ALPHA = 0.1  # UCB exploration coefficient
+DEFAULT_LAM = 0.02  # switching penalty

@@ -9,20 +9,36 @@ from repro.core.calibration import (
 )
 from repro.core.policies import (
     Policy,
+    PolicyFns,
+    PolicyParams,
+    UCB_FNS,
     energy_ts,
     energy_ucb,
     eps_greedy,
+    make_policy_params,
     rr_freq,
+    stack_policy_params,
     static_policy,
+    sweep_policy_params,
 )
-from repro.core.regret import energy_regret_kj, saved_energy_kj, summarize
+from repro.core.regret import (
+    energy_regret_kj,
+    saved_energy_kj,
+    summarize,
+    summarize_sweep,
+)
 from repro.core.rewards import REWARD_VARIANTS, make_reward_fn
 from repro.core.rl import drlcap, rl_power
 from repro.core.rollout import (
+    RolloutSpec,
+    engine_trace_count,
+    reset_engine_trace_count,
     run_drlcap_cross,
     run_drlcap_protocol,
     run_episode,
+    run_fleet_episode,
     run_repeats,
+    run_sweep,
 )
 from repro.core.simulator import (
     K_ARMS,
@@ -38,10 +54,14 @@ from repro.core.simulator import (
 
 __all__ = [
     "DEFAULT_ARM", "FREQS_GHZ", "TABLE1_KJ", "AppModel", "app_names", "get_app",
-    "Policy", "energy_ucb", "energy_ts", "eps_greedy", "rr_freq", "static_policy",
+    "Policy", "PolicyFns", "PolicyParams", "UCB_FNS",
+    "energy_ucb", "energy_ts", "eps_greedy", "rr_freq", "static_policy",
+    "make_policy_params", "stack_policy_params", "sweep_policy_params",
     "drlcap", "rl_power", "make_reward_fn", "REWARD_VARIANTS",
-    "run_episode", "run_repeats", "run_drlcap_protocol", "run_drlcap_cross",
+    "RolloutSpec", "run_episode", "run_repeats", "run_sweep",
+    "run_fleet_episode", "run_drlcap_protocol", "run_drlcap_cross",
+    "engine_trace_count", "reset_engine_trace_count",
     "K_ARMS", "EnvParams", "Obs", "env_init", "env_step", "expected_rewards",
     "make_env_params", "max_steps_hint", "static_energy_kj",
-    "saved_energy_kj", "energy_regret_kj", "summarize",
+    "saved_energy_kj", "energy_regret_kj", "summarize", "summarize_sweep",
 ]

@@ -2,145 +2,155 @@
 
 The paper runs one controller per GPU on one node. At Aurora scale that
 is 10,620 nodes x 6 GPUs = 63,720 controllers; at TPU-pod scale, one per
-chip. Two modes:
+chip. The episode loops (independent vmapped controllers, and the
+coordinated gang that shares one controller across a synchronous
+data-parallel job) live in the unified rollout engine
+(repro.core.rollout.RolloutSpec); this module re-exports
+``run_fleet_episode`` and owns the step-at-a-time control plane:
 
-- independent: vmap'ed per-node controllers (exactly the paper's
-  semantics, batched). State is a struct-of-arrays pytree; one fused
-  update advances the whole fleet (see also kernels/fleet_ucb.py for
-  the Pallas TPU kernel of the select step).
-
-- coordinated: synchronous data-parallel training couples the fleet —
-  the slowest chip gates the step, so per-chip exploration straggles
-  everyone. One shared controller acts for the whole gang; per-chip
-  rewards are averaged (a pmean inside the step on real hardware),
-  which also cuts reward variance by ~1/N.
+- :class:`Fleet` holds struct-of-arrays controller state for N nodes and
+  advances the whole fleet per decision interval. ``step`` is the real
+  deployment path: at each interval boundary it applies the previous
+  interval's observations (update) and picks every node's next arm
+  (select) in ONE fused Pallas launch (kernels/fleet_ucb.fleet_step)
+  when the policy is kernel-compatible, falling back to vmapped policy
+  fns elsewhere. Hyperparameters are per-controller data, so a fleet
+  can sweep alpha x lambda across its own nodes.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies import Policy
-from repro.core.simulator import EnvParams, Obs, env_init, env_step
+from repro.core.policies import UCB_FNS, Policy, PolicyParams
+from repro.core.rollout import _row_where, run_fleet_episode  # noqa: F401
+from repro.core.simulator import Obs
+from repro.kernels import ops
 
 PyTree = Any
 
 
+def kernel_compatible(policy: Policy) -> bool:
+    """True when the fused SA-UCB kernel implements this policy exactly:
+    the EnergyUCB function set with QoS off, stationary means, and
+    optimistic init (the kernel has no feasible-set / warm-up lanes).
+    alpha/lam may be scalar or per-controller (N,) lanes."""
+    if policy.fns is not UCB_FNS:
+        return False
+    p: PolicyParams = policy.params
+    if any(jnp.ndim(leaf) > 1 for leaf in p) or any(
+        jnp.ndim(leaf) > 0 for leaf in (p.qos_delta, p.gamma, p.optimistic)
+    ):
+        return False
+    return bool(
+        jnp.all(p.qos_delta < 0.0)
+        and jnp.all(p.gamma >= 1.0)
+        and jnp.all(p.optimistic >= 0.5)
+    )
+
+
+def _params_axes(policy: Policy, n: int):
+    """vmap in_axes for the params pytree: per-controller (N,) lanes of
+    alpha/lam map over axis 0, everything else broadcasts. Only the
+    EnergyUCB family supports per-node lanes (prior_mu is (K,) per-arm,
+    never confused with a node axis)."""
+    p = policy.params
+    if not isinstance(p, PolicyParams):
+        return None
+    ax = lambda leaf: 0 if (jnp.ndim(leaf) == 1 and leaf.shape[0] == n) else None
+    return PolicyParams(
+        alpha=ax(p.alpha), lam=ax(p.lam), qos_delta=None, gamma=None,
+        optimistic=None,
+        prior_mu=0 if jnp.ndim(p.prior_mu) == 2 else None,
+        prior_n=ax(p.prior_n), default_arm=ax(p.default_arm),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _vmapped_fns(fns, pax):
+    """Module-level cache so every Fleet over the same function set (and
+    params-axes layout) shares one set of jitted vmapped callables — and
+    therefore one trace per shape signature across instances."""
+    return (
+        jax.jit(jax.vmap(fns.init, in_axes=(pax, 0))),
+        jax.jit(jax.vmap(fns.select, in_axes=(pax, 0, 0))),
+        jax.jit(jax.vmap(fns.update, in_axes=(pax, 0, 0, 0))),
+    )
+
+
 class Fleet:
-    """N independent controllers, advanced in lockstep via vmap."""
+    """N independent controllers, advanced in lockstep.
 
-    def __init__(self, policy: Policy, n: int):
-        self.policy = policy
-        self.n = n
-        self._init = jax.jit(jax.vmap(policy.init))
-        self._select = jax.jit(jax.vmap(policy.select))
-        self._update = jax.jit(jax.vmap(policy.update))
-
-    def init(self, key) -> PyTree:
-        return self._init(jax.random.split(key, self.n))
-
-    def select(self, states: PyTree, key) -> jax.Array:
-        return self._select(states, jax.random.split(key, self.n))
-
-    def update(self, states: PyTree, arms: jax.Array, obs: Obs) -> PyTree:
-        return self._update(states, arms, obs)
-
-
-def run_fleet_episode(
-    policy: Policy,
-    params: EnvParams,
-    key: jax.Array,
-    n_nodes: int,
-    max_steps: int,
-    coordinated: bool = False,
-) -> Dict[str, jax.Array]:
-    """Simulate n_nodes identical nodes running the same job.
-
-    independent: each node explores on its own (paper semantics).
-    coordinated: one controller; the gang's reward = mean over nodes;
-    the *step time* is gated by the slowest node, so with independent
-    per-node arms the gang pays max-over-nodes time (straggler effect) —
-    this is what the coordinated mode removes.
+    ``init/select/update`` are the vmapped policy fns (params passed as
+    data, so every Fleet shares one trace per function set). ``step`` is
+    the fused per-interval path; it dispatches to the Pallas kernel when
+    the policy is kernel-compatible and a TPU is present (or
+    ``interpret=True`` forces the kernel in interpret mode, which the
+    parity tests use).
     """
 
-    def indep(key):
-        k0, kr = jax.random.split(key)
-        pstates = jax.vmap(policy.init)(jax.random.split(k0, n_nodes))
-        estates = jax.vmap(lambda _: env_init(params))(jnp.arange(n_nodes))
-
-        def step(carry, k):
-            pstates, estates, gang_time = carry
-            ks = jax.random.split(k, 2 * n_nodes).reshape(2, n_nodes)
-            arms = jax.vmap(policy.select)(pstates, ks[0])
-            estates2, obs = jax.vmap(lambda e, a, kk: env_step(params, e, a, kk))(
-                estates, arms, ks[1]
-            )
-            pstates2 = jax.vmap(policy.update)(pstates, arms, obs)
-            active = obs.active
-            sel = lambda new, old: jax.tree.map(
-                lambda a, b: jnp.where(
-                    active.reshape((-1,) + (1,) * (a.ndim - 1)), a, b
-                ), new, old,
-            )
-            pstates = sel(pstates2, pstates)
-            estates = sel(estates2, estates)
-            # synchronous step: gang advances at the slowest node's pace
-            step_t = jnp.where(
-                jnp.any(active), jnp.max(params.t_rel[arms] * params.dt_s), 0.0
-            )
-            return (pstates, estates, gang_time + step_t), None
-
-        (pstates, estates, gang_time), _ = jax.lax.scan(
-            step, (pstates, estates, jnp.float32(0.0)),
-            jax.random.split(kr, max_steps),
+    def __init__(self, policy: Policy, n: int, use_kernel: Optional[bool] = None,
+                 interpret: bool = False):
+        self.policy = policy
+        self.n = n
+        self.interpret = interpret
+        self._init, self._select, self._update = _vmapped_fns(
+            policy.fns, _params_axes(policy, n)
         )
-        return {
-            "energy_kj": jnp.sum(estates.energy_kj),
-            "gang_time_s": gang_time,
-            "switches": jnp.sum(estates.switches),
-        }
-
-    def coord(key):
-        k0, kr = jax.random.split(key)
-        pstate = policy.init(k0)
-        estates = jax.vmap(lambda _: env_init(params))(jnp.arange(n_nodes))
-
-        def step(carry, k):
-            pstate, estates, gang_time = carry
-            k_sel, k_env = jax.random.split(k)
-            arm = policy.select(pstate, k_sel)
-            arms = jnp.full((n_nodes,), arm)
-            estates2, obs = jax.vmap(lambda e, a, kk: env_step(params, e, a, kk))(
-                estates, arms, jax.random.split(k_env, n_nodes)
+        if use_kernel is None:
+            use_kernel = kernel_compatible(policy) and (
+                ops.pallas_available() or interpret
             )
-            active = obs.active
-            # coordinated reward: fleet-mean (pmean on real hardware)
-            mean_obs = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32)), obs)
-            pstate2 = policy.update(pstate, arm, mean_obs)
-            any_active = jnp.any(active)
-            pstate = jax.tree.map(
-                lambda a, b: jnp.where(any_active, a, b), pstate2, pstate
+        elif use_kernel and not kernel_compatible(policy):
+            raise ValueError(
+                f"policy {policy.name!r} is not kernel-exact (QoS / "
+                "sliding-window / warm-up variants and non-UCB families "
+                "must use the vmapped path)"
             )
-            estates = jax.tree.map(
-                lambda a, b: jnp.where(
-                    active.reshape((-1,) + (1,) * (a.ndim - 1)), a, b
-                ), estates2, estates,
+        self.use_kernel = use_kernel
+
+    @property
+    def params(self) -> PyTree:
+        return self.policy.params
+
+    def init(self, key) -> PyTree:
+        return self._init(self.params, jax.random.split(key, self.n))
+
+    def select(self, states: PyTree, key) -> jax.Array:
+        return self._select(self.params, states, jax.random.split(key, self.n))
+
+    def update(self, states: PyTree, arms: jax.Array, obs: Obs) -> PyTree:
+        return self._update(self.params, states, arms, obs)
+
+    def step(
+        self, states: PyTree, arms: jax.Array, obs: Obs, key=None
+    ) -> Tuple[PyTree, jax.Array]:
+        """One decision interval for the whole fleet: fold in the
+        observations each node collected running ``arms`` (frozen where
+        the node's job finished), then select every node's next arm.
+        Returns (new_states, next_arms)."""
+        if self.use_kernel:
+            p: PolicyParams = self.params
+            mu, n, phat, pn, prev, t, nxt = ops.fleet_step(
+                states["mu"], states["n"], states["phat"], states["pn"],
+                states["prev"], states["t"], arms, obs.reward, obs.progress,
+                obs.active, p.alpha, p.lam, interpret=self.interpret,
             )
-            step_t = jnp.where(any_active, params.t_rel[arm] * params.dt_s, 0.0)
-            return (pstate, estates, gang_time + step_t), None
-
-        (pstate, estates, gang_time), _ = jax.lax.scan(
-            step, (pstate, estates, jnp.float32(0.0)),
-            jax.random.split(kr, max_steps),
-        )
-        return {
-            "energy_kj": jnp.sum(estates.energy_kj),
-            "gang_time_s": gang_time,
-            "switches": jnp.sum(estates.switches),
-        }
-
-    fn = coord if coordinated else indep
-    return jax.jit(fn)(key)
+            return (
+                {"mu": mu, "n": n, "phat": phat, "pn": pn, "prev": prev, "t": t},
+                nxt,
+            )
+        if key is None:
+            # a fixed default key would freeze the explore/exploit draws
+            # of stochastic policies across every interval
+            raise ValueError(
+                "Fleet.step needs a per-interval key on the vmapped path "
+                "(only the fused UCB kernel is key-free)"
+            )
+        updated = self._update(self.params, states, arms, obs)
+        states = _row_where(obs.active, updated, states)
+        return states, self._select(self.params, states,
+                                    jax.random.split(key, self.n))

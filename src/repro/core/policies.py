@@ -1,34 +1,85 @@
 """Bandit policies: EnergyUCB (Alg. 1) and the paper's baselines.
 
-All policies are triples of pure functions over jnp pytrees:
+Hyperparameters are DATA, not code. Every policy family is a triple of
+module-level pure functions
 
-    init(key) -> state
-    select(state, key) -> arm          (int32)
-    update(state, arm, obs) -> state
+    init(params, key)              -> state
+    select(params, state, key)     -> arm        (int32)
+    update(params, state, arm, obs)-> state
 
-so a whole episode runs under lax.scan, vmaps across seeds/apps, and
-scales to a fleet of controllers (repro.core.fleet).
+bundled in a hashable :class:`PolicyFns`, plus a pytree of
+hyperparameter arrays (:class:`PolicyParams` for the EnergyUCB family).
+Because the functions are module-level singletons and everything
+configurable flows through the params pytree, ONE jitted trace serves
+every EnergyUCB variant — the ablations (no optimistic init, no
+switching penalty), the QoS-constrained mode, the sliding-window mode,
+and the RooflineUCB warm start are all just different param values, and
+``jax.vmap`` batches seeds x apps x hyperparams x fleet nodes through
+the same trace (see repro.core.rollout.run_sweep).
+
+Flags are encoded static-safe: ``qos_delta < 0`` disables the QoS
+feasible set, ``gamma >= 1`` disables the sliding-window discount, and
+``optimistic`` is a 0/1 float — all branchless ``jnp.where`` selects, so
+a single vmap can mix variants.
+
+:class:`Policy` keeps the seed's ergonomic surface (``policy.init(key)``
+etc. bind the params) for interactive use; batch code should pass
+``policy.fns`` (static) and ``policy.params`` (traced) separately.
+
+Default hyperparameters: rewards are normalized to ~[-1, 0] by the
+app's f_max scale, so per-arm gaps on flat landscapes are below 0.01.
+The switching penalty must sit BELOW that gap scale or SA-UCB locks
+into a near-best arm forever (linear regret); alpha=0.2's exploration
+spend exceeds a single-job horizon at these gaps. alpha=0.1 /
+lam=0.02 converge on every calibrated app while still cutting switches
+by >3x (see tests/test_bandit.py).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from dataclasses import dataclass, replace
+from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.constants import DEFAULT_ALPHA, DEFAULT_LAM
 from repro.core.simulator import K_ARMS, Obs
 
 PyTree = Any
 
 
-@dataclass(frozen=True)
+class PolicyFns(NamedTuple):
+    """Hashable triple of module-level pure functions (the static half
+    of a policy; jit keys on function identity, so reusing one of these
+    singletons across configs means zero retraces)."""
+
+    init: Callable[[PyTree, jax.Array], PyTree]
+    select: Callable[[PyTree, PyTree, jax.Array], jax.Array]
+    update: Callable[[PyTree, PyTree, jax.Array, Obs], PyTree]
+
+
+@dataclass(frozen=True, eq=False)
 class Policy:
+    """A (fns, params) pair. ``eq=False``: params hold arrays, and jit
+    never needs to hash a Policy — engines take fns/params separately."""
+
     name: str
-    init: Callable[[jax.Array], PyTree]
-    select: Callable[[PyTree, jax.Array], jax.Array]
-    update: Callable[[PyTree, jax.Array, Obs], PyTree]
+    fns: PolicyFns
+    params: PyTree
+
+    # Seed-compatible bound surface (closures over params) for
+    # interactive / per-step use; batch paths unpack fns/params.
+    def init(self, key):
+        return self.fns.init(self.params, key)
+
+    def select(self, state, key):
+        return self.fns.select(self.params, state, key)
+
+    def update(self, state, arm, obs):
+        return self.fns.update(self.params, state, arm, obs)
+
+    def with_params(self, params) -> "Policy":
+        return replace(self, params=params)
 
 
 def _masked_argmax(scores: jax.Array, feasible: jax.Array) -> jax.Array:
@@ -41,14 +92,167 @@ def _masked_argmax(scores: jax.Array, feasible: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# EnergyUCB (Algorithm 1) + QoS-constrained variant (§3.3)
+# EnergyUCB (Algorithm 1) + QoS-constrained variant (§3.3) — one function
+# set; every paper variant is a PolicyParams value.
 # ---------------------------------------------------------------------------
+
+
+class PolicyParams(NamedTuple):
+    """EnergyUCB-family hyperparameters as a pytree of arrays.
+
+    All leaves are arrays so configs stack/vmap; sentinel encodings keep
+    every variant reachable without Python branches:
+
+    - ``qos_delta < 0``  -> unconstrained (QoS feasible set disabled)
+    - ``gamma >= 1``     -> stationary means (no sliding window)
+    - ``optimistic``     -> 1.0 = optimistic init; 0.0 = round-robin
+                            warm-up (the 'w/o Opt. Ini.' ablation)
+    - ``prior_mu/prior_n`` -> RooflineUCB warm start; prior_n == 0 with
+                            prior_mu == mu_init reproduces the flat init
+    """
+
+    alpha: jax.Array  # () exploration coefficient
+    lam: jax.Array  # () switching penalty
+    qos_delta: jax.Array  # () slowdown budget; negative disables
+    gamma: jax.Array  # () sliding-window discount; >=1 disables
+    optimistic: jax.Array  # () 0/1 flag
+    prior_mu: jax.Array  # (K,) initial mean-reward estimates
+    prior_n: jax.Array  # () prior pseudo-count
+    default_arm: jax.Array  # () int32 reference arm (f_max)
+
+
+def make_policy_params(
+    k: int = K_ARMS,
+    alpha: float = DEFAULT_ALPHA,
+    switching_penalty: float = DEFAULT_LAM,
+    mu_init: float = 0.0,
+    optimistic_init: bool = True,
+    qos_delta: Optional[float] = None,
+    default_arm: int = K_ARMS - 1,
+    window_discount: Optional[float] = None,
+    prior_mu: Optional[jax.Array] = None,
+    prior_n: float = 0.0,
+) -> PolicyParams:
+    pm = (
+        jnp.full((k,), mu_init, jnp.float32)
+        if prior_mu is None
+        else jnp.asarray(prior_mu, jnp.float32)
+    )
+    return PolicyParams(
+        alpha=jnp.float32(alpha),
+        lam=jnp.float32(switching_penalty),
+        qos_delta=jnp.float32(-1.0 if qos_delta is None else qos_delta),
+        gamma=jnp.float32(1.0 if window_discount is None else window_discount),
+        optimistic=jnp.float32(1.0 if optimistic_init else 0.0),
+        prior_mu=pm,
+        prior_n=jnp.float32(prior_n),
+        default_arm=jnp.int32(default_arm),
+    )
+
+
+def stack_policy_params(cfgs: Sequence[PolicyParams]) -> PolicyParams:
+    """Stack configs along a new leading axis for vmapped sweeps."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *cfgs)
+
+
+def sweep_policy_params(alphas, lams, **common) -> PolicyParams:
+    """The alpha x lambda grid as one stacked PolicyParams (row-major)."""
+    return stack_policy_params(
+        [
+            make_policy_params(alpha=float(a), switching_penalty=float(l), **common)
+            for a in alphas
+            for l in lams
+        ]
+    )
+
+
+def ucb_init(params: PolicyParams, key) -> PyTree:
+    del key
+    k = params.prior_mu.shape[-1]
+    return {
+        "mu": params.prior_mu,
+        "n": jnp.full((k,), params.prior_n, jnp.float32),
+        "prev": jnp.asarray(params.default_arm, jnp.int32),
+        "t": jnp.float32(0.0),
+        "phat": jnp.zeros((k,), jnp.float32),
+        "pn": jnp.zeros((k,), jnp.float32),
+    }
+
+
+def ucb_select(params: PolicyParams, state: PyTree, key) -> jax.Array:
+    """SA-UCB_i = mu_i + alpha*sqrt(ln t / max(1, n_i)) - lam*1{i != prev},
+    restricted to the QoS-feasible set when qos_delta >= 0."""
+    del key
+    k = state["mu"].shape[-1]
+    arms = jnp.arange(k)
+    t = jnp.maximum(state["t"] + 1.0, 2.0)
+    bonus = params.alpha * jnp.sqrt(jnp.log(t) / jnp.maximum(state["n"], 1.0))
+    # sliding-window optimism: under a discount, an arm's effective count
+    # decays toward 0 between pulls, but the bonus is floored at n=1 — a
+    # noise-corrupted stale estimate would never be revisited. Shrink the
+    # estimate back to the optimistic prior (pseudo-weight 0.25: heals
+    # within ~2 windows without over-exploring the tail) so stale arms
+    # decay to "untried" instead of "bad forever". Stationary
+    # (gamma >= 1) keeps the raw mean bit-exactly.
+    w0 = 0.25
+    shrunk = (state["n"] * state["mu"] + w0 * params.prior_mu) / (state["n"] + w0)
+    mu_eff = jnp.where(params.gamma < 1.0, shrunk, state["mu"])
+    sa = mu_eff + bonus - params.lam * (arms != state["prev"])
+    # round-robin warm-up over all K arms (the naive-UCB1 ablation)
+    untried = state["n"] < 1.0
+    warm = jnp.where(untried, 1e9 - arms * 1.0, -1e9)
+    sa = jnp.where((params.optimistic < 0.5) & jnp.any(untried), warm, sa)
+    # feasible set {i : 1 - p_hat_i / p_hat[f_max] <= delta}; untried
+    # arms stay feasible (optimism under uncertainty)
+    p_ref = jnp.where(
+        state["pn"][params.default_arm] > 0,
+        state["phat"][params.default_arm],
+        jnp.inf,
+    )
+    slowdown = 1.0 - state["phat"] / p_ref
+    feasible = (
+        (params.qos_delta < 0.0) | (state["pn"] < 1.0) | (slowdown <= params.qos_delta)
+    )
+    return _masked_argmax(sa, feasible)
+
+
+def ucb_update(params: PolicyParams, state: PyTree, arm, obs: Obs) -> PyTree:
+    # stationary incremental mean, and the discounted (sliding-window)
+    # effective-count mean; gamma selects elementwise so both live in
+    # one trace (and gamma can vary across a vmapped config axis)
+    g = params.gamma
+    n_inc = state["n"].at[arm].add(1.0)
+    mu_inc = state["mu"].at[arm].set(
+        state["mu"][arm] + (obs.reward - state["mu"][arm]) / n_inc[arm]
+    )
+    n_dis = (state["n"] * g).at[arm].add(1.0)
+    mu_dis = state["mu"].at[arm].set(
+        (state["mu"][arm] * state["n"][arm] * g + obs.reward) / n_dis[arm]
+    )
+    stationary = g >= 1.0
+    n = jnp.where(stationary, n_inc, n_dis)
+    mu = jnp.where(stationary, mu_inc, mu_dis)
+    pn = state["pn"].at[arm].add(1.0)
+    phat = state["phat"].at[arm].set(
+        state["phat"][arm] + (obs.progress - state["phat"][arm]) / pn[arm]
+    )
+    return {
+        "mu": mu,
+        "n": n,
+        "prev": jnp.asarray(arm, jnp.int32),
+        "t": state["t"] + 1.0,
+        "phat": phat,
+        "pn": pn,
+    }
+
+
+UCB_FNS = PolicyFns(ucb_init, ucb_select, ucb_update)
 
 
 def energy_ucb(
     k: int = K_ARMS,
-    alpha: float = 0.2,
-    switching_penalty: float = 0.05,
+    alpha: float = DEFAULT_ALPHA,
+    switching_penalty: float = DEFAULT_LAM,
     mu_init: float = 0.0,
     optimistic_init: bool = True,
     qos_delta: Optional[float] = None,
@@ -58,168 +262,154 @@ def energy_ucb(
     prior_n: float = 0.0,
     name: Optional[str] = None,
 ) -> Policy:
-    """SA-UCB_i = mu_i + alpha*sqrt(ln t / max(1, n_i)) - lam*1{i != prev}.
+    """Every EnergyUCB variant over one function set (UCB_FNS):
 
-    - optimistic_init=False reproduces the 'w/o Opt. Ini.' ablation: a
-      forced round-robin warm-up over all K arms (naive UCB1 init).
-    - qos_delta enables Constrained EnergyUCB: arms restricted to the
-      feasible set {i : 1 - p_hat_i / p_hat[f_max] <= delta} (untried
-      arms stay feasible — optimism under uncertainty).
+    - optimistic_init=False reproduces the 'w/o Opt. Ini.' ablation.
+    - qos_delta enables Constrained EnergyUCB (§3.3).
     - window_discount (gamma<1) gives the beyond-paper sliding-window
       SW-SA-UCB for non-stationary phases.
     - prior_mu/prior_n give the beyond-paper RooflineUCB warm start.
     """
-    lam = switching_penalty
-
-    def init(key):
-        del key
-        mu0 = jnp.full((k,), mu_init, jnp.float32)
-        n0 = jnp.zeros((k,), jnp.float32)
-        if prior_mu is not None:
-            mu0 = jnp.asarray(prior_mu, jnp.float32)
-            n0 = jnp.full((k,), float(prior_n), jnp.float32)
-        return {
-            "mu": mu0,
-            "n": n0,
-            "prev": jnp.int32(default_arm),
-            "t": jnp.float32(0.0),
-            "phat": jnp.zeros((k,), jnp.float32),
-            "pn": jnp.zeros((k,), jnp.float32),
-        }
-
-    def select(state, key):
-        del key
-        t = jnp.maximum(state["t"] + 1.0, 2.0)
-        bonus = alpha * jnp.sqrt(jnp.log(t) / jnp.maximum(state["n"], 1.0))
-        sa = state["mu"] + bonus - lam * (jnp.arange(k) != state["prev"])
-        if not optimistic_init:
-            # round-robin warm-up: play each arm once first
-            tt = state["t"].astype(jnp.int32)
-            rr = jnp.mod(tt, k)
-            untried = state["n"] < 1.0
-            sa = jnp.where(jnp.any(untried), jnp.where(untried, 1e9 - jnp.arange(k) * 1.0, -1e9), sa)
-            del rr
-        feasible = jnp.ones((k,), bool)
-        if qos_delta is not None:
-            p_ref = jnp.where(
-                state["pn"][default_arm] > 0, state["phat"][default_arm], jnp.inf
-            )
-            slowdown = 1.0 - state["phat"] / p_ref
-            feasible = (state["pn"] < 1.0) | (slowdown <= qos_delta)
-        return _masked_argmax(sa, feasible)
-
-    def update(state, arm, obs: Obs):
-        n = state["n"].at[arm].add(1.0)
-        mu = state["mu"]
-        if window_discount is not None:
-            g = window_discount
-            n = state["n"] * g
-            n = n.at[arm].add(1.0)
-            mu = mu * 1.0  # discounted mean via effective counts below
-            mu = mu.at[arm].set(
-                (state["mu"][arm] * state["n"][arm] * g + obs.reward) / n[arm]
-            )
-        else:
-            mu = mu.at[arm].set(
-                state["mu"][arm] + (obs.reward - state["mu"][arm]) / n[arm]
-            )
-        pn = state["pn"].at[arm].add(1.0)
-        phat = state["phat"].at[arm].set(
-            state["phat"][arm] + (obs.progress - state["phat"][arm]) / pn[arm]
-        )
-        return {
-            "mu": mu,
-            "n": n,
-            "prev": jnp.asarray(arm, jnp.int32),
-            "t": state["t"] + 1.0,
-            "phat": phat,
-            "pn": pn,
-        }
-
+    params = make_policy_params(
+        k=k,
+        alpha=alpha,
+        switching_penalty=switching_penalty,
+        mu_init=mu_init,
+        optimistic_init=optimistic_init,
+        qos_delta=qos_delta,
+        default_arm=default_arm,
+        window_discount=window_discount,
+        prior_mu=prior_mu,
+        prior_n=prior_n,
+    )
     nm = name or (
         "EnergyUCB"
         + ("" if optimistic_init else "-noOptInit")
-        + ("" if lam else "-noPenalty")
+        + ("" if switching_penalty else "-noPenalty")
         + (f"-QoS{qos_delta}" if qos_delta is not None else "")
         + (f"-SW{window_discount}" if window_discount else "")
     )
-    return Policy(nm, init, select, update)
+    return Policy(nm, UCB_FNS, params)
 
 
 # ---------------------------------------------------------------------------
-# Baselines (§4.1)
+# Baselines (§4.1) — same fns/params shape so the one rollout engine
+# runs them unchanged.
 # ---------------------------------------------------------------------------
+
+
+def _static_init(params, key):
+    del params, key
+    return {"t": jnp.float32(0.0)}
+
+
+def _static_select(params, state, key):
+    del state, key
+    return jnp.asarray(params["arm"], jnp.int32)
+
+
+def _static_update(params, state, arm, obs):
+    del params, arm, obs
+    return {"t": state["t"] + 1.0}
+
+
+STATIC_FNS = PolicyFns(_static_init, _static_select, _static_update)
 
 
 def static_policy(arm: int, k: int = K_ARMS) -> Policy:
-    def init(key):
-        return {"t": jnp.float32(0.0)}
+    del k
+    return Policy(f"Static-{arm}", STATIC_FNS, {"arm": jnp.int32(arm)})
 
-    def select(state, key):
-        return jnp.int32(arm)
 
-    def update(state, a, obs):
-        return {"t": state["t"] + 1.0}
+def _rr_init(params, key):
+    del params, key
+    return {"t": jnp.int32(0)}
 
-    return Policy(f"Static-{arm}", init, select, update)
+
+def _rr_select(params, state, key):
+    del key
+    return jnp.mod(state["t"], params["k"]).astype(jnp.int32)
+
+
+def _rr_update(params, state, arm, obs):
+    del params, arm, obs
+    return {"t": state["t"] + 1}
+
+
+RR_FNS = PolicyFns(_rr_init, _rr_select, _rr_update)
 
 
 def rr_freq(k: int = K_ARMS) -> Policy:
-    def init(key):
-        return {"t": jnp.int32(0)}
+    return Policy("RRFreq", RR_FNS, {"k": jnp.int32(k)})
 
-    def select(state, key):
-        return jnp.mod(state["t"], k).astype(jnp.int32)
 
-    def update(state, a, obs):
-        return {"t": state["t"] + 1}
+def _eps_init(params, key):
+    del key
+    return {
+        "mu": params["mu0"],
+        "n": jnp.zeros_like(params["mu0"]),
+        "t": jnp.float32(0.0),
+    }
 
-    return Policy("RRFreq", init, select, update)
+
+def _eps_select(params, state, key):
+    k = state["mu"].shape[-1]
+    k1, k2 = jax.random.split(key)
+    explore = jax.random.bernoulli(k1, params["eps"])
+    rand_arm = jax.random.randint(k2, (), 0, k)
+    return jnp.where(explore, rand_arm, jnp.argmax(state["mu"])).astype(jnp.int32)
+
+
+def _mean_update(state, arm, obs):
+    n = state["n"].at[arm].add(1.0)
+    mu = state["mu"].at[arm].set(
+        state["mu"][arm] + (obs.reward - state["mu"][arm]) / n[arm]
+    )
+    return mu, n
+
+
+def _eps_update(params, state, arm, obs):
+    del params
+    mu, n = _mean_update(state, arm, obs)
+    return {"mu": mu, "n": n, "t": state["t"] + 1.0}
+
+
+EPS_FNS = PolicyFns(_eps_init, _eps_select, _eps_update)
 
 
 def eps_greedy(k: int = K_ARMS, eps: float = 0.05, mu_init: float = 0.0) -> Policy:
-    def init(key):
-        return {
-            "mu": jnp.full((k,), mu_init, jnp.float32),
-            "n": jnp.zeros((k,), jnp.float32),
-            "t": jnp.float32(0.0),
-        }
+    params = {
+        "eps": jnp.float32(eps),
+        "mu0": jnp.full((k,), mu_init, jnp.float32),
+    }
+    return Policy("eps-greedy", EPS_FNS, params)
 
-    def select(state, key):
-        k1, k2 = jax.random.split(key)
-        explore = jax.random.bernoulli(k1, eps)
-        rand_arm = jax.random.randint(k2, (), 0, k)
-        return jnp.where(explore, rand_arm, jnp.argmax(state["mu"])).astype(jnp.int32)
 
-    def update(state, arm, obs):
-        n = state["n"].at[arm].add(1.0)
-        mu = state["mu"].at[arm].set(
-            state["mu"][arm] + (obs.reward - state["mu"][arm]) / n[arm]
-        )
-        return {"mu": mu, "n": n, "t": state["t"] + 1.0}
+def _ts_init(params, key):
+    del key
+    return {"mu": params["mu0"], "n": jnp.zeros_like(params["mu0"])}
 
-    return Policy(f"eps-greedy", init, select, update)
+
+def _ts_select(params, state, key):
+    k = state["mu"].shape[-1]
+    std = params["sigma0"] / jnp.sqrt(state["n"] + 1.0)
+    theta = state["mu"] + std * jax.random.normal(key, (k,))
+    return jnp.argmax(theta).astype(jnp.int32)
+
+
+def _ts_update(params, state, arm, obs):
+    del params
+    mu, n = _mean_update(state, arm, obs)
+    return {"mu": mu, "n": n}
+
+
+TS_FNS = PolicyFns(_ts_init, _ts_select, _ts_update)
 
 
 def energy_ts(k: int = K_ARMS, sigma0: float = 0.5, mu_init: float = 0.0) -> Policy:
     """Gaussian Thompson sampling over per-arm mean rewards."""
-
-    def init(key):
-        return {
-            "mu": jnp.full((k,), mu_init, jnp.float32),
-            "n": jnp.zeros((k,), jnp.float32),
-        }
-
-    def select(state, key):
-        std = sigma0 / jnp.sqrt(state["n"] + 1.0)
-        theta = state["mu"] + std * jax.random.normal(key, (k,))
-        return jnp.argmax(theta).astype(jnp.int32)
-
-    def update(state, arm, obs):
-        n = state["n"].at[arm].add(1.0)
-        mu = state["mu"].at[arm].set(
-            state["mu"][arm] + (obs.reward - state["mu"][arm]) / n[arm]
-        )
-        return {"mu": mu, "n": n}
-
-    return Policy("EnergyTS", init, select, update)
+    params = {
+        "sigma0": jnp.float32(sigma0),
+        "mu0": jnp.full((k,), mu_init, jnp.float32),
+    }
+    return Policy("EnergyTS", TS_FNS, params)

@@ -1,8 +1,9 @@
 """Evaluation metrics (§4.1): saved energy vs. the f_max default, and
-energy regret vs. the best static frequency."""
+energy regret vs. the best static frequency. ``summarize_sweep`` is the
+batched counterpart for run_sweep's (n_configs, n_repeats) outputs."""
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List
 
 import numpy as np
 
@@ -32,3 +33,10 @@ def summarize(params: EnvParams, energies: np.ndarray) -> Dict[str, float]:
         "saved_energy_kj": saved_energy_kj(params, e),
         "energy_regret_kj": energy_regret_kj(params, e),
     }
+
+
+def summarize_sweep(params: EnvParams, energies: np.ndarray) -> List[Dict[str, float]]:
+    """Row-wise summarize for a batched sweep: ``energies`` is
+    (n_configs, n_repeats) from rollout.run_sweep; one summary per
+    config row."""
+    return [summarize(params, row) for row in np.atleast_2d(np.asarray(energies))]

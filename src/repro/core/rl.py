@@ -5,16 +5,21 @@
 - DRLCap [Wang+ 2024]: a small DQN (MLP over counter features) with a
   target network. The offline/online protocol variants (20% pretrain +
   1.25x-scaled deployment, -Online, -Cross) live in repro.core.rollout.
+
+Both follow the hyperparams-as-data convention (repro.core.policies):
+module-level fns + a params pytree, so the unified rollout engine runs
+them without retracing per configuration. DRLCap's trainable/frozen
+switch is a data flag resolved with lax.cond, so the offline protocol's
+two phases share one trace.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies import Policy
+from repro.core.policies import Policy, PolicyFns
 from repro.core.simulator import K_ARMS, Obs
 
 N_BINS = 8
@@ -26,6 +31,35 @@ def _ratio_bin(uc, uu):
     return jnp.searchsorted(edges, r).astype(jnp.int32)
 
 
+def _rlp_init(params, key):
+    del key
+    return {
+        "Q": params["q0"],
+        "s": jnp.int32(N_BINS // 2),
+        "t": jnp.float32(0.0),
+    }
+
+
+def _rlp_select(params, state, key):
+    k = state["Q"].shape[-1]
+    k1, k2 = jax.random.split(key)
+    explore = jax.random.bernoulli(k1, params["eps"])
+    rand_arm = jax.random.randint(k2, (), 0, k)
+    greedy = jnp.argmax(state["Q"][state["s"]])
+    return jnp.where(explore, rand_arm, greedy).astype(jnp.int32)
+
+
+def _rlp_update(params, state, arm, obs: Obs):
+    s, Q = state["s"], state["Q"]
+    s2 = _ratio_bin(obs.uc, obs.uu)
+    td = obs.reward + params["gamma"] * jnp.max(Q[s2]) - Q[s, arm]
+    Q = Q.at[s, arm].add(params["lr"] * td)
+    return {"Q": Q, "s": s2, "t": state["t"] + 1.0}
+
+
+RL_POWER_FNS = PolicyFns(_rlp_init, _rlp_select, _rlp_update)
+
+
 def rl_power(
     k: int = K_ARMS,
     lr: float = 0.2,
@@ -33,28 +67,13 @@ def rl_power(
     eps: float = 0.1,
     q_init: float = 0.0,
 ) -> Policy:
-    def init(key):
-        return {
-            "Q": jnp.full((N_BINS, k), q_init, jnp.float32),
-            "s": jnp.int32(N_BINS // 2),
-            "t": jnp.float32(0.0),
-        }
-
-    def select(state, key):
-        k1, k2 = jax.random.split(key)
-        explore = jax.random.bernoulli(k1, eps)
-        rand_arm = jax.random.randint(k2, (), 0, k)
-        greedy = jnp.argmax(state["Q"][state["s"]])
-        return jnp.where(explore, rand_arm, greedy).astype(jnp.int32)
-
-    def update(state, arm, obs: Obs):
-        s, Q = state["s"], state["Q"]
-        s2 = _ratio_bin(obs.uc, obs.uu)
-        td = obs.reward + gamma * jnp.max(Q[s2]) - Q[s, arm]
-        Q = Q.at[s, arm].add(lr * td)
-        return {"Q": Q, "s": s2, "t": state["t"] + 1.0}
-
-    return Policy("RL-Power", init, select, update)
+    params = {
+        "q0": jnp.full((N_BINS, k), q_init, jnp.float32),
+        "lr": jnp.float32(lr),
+        "gamma": jnp.float32(gamma),
+        "eps": jnp.float32(eps),
+    }
+    return Policy("RL-Power", RL_POWER_FNS, params)
 
 
 # ---------------------------------------------------------------------------
@@ -89,6 +108,71 @@ def _qnet(p, phi):
     return h @ p["w2"] + p["b2"]
 
 
+def _drl_init(params, key):
+    k1, k2 = jax.random.split(key)
+    net = {
+        "w1": jax.random.normal(k1, (_FDIM, _HID)) * 0.1,
+        "b1": jnp.zeros((_HID,)),
+        "w2": jax.random.normal(k2, (_HID, K_ARMS)) * 0.1,
+        "b2": jnp.zeros((K_ARMS,)),
+    }
+    dummy = Obs(
+        energy_j=jnp.float32(20.0), uc=jnp.float32(0.9), uu=jnp.float32(0.3),
+        progress=jnp.float32(1e-4), reward=jnp.float32(-1.0),
+        switched=jnp.bool_(False), active=jnp.bool_(True),
+    )
+    return {
+        "net": net,
+        "target": jax.tree.map(jnp.copy, net),
+        # initial prev-arm feature = the environment's f_max default arm
+        "phi": _features(params["k"] - 1, dummy),
+        "t": jnp.float32(0.0),
+    }
+
+
+def _drl_select(params, state, key):
+    k1, k2 = jax.random.split(key)
+    eps = jnp.maximum(0.05, 0.5 * jnp.exp(-state["t"] / 500.0))
+    explore = jax.random.bernoulli(k1, eps)
+    rand_arm = jax.random.randint(k2, (), 0, params["k"])
+    # network output stays K_ARMS-wide (static shapes); arms beyond the
+    # environment's k are masked out of the greedy pick
+    q = _qnet(state["net"], state["phi"])
+    q = jnp.where(jnp.arange(K_ARMS) < params["k"], q, -jnp.inf)
+    greedy = jnp.argmax(q)
+    return jnp.where(explore, rand_arm, greedy).astype(jnp.int32)
+
+
+def _drl_update(params, state, arm, obs: Obs):
+    phi2 = _features(arm, obs)
+    t = state["t"] + 1.0
+
+    def frozen(_):
+        return {**state, "phi": phi2, "t": t}
+
+    def trained(_):
+        target = obs.reward + params["gamma"] * jnp.max(
+            _qnet(state["target"], phi2)
+        )
+
+        def td_loss(net):
+            q = _qnet(net, state["phi"])[arm]
+            return jnp.square(q - jax.lax.stop_gradient(target))
+
+        grads = jax.grad(td_loss)(state["net"])
+        net = jax.tree.map(lambda p, g: p - params["lr"] * g, state["net"], grads)
+        sync = jnp.mod(t, params["sync_every"]) < 0.5
+        tgt = jax.tree.map(
+            lambda tp, np_: jnp.where(sync, np_, tp), state["target"], net
+        )
+        return {"net": net, "target": tgt, "phi": phi2, "t": t}
+
+    return jax.lax.cond(params["trainable"] > 0.5, trained, frozen, None)
+
+
+DRLCAP_FNS = PolicyFns(_drl_init, _drl_select, _drl_update)
+
+
 def drlcap(
     k: int = K_ARMS,
     lr: float = 1e-2,
@@ -97,59 +181,24 @@ def drlcap(
     trainable: bool = True,
     name: str = "DRLCap",
 ) -> Policy:
-    def init(key):
-        k1, k2 = jax.random.split(key)
-        net = {
-            "w1": jax.random.normal(k1, (_FDIM, _HID)) * 0.1,
-            "b1": jnp.zeros((_HID,)),
-            "w2": jax.random.normal(k2, (_HID, k)) * 0.1,
-            "b2": jnp.zeros((k,)),
-        }
-        dummy = Obs(
-            energy_j=jnp.float32(20.0), uc=jnp.float32(0.9), uu=jnp.float32(0.3),
-            progress=jnp.float32(1e-4), reward=jnp.float32(-1.0),
-            switched=jnp.bool_(False), active=jnp.bool_(True),
-        )
-        return {
-            "net": net,
-            "target": jax.tree.map(jnp.copy, net),
-            "phi": _features(jnp.int32(k - 1), dummy),
-            "t": jnp.float32(0.0),
-        }
-
-    def select(state, key):
-        k1, k2 = jax.random.split(key)
-        eps = jnp.maximum(0.05, 0.5 * jnp.exp(-state["t"] / 500.0))
-        explore = jax.random.bernoulli(k1, eps)
-        rand_arm = jax.random.randint(k2, (), 0, k)
-        greedy = jnp.argmax(_qnet(state["net"], state["phi"]))
-        return jnp.where(explore, rand_arm, greedy).astype(jnp.int32)
-
-    def update(state, arm, obs: Obs):
-        phi2 = _features(arm, obs)
-        if not trainable:
-            return {**state, "phi": phi2, "t": state["t"] + 1.0}
-        target = obs.reward + gamma * jnp.max(_qnet(state["target"], phi2))
-
-        def td_loss(net):
-            q = _qnet(net, state["phi"])[arm]
-            return jnp.square(q - jax.lax.stop_gradient(target))
-
-        grads = jax.grad(td_loss)(state["net"])
-        net = jax.tree.map(lambda p, g: p - lr * g, state["net"], grads)
-        t = state["t"] + 1.0
-        sync = jnp.mod(t, sync_every) < 0.5
-        tgt = jax.tree.map(
-            lambda tp, np_: jnp.where(sync, np_, tp), state["target"], net
-        )
-        return {"net": net, "target": tgt, "phi": phi2, "t": t}
-
-    return Policy(name, init, select, update)
+    if k > K_ARMS:
+        raise ValueError(f"DRLCap network is sized for at most {K_ARMS} arms")
+    params = {
+        "k": jnp.int32(k),
+        "lr": jnp.float32(lr),
+        "gamma": jnp.float32(gamma),
+        "sync_every": jnp.float32(sync_every),
+        "trainable": jnp.float32(1.0 if trainable else 0.0),
+    }
+    return Policy(name, DRLCAP_FNS, params)
 
 
 def freeze(policy: Policy, name=None) -> Policy:
     """Deployment-mode wrapper: state keeps tracking features but stops
-    learning (used by the DRLCap offline->online protocol)."""
-    if policy.name.startswith("DRLCap"):
-        return drlcap(trainable=False, name=name or policy.name + "-frozen")
-    raise ValueError("freeze() currently supports DRLCap policies")
+    learning (used by the DRLCap offline->online protocol). With the
+    trainable flag as data, this is a pure params edit — no retrace."""
+    if not (isinstance(policy.params, dict) and "trainable" in policy.params):
+        raise ValueError("freeze() supports policies with a 'trainable' flag")
+    frozen = dict(policy.params)
+    frozen["trainable"] = jnp.float32(0.0)
+    return Policy(name or policy.name + "-frozen", policy.fns, frozen)

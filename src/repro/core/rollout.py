@@ -1,20 +1,36 @@
-"""Jitted episode rollouts: the paper's experimental loop.
+"""One rollout engine for every experimental loop in the repo.
+
+The seed grew three hand-rolled ``lax.scan`` loops (the single-episode
+``_episode``, and the independent / coordinated fleet loops in
+``fleet.py``). They are now one engine with a declared batch topology:
+
+    RolloutSpec(n_nodes=1)                    the paper's loop (§3.1)
+    RolloutSpec(n_nodes=N)                    N vmapped controllers,
+                                              synchronous gang timing
+    RolloutSpec(n_nodes=N, coordinated=True)  one shared controller,
+                                              fleet-mean reward
+
+The engine takes the policy split into a static ``PolicyFns`` triple and
+a traced hyperparameter pytree, so ONE jitted trace serves every
+EnergyUCB variant, and ``run_sweep`` vmaps configs x seeds through that
+single trace (``engine_trace_count`` exists so tests can assert it).
+``fleet.run_fleet_episode``, the DRLCap protocols (§4.1) and the
+benchmarks all route through here.
 
 An episode = lax.scan over decision intervals with a masked variable
 horizon (the job completes when cumulative progress reaches 1, §3.1).
-``run_repeats`` vmaps over seeds (paper: 10 repeats). The DRLCap
-offline/online protocols (§4.1) are built from two-phase rollouts.
+``run_repeats`` vmaps over seeds (paper: 10 repeats).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies import Policy
+from repro.core.policies import Policy, PolicyFns
 from repro.core.simulator import (
     EnvParams,
     EnvState,
@@ -28,22 +44,46 @@ from repro.core.simulator import (
 PyTree = Any
 
 
+class RolloutSpec(NamedTuple):
+    """Declared batch axes of one rollout (static under jit)."""
+
+    n_nodes: int = 1
+    coordinated: bool = False
+
+
+SINGLE = RolloutSpec()
+
+# Bumped once per (re)trace of the engine body; a hyperparameter sweep
+# must not move it by more than one (tests/test_rollout_engine.py).
+_TRACE_COUNT = 0
+
+
+def engine_trace_count() -> int:
+    return _TRACE_COUNT
+
+
+def reset_engine_trace_count() -> None:
+    global _TRACE_COUNT
+    _TRACE_COUNT = 0
+
+
 def _tree_where(pred, a, b):
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "max_steps", "reward_fn"))
-def _episode(
-    policy: Policy,
-    params: EnvParams,
-    key: jax.Array,
-    max_steps: int,
-    reward_fn: Optional[Callable[[Obs], jax.Array]] = None,
-    init_pstate: Optional[PyTree] = None,
-    init_estate: Optional[EnvState] = None,
-):
+def _row_where(mask, new, old):
+    """Per-node freeze: mask (N,) selects rows of every leaf."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(mask.reshape((-1,) + (1,) * (a.ndim - 1)), a, b),
+        new,
+        old,
+    )
+
+
+def _single_rollout(fns, pparams, params, key, max_steps, reward_fn,
+                    init_pstate, init_estate):
     k_init, k_run = jax.random.split(key)
-    pstate0 = policy.init(k_init) if init_pstate is None else init_pstate
+    pstate0 = fns.init(pparams, k_init) if init_pstate is None else init_pstate
     estate0 = env_init(params) if init_estate is None else init_estate
     mu = expected_rewards(params)
     mu_star = jnp.max(mu)
@@ -51,11 +91,11 @@ def _episode(
     def step(carry, k):
         pstate, estate = carry
         k1, k2 = jax.random.split(k)
-        arm = policy.select(pstate, k1)
+        arm = fns.select(pparams, pstate, k1)
         new_estate, obs = env_step(params, estate, arm, k2)
         if reward_fn is not None:
             obs = obs._replace(reward=reward_fn(obs))
-        new_pstate = policy.update(pstate, arm, obs)
+        new_pstate = fns.update(pparams, pstate, arm, obs)
         # freeze everything once the job is done
         pstate = _tree_where(obs.active, new_pstate, pstate)
         estate = _tree_where(obs.active, new_estate, estate)
@@ -79,10 +119,120 @@ def _episode(
     }
 
 
+def _indep_fleet_rollout(fns, pparams, params, key, max_steps, n_nodes):
+    k0, kr = jax.random.split(key)
+    pstates = jax.vmap(fns.init, in_axes=(None, 0))(
+        pparams, jax.random.split(k0, n_nodes)
+    )
+    estates = jax.vmap(lambda _: env_init(params))(jnp.arange(n_nodes))
+
+    def step(carry, k):
+        pstates, estates, gang_time = carry
+        ks = jax.random.split(k, 2 * n_nodes).reshape(2, n_nodes)
+        arms = jax.vmap(fns.select, in_axes=(None, 0, 0))(pparams, pstates, ks[0])
+        estates2, obs = jax.vmap(lambda e, a, kk: env_step(params, e, a, kk))(
+            estates, arms, ks[1]
+        )
+        pstates2 = jax.vmap(fns.update, in_axes=(None, 0, 0, 0))(
+            pparams, pstates, arms, obs
+        )
+        active = obs.active
+        pstates = _row_where(active, pstates2, pstates)
+        estates = _row_where(active, estates2, estates)
+        # synchronous step: gang advances at the slowest node's pace
+        step_t = jnp.where(
+            jnp.any(active), jnp.max(params.t_rel[arms] * params.dt_s), 0.0
+        )
+        return (pstates, estates, gang_time + step_t), None
+
+    (pstates, estates, gang_time), _ = jax.lax.scan(
+        step, (pstates, estates, jnp.float32(0.0)),
+        jax.random.split(kr, max_steps),
+    )
+    return {
+        "energy_kj": jnp.sum(estates.energy_kj),
+        "gang_time_s": gang_time,
+        "switches": jnp.sum(estates.switches),
+    }
+
+
+def _coord_fleet_rollout(fns, pparams, params, key, max_steps, n_nodes):
+    k0, kr = jax.random.split(key)
+    pstate = fns.init(pparams, k0)
+    estates = jax.vmap(lambda _: env_init(params))(jnp.arange(n_nodes))
+
+    def step(carry, k):
+        pstate, estates, gang_time = carry
+        k_sel, k_env = jax.random.split(k)
+        arm = fns.select(pparams, pstate, k_sel)
+        arms = jnp.full((n_nodes,), arm)
+        estates2, obs = jax.vmap(lambda e, a, kk: env_step(params, e, a, kk))(
+            estates, arms, jax.random.split(k_env, n_nodes)
+        )
+        active = obs.active
+        # coordinated reward: fleet-mean (pmean on real hardware)
+        mean_obs = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32)), obs)
+        pstate2 = fns.update(pparams, pstate, arm, mean_obs)
+        any_active = jnp.any(active)
+        pstate = _tree_where(any_active, pstate2, pstate)
+        estates = _row_where(active, estates2, estates)
+        step_t = jnp.where(any_active, params.t_rel[arm] * params.dt_s, 0.0)
+        return (pstate, estates, gang_time + step_t), None
+
+    (pstate, estates, gang_time), _ = jax.lax.scan(
+        step, (pstate, estates, jnp.float32(0.0)),
+        jax.random.split(kr, max_steps),
+    )
+    return {
+        "energy_kj": jnp.sum(estates.energy_kj),
+        "gang_time_s": gang_time,
+        "switches": jnp.sum(estates.switches),
+    }
+
+
+def _engine_impl(
+    fns: PolicyFns,
+    pparams: PyTree,
+    params: EnvParams,
+    key: jax.Array,
+    max_steps: int,
+    reward_fn: Optional[Callable[[Obs], jax.Array]],
+    spec: RolloutSpec,
+    init_pstate: Optional[PyTree] = None,
+    init_estate: Optional[EnvState] = None,
+):
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1  # Python side effect: runs once per trace
+    if spec.n_nodes == 1 and not spec.coordinated:
+        return _single_rollout(
+            fns, pparams, params, key, max_steps, reward_fn,
+            init_pstate, init_estate,
+        )
+    if reward_fn is not None or init_pstate is not None or init_estate is not None:
+        raise NotImplementedError("fleet rollouts take no custom reward/init state")
+    if spec.coordinated:
+        return _coord_fleet_rollout(fns, pparams, params, key, max_steps, spec.n_nodes)
+    return _indep_fleet_rollout(fns, pparams, params, key, max_steps, spec.n_nodes)
+
+
+_engine = functools.partial(
+    jax.jit, static_argnames=("fns", "max_steps", "reward_fn", "spec")
+)(_engine_impl)
+
+
+def rollout(policy: Policy, params: EnvParams, key, max_steps=None,
+            spec: RolloutSpec = SINGLE, reward_fn=None,
+            init_pstate=None, init_estate=None):
+    """The engine's front door: one call, any declared topology."""
+    ms = int(max_steps or max_steps_hint(params))
+    return _engine(policy.fns, policy.params, params, key, ms, reward_fn, spec,
+                   init_pstate, init_estate)
+
+
 def run_episode(policy, params, key, max_steps=None, reward_fn=None,
                 init_pstate=None, init_estate=None):
-    ms = int(max_steps or max_steps_hint(params))
-    return _episode(policy, params, key, ms, reward_fn, init_pstate, init_estate)
+    return rollout(policy, params, key, max_steps, SINGLE, reward_fn,
+                   init_pstate, init_estate)
 
 
 def run_repeats(
@@ -96,7 +246,8 @@ def run_repeats(
     ms = int(max_steps or max_steps_hint(params))
     keys = jax.random.split(key, n_repeats)
     out = jax.vmap(
-        lambda k: _episode(policy, params, k, ms, reward_fn)
+        lambda k: _engine(policy.fns, policy.params, params, k, ms, reward_fn,
+                          SINGLE, None, None)
     )(keys)
     return {
         "energy_kj": np.asarray(out["energy_kj"]),
@@ -106,6 +257,61 @@ def run_repeats(
         "completed": np.asarray(out["completed"]),
         "cum_regret": np.asarray(out["cum_regret"]),
     }
+
+
+_SWEEP_KEYS = ("energy_kj", "time_s", "switches", "steps", "completed",
+               "cum_regret")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fns", "max_steps", "reward_fn", "n_repeats")
+)
+def _sweep(fns, stacked, params, key, max_steps, reward_fn, n_repeats):
+    keys = jax.random.split(key, n_repeats)
+    per_cfg = lambda pp: jax.vmap(
+        lambda k: _engine_impl(fns, pp, params, k, max_steps, reward_fn,
+                               SINGLE, None, None)
+    )(keys)
+    out = jax.vmap(per_cfg)(stacked)
+    # drop per-step arms and the stacked pstate/estate trees here, inside
+    # jit, so XLA dead-code-eliminates their scan accumulators instead of
+    # materializing (configs, repeats, max_steps) buffers the caller
+    # never reads
+    return {k: out[k] for k in _SWEEP_KEYS}
+
+
+def run_sweep(
+    policy: Policy,
+    stacked_params: PyTree,
+    params: EnvParams,
+    key: jax.Array,
+    n_repeats: int = 3,
+    max_steps: Optional[int] = None,
+    reward_fn=None,
+) -> Dict[str, np.ndarray]:
+    """Batched hyperparameter sweep: configs x seeds through ONE trace.
+
+    ``stacked_params`` is a pytree of configs stacked on axis 0 (see
+    policies.stack_policy_params / sweep_policy_params). Outputs are
+    shaped (n_configs, n_repeats, ...).
+    """
+    ms = int(max_steps or max_steps_hint(params))
+    out = _sweep(policy.fns, stacked_params, params, key, ms, reward_fn, n_repeats)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def run_fleet_episode(
+    policy: Policy,
+    params: EnvParams,
+    key: jax.Array,
+    n_nodes: int,
+    max_steps: int,
+    coordinated: bool = False,
+) -> Dict[str, jax.Array]:
+    """N identical nodes on the same job — see RolloutSpec modes."""
+    spec = RolloutSpec(n_nodes=n_nodes, coordinated=coordinated)
+    return _engine(policy.fns, policy.params, params, key, int(max_steps),
+                   None, spec, None, None)
 
 
 # ---------------------------------------------------------------------------
@@ -125,14 +331,15 @@ def run_drlcap_protocol(
     1.25x for fair comparison with fully-online methods."""
     k1, k2 = jax.random.split(key)
     trainable = make_policy(trainable=True)
-    ms = max_steps_hint(params)
+    ms = int(max_steps_hint(params))
     # phase 1 = the first pretrain_frac of the job (env budget masked)
     est0 = env_init(params)._replace(remaining=jnp.float32(pretrain_frac))
-    phase1 = _episode(trainable, params, k1, int(ms), None, None, est0)
+    phase1 = run_episode(trainable, params, k1, ms, init_estate=est0)
     e1 = phase1["energy_kj"]
     frozen = make_policy(trainable=False)
     est1 = env_init(params)._replace(remaining=jnp.float32(1.0 - pretrain_frac))
-    phase2 = _episode(frozen, params, k2, int(ms), None, phase1["pstate"], est1)
+    phase2 = run_episode(frozen, params, k2, ms,
+                         init_pstate=phase1["pstate"], init_estate=est1)
     return {
         "energy_kj": e1 + deploy_scale * phase2["energy_kj"],
         "time_s": phase1["time_s"] + phase2["time_s"],
@@ -151,8 +358,8 @@ def run_drlcap_cross(
     keys = jax.random.split(key, len(sources) + 1)
     pstate = None
     for src, k in zip(sources, keys[:-1]):
-        out = _episode(trainable, src, k, max_steps_hint(src), None, pstate, None)
+        out = run_episode(trainable, src, k, init_pstate=pstate)
         pstate = out["pstate"]
     frozen = make_policy(trainable=False)
-    out = _episode(frozen, target, keys[-1], max_steps_hint(target), None, pstate, None)
+    out = run_episode(frozen, target, keys[-1], init_pstate=pstate)
     return {k: out[k] for k in ("energy_kj", "time_s", "switches")}

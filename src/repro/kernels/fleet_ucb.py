@@ -1,19 +1,30 @@
-"""Fused fleet SA-UCB select kernel (Pallas, TPU target).
+"""Fused fleet SA-UCB kernels (Pallas, TPU target).
 
 The fleet control plane (repro.core.fleet) advances tens of thousands
-of controllers per step (Aurora scale: 63,720). The select step is a
-bandwidth-trivial but latency-sensitive fused op:
+of controllers per decision interval (Aurora scale: 63,720). Two
+kernels, both bandwidth-trivial but latency-sensitive:
 
-    SA-UCB[n, i] = mu[n,i] + alpha*sqrt(ln t_n / max(1, cnt[n,i]))
-                   - lambda * 1{i != prev_n}
-    arm[n] = argmax_i SA-UCB[n, i]
+- ``fleet_select``: the standalone SA-UCB argmax
 
+      SA-UCB[n, i] = mu[n,i] + alpha_n*sqrt(ln t_n / max(1, cnt[n,i]))
+                     - lambda_n * 1{i != prev_n}
+      arm[n] = argmax_i SA-UCB[n, i]
+
+- ``fleet_step``: the full per-interval controller step fused into one
+  launch. At a decision boundary each controller holds the observation
+  (reward, progress, active) from the interval that just ended for the
+  arm it had selected; the kernel applies the mu/n/phat/pn running-mean
+  update, advances prev/t, and selects the next arm from the updated
+  state — update-then-select, one kernel instead of two plus the XLA
+  scatter soup in between.
+
+Hyperparameters ride as per-controller (N,) arrays (hyperparams-as-data:
+a fleet can sweep alpha x lambda across its nodes in the same launch).
 One program handles a BLOCK_N-controller stripe with all K arms resident
-in VMEM; the argmax is computed via a max+iota-select (K is small, so
-the reduction stays in registers). This keeps the whole fleet decision
-at microseconds/step instead of a host-side loop.
+in VMEM; K is small so the argmax/one-hot reductions stay in registers.
 
-Validated in interpret mode against kernels.ref.ref_fleet_select.
+Validated in interpret mode against kernels.ref.ref_fleet_select /
+ref_fleet_step on ragged fleet sizes (tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -24,17 +35,63 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _fleet_kernel(mu_ref, n_ref, prev_ref, t_ref, arm_ref, *, alpha, lam, k):
-    mu = mu_ref[...]  # (BN, K)
-    cnt = n_ref[...]
-    prev = prev_ref[...]  # (BN,)
-    t = jnp.maximum(t_ref[...], 2.0)  # (BN,)
-    bonus = alpha * jnp.sqrt(jnp.log(t)[:, None] / jnp.maximum(cnt, 1.0))
+def _sa_scores(mu, cnt, prev, t, alpha, lam):
+    """(BN, K) SA-UCB scores; t is the post-update step counter and gets
+    the same +1 lookahead the policy's select applies."""
+    tt = jnp.maximum(t + 1.0, 2.0)
+    bonus = alpha[:, None] * jnp.sqrt(jnp.log(tt)[:, None] / jnp.maximum(cnt, 1.0))
     arms = jax.lax.broadcasted_iota(jnp.int32, mu.shape, 1)
-    sa = mu + bonus - lam * (arms != prev[:, None]).astype(mu.dtype)
+    return mu + bonus - lam[:, None] * (arms != prev[:, None]).astype(mu.dtype)
+
+
+def _first_argmax(sa, k):
+    arms = jax.lax.broadcasted_iota(jnp.int32, sa.shape, 1)
     best = jnp.max(sa, axis=1, keepdims=True)
-    first_best = jnp.min(jnp.where(sa >= best, arms, k), axis=1)
-    arm_ref[...] = first_best.astype(jnp.int32)
+    return jnp.min(jnp.where(sa >= best, arms, k), axis=1).astype(jnp.int32)
+
+
+def _fleet_select_kernel(mu_ref, n_ref, prev_ref, t_ref, alpha_ref, lam_ref,
+                         arm_ref, *, k):
+    sa = _sa_scores(
+        mu_ref[...], n_ref[...], prev_ref[...], t_ref[...],
+        alpha_ref[...], lam_ref[...],
+    )
+    arm_ref[...] = _first_argmax(sa, k)
+
+
+def _fleet_step_kernel(
+    mu_ref, n_ref, phat_ref, pn_ref, prev_ref, t_ref,
+    arm_ref, r_ref, p_ref, act_ref, alpha_ref, lam_ref,
+    mu_o, n_o, phat_o, pn_o, prev_o, t_o, next_o, *, k,
+):
+    mu, cnt = mu_ref[...], n_ref[...]
+    phat, pn = phat_ref[...], pn_ref[...]
+    prev, t = prev_ref[...], t_ref[...]
+    arm, act = arm_ref[...], act_ref[...]  # act: (BN,) f32 0/1 mask
+    arms = jax.lax.broadcasted_iota(jnp.int32, mu.shape, 1)
+    # --- update: running means via a one-hot scatter (K stays in VMEM)
+    onehot = (arms == arm[:, None]).astype(mu.dtype) * act[:, None]
+    n2 = cnt + onehot
+    mu2 = mu + onehot * (r_ref[...][:, None] - mu) / jnp.maximum(n2, 1.0)
+    pn2 = pn + onehot
+    phat2 = phat + onehot * (p_ref[...][:, None] - phat) / jnp.maximum(pn2, 1.0)
+    prev2 = jnp.where(act > 0.5, arm, prev).astype(jnp.int32)
+    t2 = t + act
+    # --- select the next arm from the freshly updated state
+    sa = _sa_scores(mu2, n2, prev2, t2, alpha_ref[...], lam_ref[...])
+    mu_o[...] = mu2
+    n_o[...] = n2
+    phat_o[...] = phat2
+    pn_o[...] = pn2
+    prev_o[...] = prev2
+    t_o[...] = t2
+    next_o[...] = _first_argmax(sa, k)
+
+
+def _pad(a, pad, fill=0):
+    return jnp.concatenate(
+        [a, jnp.full((pad, *a.shape[1:]), fill, a.dtype)], 0
+    )
 
 
 def fleet_select(
@@ -42,9 +99,9 @@ def fleet_select(
     n: jax.Array,  # (N, K) pull counts
     prev: jax.Array,  # (N,) previous arm
     t: jax.Array,  # (N,) step counters
+    alpha: jax.Array,  # (N,) per-controller exploration coefficient
+    lam: jax.Array,  # (N,) per-controller switching penalty
     *,
-    alpha: float = 0.2,
-    lam: float = 0.05,
     block_n: int = 1024,
     interpret: bool = False,
 ) -> jax.Array:
@@ -52,25 +109,72 @@ def fleet_select(
     block_n = min(block_n, nn)
     pad = (-nn) % block_n
     if pad:  # ragged fleets: pad to a whole stripe, slice after
-        zp = lambda a, fill=0: jnp.concatenate(
-            [a, jnp.full((pad, *a.shape[1:]), fill, a.dtype)], 0
-        )
         out = fleet_select(
-            zp(mu), zp(n, 1), zp(prev), zp(t, 2.0),
-            alpha=alpha, lam=lam, block_n=block_n, interpret=interpret,
+            _pad(mu, pad), _pad(n, pad, 1), _pad(prev, pad), _pad(t, pad, 2.0),
+            _pad(alpha, pad), _pad(lam, pad),
+            block_n=block_n, interpret=interpret,
         )
         return out[:nn]
-    kernel = functools.partial(_fleet_kernel, alpha=alpha, lam=lam, k=k)
+    kernel = functools.partial(_fleet_select_kernel, k=k)
+    row = pl.BlockSpec((block_n,), lambda i: (i,))
+    mat = pl.BlockSpec((block_n, k), lambda i: (i, 0))
     return pl.pallas_call(
         kernel,
         grid=(nn // block_n,),
-        in_specs=[
-            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-        ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        in_specs=[mat, mat, row, row, row, row],
+        out_specs=row,
         out_shape=jax.ShapeDtypeStruct((nn,), jnp.int32),
         interpret=interpret,
-    )(mu, n, prev, t)
+    )(mu, n, prev, t, alpha, lam)
+
+
+def fleet_step(
+    mu: jax.Array,  # (N, K) empirical mean rewards
+    n: jax.Array,  # (N, K) pull counts
+    phat: jax.Array,  # (N, K) mean progress estimates
+    pn: jax.Array,  # (N, K) progress-sample counts
+    prev: jax.Array,  # (N,) previous arm (int32)
+    t: jax.Array,  # (N,) step counters (f32)
+    arm: jax.Array,  # (N,) arm each controller just ran (int32)
+    reward: jax.Array,  # (N,) observed interval reward
+    progress: jax.Array,  # (N,) observed interval progress
+    active: jax.Array,  # (N,) f32 0/1: controller's job still running
+    alpha: jax.Array,  # (N,)
+    lam: jax.Array,  # (N,)
+    *,
+    block_n: int = 1024,
+    interpret: bool = False,
+):
+    """Fused update+select. Returns (mu, n, phat, pn, prev, t, next_arm)."""
+    nn, k = mu.shape
+    block_n = min(block_n, nn)
+    pad = (-nn) % block_n
+    if pad:  # padded controllers are inactive: state rides through frozen
+        out = fleet_step(
+            _pad(mu, pad), _pad(n, pad, 1), _pad(phat, pad), _pad(pn, pad, 1),
+            _pad(prev, pad), _pad(t, pad, 2.0), _pad(arm, pad),
+            _pad(reward, pad), _pad(progress, pad), _pad(active, pad),
+            _pad(alpha, pad), _pad(lam, pad),
+            block_n=block_n, interpret=interpret,
+        )
+        return tuple(o[:nn] for o in out)
+    kernel = functools.partial(_fleet_step_kernel, k=k)
+    row = pl.BlockSpec((block_n,), lambda i: (i,))
+    mat = pl.BlockSpec((block_n, k), lambda i: (i, 0))
+    f32 = jnp.float32
+    return pl.pallas_call(
+        kernel,
+        grid=(nn // block_n,),
+        in_specs=[mat, mat, mat, mat, row, row, row, row, row, row, row, row],
+        out_specs=(mat, mat, mat, mat, row, row, row),
+        out_shape=(
+            jax.ShapeDtypeStruct((nn, k), f32),
+            jax.ShapeDtypeStruct((nn, k), f32),
+            jax.ShapeDtypeStruct((nn, k), f32),
+            jax.ShapeDtypeStruct((nn, k), f32),
+            jax.ShapeDtypeStruct((nn,), jnp.int32),
+            jax.ShapeDtypeStruct((nn,), f32),
+            jax.ShapeDtypeStruct((nn,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(mu, n, phat, pn, prev, t, arm, reward, progress, active, alpha, lam)

@@ -11,9 +11,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.constants import DEFAULT_ALPHA, DEFAULT_LAM
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.fleet_ucb import fleet_select as _fleet_select
+from repro.kernels.fleet_ucb import fleet_step as _fleet_step
 from repro.kernels.ssd_scan import chunk_scan as _chunk_scan
 
 
@@ -39,8 +41,37 @@ def ssd_chunk_scan(states, decay, init_state, *, interpret: bool = False):
     return _chunk_scan(states, decay, init_state, interpret=interp)
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "lam", "interpret"))
-def fleet_select(mu, n, prev, t, *, alpha: float = 0.2, lam: float = 0.05,
+def _per_controller(x, n):
+    """Hyperparams-as-data: scalars broadcast to a (N,) lane, (N,) arrays
+    pass through (a fleet may sweep alpha/lam across its nodes)."""
+    return jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n,))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fleet_select(mu, n, prev, t, alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, *,
                  interpret: bool = False):
     interp = interpret or not pallas_available()
-    return _fleet_select(mu, n, prev, t, alpha=alpha, lam=lam, interpret=interp)
+    nn = mu.shape[0]
+    return _fleet_select(
+        mu, n, prev, t, _per_controller(alpha, nn), _per_controller(lam, nn),
+        interpret=interp,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
+               alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, *,
+               interpret: bool = False):
+    """Fused per-interval fleet controller step (update then select).
+    Returns (mu, n, phat, pn, prev, t, next_arm)."""
+    interp = interpret or not pallas_available()
+    nn = mu.shape[0]
+    return _fleet_step(
+        mu, n, phat, pn, prev, t,
+        jnp.asarray(arm, jnp.int32),
+        jnp.asarray(reward, jnp.float32),
+        jnp.asarray(progress, jnp.float32),
+        jnp.asarray(active, jnp.float32),
+        _per_controller(alpha, nn), _per_controller(lam, nn),
+        interpret=interp,
+    )

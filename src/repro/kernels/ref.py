@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.constants import DEFAULT_ALPHA, DEFAULT_LAM
+
 
 def ref_attention(q, k, v, *, causal=True):
     """q: (B,H,S,HD); k/v: (B,KV,S,HD). Dense softmax attention."""
@@ -42,10 +44,34 @@ def ref_chunk_scan(states, decay, init_state):
     return prev, final
 
 
-def ref_fleet_select(mu, n, prev, t, *, alpha=0.2, lam=0.05):
-    t = jnp.maximum(t, 2.0)
-    bonus = alpha * jnp.sqrt(jnp.log(t)[:, None] / jnp.maximum(n, 1.0))
-    k = mu.shape[1]
-    arms = jnp.arange(k)[None, :]
-    sa = mu + bonus - lam * (arms != prev[:, None]).astype(mu.dtype)
+def _ref_sa_scores(mu, n, prev, t, alpha, lam):
+    tt = jnp.maximum(t + 1.0, 2.0)  # the policy's select-time lookahead
+    bonus = alpha[:, None] * jnp.sqrt(jnp.log(tt)[:, None] / jnp.maximum(n, 1.0))
+    arms = jnp.arange(mu.shape[1])[None, :]
+    return mu + bonus - lam[:, None] * (arms != prev[:, None]).astype(mu.dtype)
+
+
+def ref_fleet_select(mu, n, prev, t, *, alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM):
+    alpha = jnp.broadcast_to(jnp.float32(alpha), mu.shape[:1])
+    lam = jnp.broadcast_to(jnp.float32(lam), mu.shape[:1])
+    sa = _ref_sa_scores(mu, n, prev, t, alpha, lam)
     return jnp.argmax(sa, axis=1).astype(jnp.int32)
+
+
+def ref_fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
+                   alpha, lam):
+    """Fused update-then-select oracle for kernels.fleet_ucb.fleet_step:
+    apply the interval's observation as a one-hot running-mean update
+    (frozen where inactive), then pick the next SA-UCB arm."""
+    act = active.astype(mu.dtype)
+    k = mu.shape[1]
+    onehot = (jnp.arange(k)[None, :] == arm[:, None]).astype(mu.dtype) * act[:, None]
+    n2 = n + onehot
+    mu2 = mu + onehot * (reward[:, None] - mu) / jnp.maximum(n2, 1.0)
+    pn2 = pn + onehot
+    phat2 = phat + onehot * (progress[:, None] - phat) / jnp.maximum(pn2, 1.0)
+    prev2 = jnp.where(act > 0.5, arm, prev).astype(jnp.int32)
+    t2 = t + act
+    sa = _ref_sa_scores(mu2, n2, prev2, t2, alpha, lam)
+    nxt = jnp.argmax(sa, axis=1).astype(jnp.int32)
+    return mu2, n2, phat2, pn2, prev2, t2, nxt

@@ -33,9 +33,12 @@ def _flatten(tree: PyTree):
 
 
 def _paths(tree: PyTree):
+    # jax.tree.flatten_with_path only exists in newer JAX; tree_util has
+    # carried the same API for every version this repo supports.
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     return [
         "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        for path, _ in jax.tree.flatten_with_path(tree)[0]
+        for path, _ in flat
     ]
 
 

@@ -37,6 +37,7 @@ def test_converges_to_best_arm():
     assert frac_best > 0.8, f"tail fraction on best arm {frac_best:.2f}"
 
 
+@pytest.mark.slow
 def test_switching_penalty_reduces_switches():
     p = make_env_params(get_app("llama"))
     with_pen = run_repeats(energy_ucb(switching_penalty=0.05), p, jax.random.key(1), 3)
@@ -86,6 +87,7 @@ def test_unconstrained_beats_constrained_on_energy():
     assert unc <= con * 1.02
 
 
+@pytest.mark.slow
 def test_ablation_optimistic_init_helps():
     p = make_env_params(get_app("sph_exa"))
     with_oi = run_repeats(energy_ucb(), p, jax.random.key(3), 3)["energy_kj"].mean()

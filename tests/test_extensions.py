@@ -18,6 +18,7 @@ from repro.core import (
 from repro.core.simulator import EnvParams
 
 
+@pytest.mark.slow
 def test_roofline_ucb_warm_start_cuts_exploration():
     """Priors from a (roughly right) cost model => less exploration spend
     than the flat optimistic init."""
@@ -36,6 +37,7 @@ def test_roofline_ucb_warm_start_cuts_exploration():
     assert warm["energy_kj"].mean() <= flat["energy_kj"].mean() + 0.5
 
 
+@pytest.mark.slow
 def test_sliding_window_adapts_to_phase_change():
     """Swap the environment mid-episode (train -> eval phase): the
     discounted controller re-converges; the stationary one is slower."""
@@ -67,6 +69,7 @@ def test_sliding_window_adapts_to_phase_change():
     assert q_sw < 1.05
 
 
+@pytest.mark.slow
 def test_drlcap_protocol_energy_accounting():
     from repro.core.rl import drlcap
     from repro.core.rollout import run_drlcap_protocol

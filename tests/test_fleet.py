@@ -54,3 +54,91 @@ def test_fleet_kernel_matches_policy_select():
         alpha=0.2, lam=0.05, interpret=True,
     )
     np.testing.assert_array_equal(np.asarray(arms_policy), np.asarray(arms_kernel))
+
+
+def _synth_obs(n, key, frac_active=0.85):
+    from repro.core.simulator import Obs
+
+    f = lambda i: jax.random.fold_in(key, i)
+    return Obs(
+        energy_j=jax.random.uniform(f(0), (n,), minval=10.0, maxval=30.0),
+        uc=jax.random.uniform(f(1), (n,), minval=0.5, maxval=1.0),
+        uu=jax.random.uniform(f(2), (n,), minval=0.1, maxval=0.5),
+        progress=jax.random.uniform(f(3), (n,), minval=1e-4, maxval=2e-4),
+        reward=-jax.random.uniform(f(4), (n,), minval=0.5, maxval=1.5),
+        switched=jnp.zeros((n,), bool),
+        active=jax.random.uniform(f(5), (n,)) < frac_active,
+    )
+
+
+# 7 = sub-stripe, 1024 = one stripe, 2049 = Aurora's 63,720 capped small
+# (ragged: forces the pad-and-slice path)
+@pytest.mark.parametrize("n", [7, 1024, 2049])
+def test_fleet_dispatches_fused_step_matching_vmap(n):
+    """Fleet.step through the fused Pallas kernel (interpret mode) is
+    exact vs the vmapped per-controller update-then-select path."""
+    pol = energy_ucb()
+    fused = Fleet(pol, n, interpret=True)
+    assert fused.use_kernel, "kernel-compatible policy must auto-dispatch"
+    vmapped = Fleet(pol, n, use_kernel=False)
+    states = fused.init(jax.random.key(0))
+    arms = fused.select(states, jax.random.key(1))
+    # advance a few desynchronizing intervals through the reference path
+    for i in range(3):
+        states, arms = vmapped.step(states, arms, _synth_obs(n, jax.random.key(10 + i)),
+                                    jax.random.key(20 + i))
+    obs = _synth_obs(n, jax.random.key(2))
+    s_k, a_k = fused.step(states, arms, obs)
+    s_v, a_v = vmapped.step(states, arms, obs, jax.random.key(3))
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_v))
+    for leaf in states:
+        np.testing.assert_array_equal(
+            np.asarray(s_k[leaf]), np.asarray(s_v[leaf]),
+            err_msg=f"fused fleet step diverged on {leaf} (n={n})")
+
+
+def test_fleet_per_node_alpha_lanes():
+    """Hyperparams-as-data across the fleet itself: per-controller
+    alpha/lam lanes work on both the vmapped and fused paths and agree."""
+    n = 33
+    base = energy_ucb()
+    pol = base.with_params(base.params._replace(
+        alpha=jnp.linspace(0.05, 0.3, n), lam=jnp.linspace(0.0, 0.05, n)))
+    fused = Fleet(pol, n, interpret=True)
+    assert fused.use_kernel
+    vmapped = Fleet(pol, n, use_kernel=False)
+    states = vmapped.init(jax.random.key(0))
+    arms = vmapped.select(states, jax.random.key(1))
+    for i in range(4):
+        states, arms = vmapped.step(states, arms,
+                                    _synth_obs(n, jax.random.key(30 + i)),
+                                    jax.random.key(40 + i))
+    obs = _synth_obs(n, jax.random.key(5))
+    s_k, a_k = fused.step(states, arms, obs)
+    s_v, a_v = vmapped.step(states, arms, obs, jax.random.key(6))
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_v))
+    for leaf in states:
+        np.testing.assert_array_equal(np.asarray(s_k[leaf]), np.asarray(s_v[leaf]))
+
+
+def test_fleet_step_vmap_path_requires_key():
+    pol = energy_ucb(qos_delta=0.05)  # not kernel-compatible -> vmap path
+    f = Fleet(pol, 4)
+    states = f.init(jax.random.key(0))
+    arms = f.select(states, jax.random.key(1))
+    with pytest.raises(ValueError, match="per-interval key"):
+        f.step(states, arms, _synth_obs(4, jax.random.key(2)))
+
+
+def test_fleet_kernel_dispatch_gating():
+    """Only exact-kernel policies may route to the fused step."""
+    from repro.core.fleet import kernel_compatible
+
+    assert kernel_compatible(energy_ucb())
+    assert not kernel_compatible(energy_ucb(qos_delta=0.05))
+    assert not kernel_compatible(energy_ucb(window_discount=0.99))
+    assert not kernel_compatible(energy_ucb(optimistic_init=False))
+    from repro.core import rr_freq
+
+    assert not kernel_compatible(rr_freq())
+    assert not Fleet(energy_ucb(qos_delta=0.05), 8, interpret=True).use_kernel

@@ -66,6 +66,55 @@ def test_fleet_select(n, k, block):
     assert bool(jnp.all(arm == want))
 
 
+def _fleet_state(n, k=9, seed=0):
+    key = jax.random.key(seed)
+    f = lambda i: jax.random.fold_in(key, i)
+    return dict(
+        mu=jax.random.normal(f(1), (n, k)) * -1.0,
+        n=jax.random.randint(f(2), (n, k), 1, 40).astype(jnp.float32),
+        phat=jax.random.uniform(f(3), (n, k), minval=1e-4, maxval=2e-4),
+        pn=jax.random.randint(f(4), (n, k), 0, 40).astype(jnp.float32),
+        prev=jax.random.randint(f(5), (n,), 0, k),
+        t=jax.random.randint(f(6), (n,), 1, 200).astype(jnp.float32),
+        arm=jax.random.randint(f(7), (n,), 0, k),
+        reward=-jax.random.uniform(f(8), (n,), minval=0.5, maxval=1.5),
+        progress=jax.random.uniform(f(9), (n,), minval=1e-4, maxval=2e-4),
+        active=(jax.random.uniform(f(10), (n,)) < 0.8).astype(jnp.float32),
+        alpha=jax.random.uniform(f(11), (n,), minval=0.05, maxval=0.3),
+        lam=jax.random.uniform(f(12), (n,), minval=0.0, maxval=0.05),
+    )
+
+
+# ragged fleet sizes: below one stripe, exactly one, and a non-multiple
+@pytest.mark.parametrize("n", [7, 1024, 2049])
+def test_fleet_step_matches_ref(n):
+    """The fused select+update step (interpret mode) is exact vs the
+    pure-jnp oracle, with per-controller hyperparams and inactive
+    (frozen) controllers in the batch."""
+    s = _fleet_state(n, seed=n)
+    args = (s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+            s["reward"], s["progress"], s["active"], s["alpha"], s["lam"])
+    got = ops.fleet_step(*args, interpret=True)
+    want = ref.ref_fleet_step(*args)
+    names = ("mu", "n", "phat", "pn", "prev", "t", "next_arm")
+    for nm, g, w in zip(names, got, want):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w), err_msg=f"fleet_step {nm} n={n}")
+
+
+def test_fleet_step_frozen_controllers_keep_state():
+    s = _fleet_state(64, seed=3)
+    s["active"] = jnp.zeros((64,), jnp.float32)
+    got = ops.fleet_step(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        s["reward"], s["progress"], s["active"], s["alpha"], s["lam"],
+        interpret=True,
+    )
+    for nm, g in zip(("mu", "n", "phat", "pn", "prev", "t"), got):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(s[nm]),
+                                      err_msg=f"inactive fleet mutated {nm}")
+
+
 def test_flash_attention_used_by_layers_dispatch():
     """layers.attention(impl='pallas') falls back to chunked off-TPU but
     must stay numerically consistent with the dense path."""

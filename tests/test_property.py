@@ -10,6 +10,10 @@ try:
     HAVE_HYP = True
 except Exception:  # hypothesis not installed
     HAVE_HYP = False
+    # The @settings/@given decorators below run at import time, so a
+    # skipif mark alone still crashes collection — skip the module
+    # before any decorator is evaluated.
+    pytest.skip("hypothesis unavailable", allow_module_level=True)
 
 pytestmark = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis unavailable")
 

@@ -1,0 +1,204 @@
+"""The unified rollout engine vs. the seed implementation, and the
+single-trace guarantee of hyperparams-as-data.
+
+The seed's closure-based policy + scan loop are inlined here verbatim
+as the frozen reference: the engine must reproduce them bit-for-bit for
+a fixed key across every EnergyUCB variant."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    energy_ucb,
+    engine_trace_count,
+    get_app,
+    make_env_params,
+    make_policy_params,
+    reset_engine_trace_count,
+    run_episode,
+    run_sweep,
+    stack_policy_params,
+    sweep_policy_params,
+)
+from repro.core.simulator import env_init, env_step, expected_rewards
+
+K = 9
+
+
+# --- frozen seed reference (closure-based policy, seed scan loop) ----------
+
+
+def _seed_policy(alpha=0.1, switching_penalty=0.02, mu_init=0.0,
+                 optimistic_init=True, qos_delta=None, default_arm=K - 1,
+                 window_discount=None, prior_mu=None, prior_n=0.0):
+    lam = switching_penalty
+
+    def init(key):
+        del key
+        mu0 = jnp.full((K,), mu_init, jnp.float32)
+        n0 = jnp.zeros((K,), jnp.float32)
+        if prior_mu is not None:
+            mu0 = jnp.asarray(prior_mu, jnp.float32)
+            n0 = jnp.full((K,), float(prior_n), jnp.float32)
+        return {"mu": mu0, "n": n0, "prev": jnp.int32(default_arm),
+                "t": jnp.float32(0.0), "phat": jnp.zeros((K,), jnp.float32),
+                "pn": jnp.zeros((K,), jnp.float32)}
+
+    def select(state, key):
+        del key
+        t = jnp.maximum(state["t"] + 1.0, 2.0)
+        bonus = alpha * jnp.sqrt(jnp.log(t) / jnp.maximum(state["n"], 1.0))
+        mu = state["mu"]
+        if window_discount is not None:
+            # mirrors the policy core's sliding-window optimism (stale
+            # estimates shrink back to the prior); stationary variants
+            # stay the literal seed formula
+            prior = (jnp.full((K,), mu_init, jnp.float32) if prior_mu is None
+                     else jnp.asarray(prior_mu, jnp.float32))
+            mu = (state["n"] * mu + 0.25 * prior) / (state["n"] + 0.25)
+        sa = mu + bonus - lam * (jnp.arange(K) != state["prev"])
+        if not optimistic_init:
+            untried = state["n"] < 1.0
+            sa = jnp.where(jnp.any(untried),
+                           jnp.where(untried, 1e9 - jnp.arange(K) * 1.0, -1e9), sa)
+        feasible = jnp.ones((K,), bool)
+        if qos_delta is not None:
+            p_ref = jnp.where(state["pn"][default_arm] > 0,
+                              state["phat"][default_arm], jnp.inf)
+            slowdown = 1.0 - state["phat"] / p_ref
+            feasible = (state["pn"] < 1.0) | (slowdown <= qos_delta)
+        neg = jnp.finfo(sa.dtype).min
+        masked = jnp.where(feasible, sa, neg)
+        return jnp.where(jnp.any(feasible), jnp.argmax(masked),
+                         jnp.argmax(sa)).astype(jnp.int32)
+
+    def update(state, arm, obs):
+        n = state["n"].at[arm].add(1.0)
+        mu = state["mu"]
+        if window_discount is not None:
+            g = window_discount
+            n = state["n"] * g
+            n = n.at[arm].add(1.0)
+            mu = mu.at[arm].set(
+                (state["mu"][arm] * state["n"][arm] * g + obs.reward) / n[arm]
+            )
+        else:
+            mu = mu.at[arm].set(
+                state["mu"][arm] + (obs.reward - state["mu"][arm]) / n[arm]
+            )
+        pn = state["pn"].at[arm].add(1.0)
+        phat = state["phat"].at[arm].set(
+            state["phat"][arm] + (obs.progress - state["phat"][arm]) / pn[arm]
+        )
+        return {"mu": mu, "n": n, "prev": jnp.asarray(arm, jnp.int32),
+                "t": state["t"] + 1.0, "phat": phat, "pn": pn}
+
+    return init, select, update
+
+
+@functools.partial(jax.jit, static_argnames=("init", "select", "update",
+                                             "max_steps"))
+def _seed_episode(init, select, update, params, key, max_steps):
+    k_init, k_run = jax.random.split(key)
+    pstate0, estate0 = init(k_init), env_init(params)
+    mu = expected_rewards(params)
+    mu_star = jnp.max(mu)
+
+    def step(carry, k):
+        pstate, estate = carry
+        k1, k2 = jax.random.split(k)
+        arm = select(pstate, k1)
+        new_estate, obs = env_step(params, estate, arm, k2)
+        new_pstate = update(pstate, arm, obs)
+        where = lambda a, b: jax.tree.map(
+            lambda x, y: jnp.where(obs.active, x, y), a, b)
+        pstate, estate = where(new_pstate, pstate), where(new_estate, estate)
+        return (pstate, estate), (arm, (mu_star - mu[arm]) * obs.active)
+
+    (pstate, estate), (arms, regret_inc) = jax.lax.scan(
+        step, (pstate0, estate0), jax.random.split(k_run, max_steps))
+    return {"energy_kj": estate.energy_kj, "time_s": estate.time_s,
+            "switches": estate.switches, "steps": estate.t, "arms": arms,
+            "cum_regret": jnp.cumsum(regret_inc), "pstate": pstate}
+
+
+VARIANTS = {
+    "default": {},
+    "no_optinit": dict(optimistic_init=False),
+    "no_penalty": dict(switching_penalty=0.0),
+    "qos": dict(qos_delta=0.05),
+    "window": dict(window_discount=0.995),
+    "warm_start": dict(prior_mu=np.linspace(-1.0, -0.5, K), prior_n=1.0),
+}
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_engine_matches_seed_episode_bit_for_bit(variant):
+    kw = VARIANTS[variant]
+    p = make_env_params(get_app("tealeaf"))
+    key = jax.random.key(42)
+    ms = 400
+    init, select, update = _seed_policy(**kw)
+    want = _seed_episode(init, select, update, p, key, ms)
+    got = run_episode(energy_ucb(**kw), p, key, max_steps=ms)
+    for field in ("energy_kj", "time_s", "switches", "steps", "arms",
+                  "cum_regret"):
+        np.testing.assert_array_equal(
+            np.asarray(got[field]), np.asarray(want[field]),
+            err_msg=f"{variant}: {field} diverged from the seed loop")
+    for leaf in ("mu", "n", "prev", "t", "phat", "pn"):
+        np.testing.assert_array_equal(
+            np.asarray(got["pstate"][leaf]), np.asarray(want["pstate"][leaf]),
+            err_msg=f"{variant}: pstate[{leaf}] diverged from the seed loop")
+
+
+# --- single-trace sweeps ---------------------------------------------------
+
+
+def test_alpha_lambda_sweep_is_single_trace():
+    p = make_env_params(get_app("tealeaf"))
+    grid = sweep_policy_params((0.05, 0.1, 0.15, 0.2), (0.0, 0.02))  # 8 cfgs
+    reset_engine_trace_count()
+    out = run_sweep(energy_ucb(), grid, p, jax.random.key(0), n_repeats=2,
+                    max_steps=301)
+    assert engine_trace_count() == 1, "8-config sweep must trace exactly once"
+    assert out["energy_kj"].shape == (8, 2)
+    assert np.isfinite(out["energy_kj"]).all()
+    # new values, same shapes: cache hit, still one trace total
+    grid2 = sweep_policy_params((0.06, 0.11, 0.16, 0.21), (0.01, 0.03))
+    run_sweep(energy_ucb(), grid2, p, jax.random.key(1), n_repeats=2,
+              max_steps=301)
+    assert engine_trace_count() == 1
+
+
+def test_sweep_mixes_flag_variants_in_one_trace():
+    """QoS / warm-up / sliding-window flags are data, so one vmapped call
+    covers heterogeneous variants."""
+    p = make_env_params(get_app("tealeaf"))
+    stacked = stack_policy_params([
+        make_policy_params(),
+        make_policy_params(optimistic_init=False),
+        make_policy_params(qos_delta=0.05),
+        make_policy_params(window_discount=0.99),
+    ])
+    reset_engine_trace_count()
+    out = run_sweep(energy_ucb(), stacked, p, jax.random.key(0), n_repeats=2,
+                    max_steps=302)
+    assert engine_trace_count() == 1
+    assert out["energy_kj"].shape == (4, 2)
+    assert np.isfinite(out["energy_kj"]).all()
+
+
+def test_episode_variants_share_one_trace():
+    p = make_env_params(get_app("tealeaf"))
+    reset_engine_trace_count()
+    run_episode(energy_ucb(alpha=0.07), p, jax.random.key(0), max_steps=217)
+    first = engine_trace_count()
+    assert first == 1
+    for alpha, lam in ((0.1, 0.0), (0.2, 0.05), (0.33, 0.01)):
+        run_episode(energy_ucb(alpha=alpha, switching_penalty=lam), p,
+                    jax.random.key(1), max_steps=217)
+    assert engine_trace_count() == first, "param changes must not retrace"
