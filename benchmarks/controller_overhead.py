@@ -1,8 +1,10 @@
 """Controller-plane overhead: us per decision for a single jitted
-controller (select+update) and for the full Aurora-scale fleet (63,720
+controller (select+update), for the full Aurora-scale fleet (63,720
 controllers) — vmapped, and through the fused Pallas select+update
-fleet step. The paper's feasibility argument ('lightweight')
-quantified."""
+fleet step — and end-to-end through the streaming EnergyController
+(actuate -> advance -> read counters -> derive Obs -> policy step), the
+path every deployment runs. The paper's feasibility argument
+('lightweight') quantified."""
 from __future__ import annotations
 
 import jax
@@ -12,6 +14,7 @@ from benchmarks.common import time_us
 from repro.core import energy_ucb, get_app, make_env_params
 from repro.core.fleet import Fleet
 from repro.core.simulator import Obs, env_init, env_step
+from repro.energy import EnergyController, SimBackend
 from repro.kernels import ops
 
 
@@ -85,6 +88,32 @@ def run(fast: bool = True, out_json=None):
                  "derived": "pallas" + ("" if ops.pallas_available()
                                         else " (interpret mode on CPU)")})
     print(f"fleet kernel step n={nk}: {us_kernel:.1f} us")
+
+    # end-to-end per-interval latency through the streaming control
+    # plane (EnergyController over SimBackend): telemetry advance +
+    # counter read + Obs derivation + policy step per decision interval
+    def ctrl_us(nn, use_kernel, label, reps):
+        ctl = EnergyController(
+            pol, SimBackend(p, n=nn), use_kernel=use_kernel,
+            interpret=use_kernel and not ops.pallas_available(),
+            record_history=nn == 1,  # fleet streams skip the host sync
+        )
+        ctl.step()  # warm up the traces
+        us = time_us(
+            lambda: (ctl.step(), jax.block_until_ready(ctl.states["mu"]))[0],
+            n=reps,
+        )
+        rows.append({"name": f"controller_interval_{label}_n{nn}",
+                     "us_per_call": f"{us:.1f}",
+                     "derived": f"{us/nn*1000:.1f} ns/controller streaming"})
+        print(f"EnergyController interval ({label}, n={nn}): {us:.1f} us "
+              f"({us/nn*1000:.1f} ns/controller)")
+        return us
+
+    ctrl_us(1, False, "python", 50)
+    nf = 2048 if fast else 8192
+    ctrl_us(nf, False, "vmap", 10)
+    ctrl_us(nf, True, "fused", 3 if not ops.pallas_available() else 10)
     return rows
 
 

@@ -16,8 +16,7 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.core.policies import energy_ucb
-from repro.energy.model import StepEnergyModel
-from repro.energy.runtime import EnergyAwareRuntime
+from repro.energy import EnergyController, StepEnergyModel, make_backend
 from repro.models import build_model
 from repro.serve.engine import Request, ServeEngine
 
@@ -42,9 +41,10 @@ def main():
     # decision interval = 64 decode steps (~one token micro-batch wave)
     model = StepEnergyModel(t_compute_s=64 * tc, t_memory_s=64 * tm,
                             t_collective_s=64 * tcoll, steps_total=400)
-    runtime = EnergyAwareRuntime(energy_ucb(qos_delta=0.10), model)
+    controller = EnergyController(energy_ucb(qos_delta=0.10),
+                                  make_backend(model))
     engine = ServeEngine(bundle, params, n_slots=4, max_len=96,
-                         energy_runtime=runtime)
+                         controller=controller)
 
     rng = np.random.default_rng(0)
     reqs = [
@@ -55,12 +55,12 @@ def main():
     done = engine.generate(reqs)
     print(f"served {len(done)} requests, "
           f"{sum(len(r.out) for r in done)} tokens, stats={engine.stats}")
-    s = runtime.summary()
+    s = controller.summary()
     print("\nenergy telemetry (QoS delta=10%):")
     print(f"  energy: {s['energy_j']:.1f} J vs f_max baseline {s['baseline_energy_j']:.1f} J "
           f"=> saved {s['saved_energy_pct']:.1f}%")
     print(f"  slowdown: {s['slowdown_pct']:.2f}%  switches: {s['switches']}")
-    arms = [h["freq_ghz"] for h in runtime.history]
+    arms = [h["freq_ghz"] for h in controller.history]
     print(f"  frequency trajectory: start {arms[:5]} ... settled at {arms[-1]:.1f} GHz")
 
 

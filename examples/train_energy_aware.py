@@ -17,8 +17,7 @@ import jax
 from repro.configs import get_arch
 from repro.configs.base import ArchConfig, LayoutConfig, ShapeConfig
 from repro.core.policies import energy_ucb
-from repro.energy.model import StepEnergyModel
-from repro.energy.runtime import EnergyAwareRuntime
+from repro.energy import EnergyController, StepEnergyModel, make_backend
 from repro.models import build_model
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -61,12 +60,13 @@ def main():
     # cell energy model: a mildly memory-bound training step
     model = StepEnergyModel(t_compute_s=0.22, t_memory_s=0.30, t_collective_s=0.12,
                             n_chips=8, steps_total=args.steps)
-    runtime = EnergyAwareRuntime(energy_ucb(), model)
+    # the streaming control plane: EnergyUCB over the GEOPM-shaped backend
+    controller = EnergyController(energy_ucb(), make_backend(model))
     trainer = Trainer(
         bundle, shape,
         tcfg=TrainerConfig(total_steps=args.steps, ckpt_every=50,
                            ckpt_dir=args.ckpt, log_every=25),
-        energy_runtime=runtime,
+        energy_runtime=controller,
     )
     res = trainer.run()
     print("\nstep   loss     grad_norm")

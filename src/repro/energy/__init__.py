@@ -1,12 +1,74 @@
+"""Energy control plane: one streaming telemetry/actuation surface
+(:class:`EnergyBackend`) consumed by one controller
+(:class:`EnergyController`).
+
+Which backend to use where:
+
+- :class:`SimBackend` — the calibrated pure-JAX bandit environment,
+  batched over N nodes. Use for experiments, fleet-scale streaming
+  (auto-dispatches the fused Pallas fleet step for kernel-exact
+  policies), and anything that needs vmap/jit-friendly telemetry.
+  ``SimBackend.from_roofline(model)`` packages a framework cell.
+- :class:`SimulatedGEOPM` — the single-node GEOPM-shaped simulator
+  driven by a :class:`StepEnergyModel`; decision interval = one real
+  train/serve step. Use inside live training/serving loops on this
+  container; on hardware, implement :class:`EnergyBackend` against the
+  platform power API with the same shape.
+- :class:`TraceReplayBackend` — replays recorded counter logs
+  (:func:`record_trace`, ``save``/``load``). Use for offline policy
+  evaluation and controller regression tests.
+
+:class:`EnergyAwareRuntime` is a deprecated one-release shim mapping the
+old ``(policy, model)`` constructor onto
+``EnergyController(policy, SimulatedGEOPM(model))``.
+"""
+from repro.energy.backend import (
+    Counters,
+    EnergyBackend,
+    SimBackend,
+    TraceReplayBackend,
+    record_trace,
+    stack_counters,
+    stack_env_params,
+)
+from repro.energy.controller import EnergyController, derive_obs
 from repro.energy.geopm import FrequencyActuator, SimulatedGEOPM, Telemetry
 from repro.energy.model import StepEnergyModel, env_params_from_roofline
 from repro.energy.runtime import EnergyAwareRuntime
 
+
+def make_backend(model: StepEnergyModel, kind: str = "geopm", n: int = 1,
+                 seed: int = 0, **noise) -> EnergyBackend:
+    """The one place callers turn a framework cell into a backend.
+
+    ``kind="geopm"`` gives the single-node live-loop simulator (decision
+    interval = one real step); ``kind="sim"`` gives the batched pure-JAX
+    environment (N nodes, fixed decision interval, optional ``noise``
+    overrides forwarded to :func:`env_params_from_roofline`).
+    """
+    if kind == "geopm":
+        if n != 1:
+            raise ValueError("geopm backend is single-node; use kind='sim'")
+        return SimulatedGEOPM(model=model)
+    if kind == "sim":
+        return SimBackend.from_roofline(model, n=n, seed=seed, **noise)
+    raise ValueError(f"unknown backend kind {kind!r} (geopm | sim)")
+
 __all__ = [
+    "Counters",
+    "EnergyBackend",
+    "EnergyController",
+    "EnergyAwareRuntime",
     "FrequencyActuator",
-    "Telemetry",
+    "SimBackend",
     "SimulatedGEOPM",
     "StepEnergyModel",
+    "Telemetry",
+    "TraceReplayBackend",
+    "derive_obs",
     "env_params_from_roofline",
-    "EnergyAwareRuntime",
+    "make_backend",
+    "record_trace",
+    "stack_counters",
+    "stack_env_params",
 ]

@@ -1,0 +1,354 @@
+"""EnergyBackend: the one streaming telemetry/actuation surface from
+simulator to fleet (DESIGN: ROADMAP.md §PR 2).
+
+The paper's deployment story is a single GEOPM-style loop — read
+counters, pick an arm, actuate — and every environment the repo can
+drive now exposes exactly that surface:
+
+    read_counters() -> Counters   (N,) monotonic per-node counters
+    apply_arms(arms)              actuate the frequency ladder, (N,)
+    advance(work_fn)              complete one decision interval
+
+Three implementations ship:
+
+- :class:`SimBackend` wraps the pure-JAX ``env_step`` batched over N
+  apps (one jitted vmapped step per interval; stacked ``EnvParams``
+  give each node its own app).
+- :class:`~repro.energy.geopm.SimulatedGEOPM` is the single-node
+  GEOPM-shaped simulator (N=1), driven by a ``StepEnergyModel``.
+- :class:`TraceReplayBackend` replays recorded counter logs for
+  offline evaluation (record with :func:`record_trace`, persist with
+  ``save``/``load``).
+
+A real deployment implements this class against the platform power API
+and hardware counters; :class:`~repro.energy.controller.EnergyController`
+consumes any of them identically.
+"""
+from __future__ import annotations
+
+import abc
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import DEFAULT_ARM, FREQS_GHZ
+from repro.core.simulator import EnvParams, env_init, env_step
+
+PyTree = Any
+
+
+class Counters(NamedTuple):
+    """Monotonic per-node counters, all shaped (N,). The GEOPM-shaped
+    contract: energy and active-time counters only ever increase, and
+    the controller works purely on per-interval deltas."""
+
+    energy_j: jax.Array  # cumulative energy (J), incl. switch overhead
+    core_active_s: jax.Array  # cumulative core-engine active seconds
+    uncore_active_s: jax.Array  # cumulative copy-engine active seconds
+    timestamp_s: jax.Array  # cumulative wall time
+    progress: jax.Array  # cumulative job fraction in [0, 1]
+    switches: jax.Array  # cumulative frequency-switch count (int32)
+    active: jax.Array  # bool: job still running at read time
+
+
+def stack_counters(rows: Sequence[Counters]) -> Counters:
+    """Stack T counter snapshots on a new leading axis -> (T, N) trace."""
+    return Counters(*(np.stack([np.asarray(r[i]) for r in rows])
+                      for i in range(len(Counters._fields))))
+
+
+class EnergyBackend(abc.ABC):
+    """One counter/actuator surface across simulated and real hardware.
+
+    ``variable_interval`` declares whether the wall-time of a decision
+    interval depends on the chosen frequency (one train step at f takes
+    t(f) seconds). The controller then normalizes interval energy to the
+    declared ``interval_s`` so rewards compare energy *rates*, not
+    intervals of different lengths — the fixed-dt formulation of the
+    paper (§4.1) recovered on variable-length steps.
+    """
+
+    @property
+    @abc.abstractmethod
+    def n_nodes(self) -> int:
+        ...
+
+    @property
+    @abc.abstractmethod
+    def ladder_ghz(self) -> Sequence[float]:
+        ...
+
+    @abc.abstractmethod
+    def read_counters(self) -> Counters:
+        ...
+
+    @abc.abstractmethod
+    def apply_arms(self, arms) -> None:
+        """Actuate: set every node's frequency-ladder index, arms (N,)."""
+        ...
+
+    @abc.abstractmethod
+    def advance(self, work_fn: Optional[Callable[[], Any]] = None) -> Any:
+        """Complete one decision interval (run ``work_fn`` if given,
+        let telemetry accumulate). Returns the work result."""
+        ...
+
+    @property
+    def interval_s(self) -> float:
+        """Nominal decision-interval wall time (reference duration)."""
+        raise NotImplementedError
+
+    @property
+    def variable_interval(self) -> bool:
+        return False
+
+    @property
+    def reward_scale(self):
+        """Normalizer E*R at f_max — scalar or (N,)."""
+        raise NotImplementedError
+
+    def baseline_interval(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(energy_j, time_s) per node for one interval at static f_max
+        (the paper's default-frequency baseline)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# SimBackend: the pure-JAX env, batched over N apps
+# ---------------------------------------------------------------------------
+
+
+def stack_env_params(cfgs: Sequence[EnvParams]) -> EnvParams:
+    """Stack per-node apps on a leading N axis (a heterogeneous fleet)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *cfgs)
+
+
+@functools.partial(jax.jit, static_argnames=("stacked",))
+def _sim_advance(params, estates, core_s, uncore_s, arms, key, stacked):
+    pax = 0 if stacked else None
+    n = arms.shape[0]
+    keys = jax.random.split(key, n)
+    estates2, obs = jax.vmap(env_step, in_axes=(pax, 0, 0, 0))(
+        params, estates, arms, keys
+    )
+    # env_step folds (dt + switch latency) * active into time_s; the
+    # active-time counters integrate the interval's busy fractions over
+    # that same wall delta so deltas reproduce obs.uc / obs.uu exactly
+    d_t = estates2.time_s - estates.time_s
+    return estates2, core_s + obs.uc * d_t, uncore_s + obs.uu * d_t
+
+
+class SimBackend(EnergyBackend):
+    """The bandit environment as a streaming backend: N apps advanced by
+    one vmapped ``env_step`` per decision interval.
+
+    ``params`` is one :class:`EnvParams` shared by every node, or a
+    stacked pytree (leading N axis, see :func:`stack_env_params`) giving
+    each node its own app. All counter math stays on-device; one jitted
+    trace serves any N of the same shape signature.
+    """
+
+    def __init__(self, params: EnvParams, n: Optional[int] = None,
+                 seed: int = 0):
+        self._stacked = jnp.ndim(params.dt_s) == 1
+        if self._stacked:
+            n_params = int(params.dt_s.shape[0])
+            if n is not None and n != n_params:
+                raise ValueError(f"stacked params carry N={n_params}, got n={n}")
+            n = n_params
+        self._n = int(n or 1)
+        self.params = params
+        self._key = jax.random.key(seed)
+        self._estates = jax.vmap(lambda _: env_init(params))(jnp.arange(self._n))
+        self._core_s = jnp.zeros((self._n,), jnp.float32)
+        self._uncore_s = jnp.zeros((self._n,), jnp.float32)
+        self._arms = jnp.full((self._n,), DEFAULT_ARM, jnp.int32)
+
+    @classmethod
+    def from_roofline(cls, model, n: int = 1, seed: int = 0, **noise):
+        """Backend for a framework cell: EnvParams from the dry-run
+        roofline terms (see repro.energy.model.env_params_from_roofline)."""
+        from repro.energy.model import env_params_from_roofline
+
+        return cls(env_params_from_roofline(model, **noise), n=n, seed=seed)
+
+    # -- EnergyBackend surface ----------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return self._n
+
+    @property
+    def ladder_ghz(self):
+        f = np.asarray(self.params.freqs)
+        return tuple(f[0] if f.ndim == 2 else f)
+
+    @property
+    def interval_s(self) -> float:
+        return float(np.mean(np.asarray(self.params.dt_s)))
+
+    @property
+    def reward_scale(self):
+        return self.params.reward_scale  # () or (N,)
+
+    def baseline_interval(self):
+        e = np.broadcast_to(
+            np.asarray(self.params.e_interval_kj)[..., -1] * 1e3, (self._n,)
+        )
+        t = np.broadcast_to(np.asarray(self.params.dt_s), (self._n,))
+        return e, t
+
+    def apply_arms(self, arms) -> None:
+        self._arms = jnp.asarray(arms, jnp.int32).reshape((self._n,))
+
+    def advance(self, work_fn: Optional[Callable[[], Any]] = None) -> Any:
+        out = work_fn() if work_fn is not None else None
+        self._key, k = jax.random.split(self._key)
+        self._estates, self._core_s, self._uncore_s = _sim_advance(
+            self.params, self._estates, self._core_s, self._uncore_s,
+            self._arms, k, self._stacked,
+        )
+        return out
+
+    def read_counters(self) -> Counters:
+        es = self._estates
+        return Counters(
+            energy_j=es.energy_kj * 1e3,
+            core_active_s=self._core_s,
+            uncore_active_s=self._uncore_s,
+            timestamp_s=es.time_s,
+            progress=1.0 - es.remaining,
+            switches=es.switches,
+            active=es.remaining > 0.0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# TraceReplayBackend: recorded counter logs for offline evaluation
+# ---------------------------------------------------------------------------
+
+
+class TraceReplayBackend(EnergyBackend):
+    """Replays a recorded (T+1, N) counter trace interval by interval.
+
+    Actuation requests are logged (``requested_arms``) but have no
+    effect — the trace is immutable history, which is exactly what makes
+    replay useful for offline policy evaluation and regression-testing
+    the controller's obs derivation against a live run.
+    """
+
+    def __init__(self, trace: Counters, ladder_ghz: Sequence[float],
+                 interval_s: float, variable_interval: bool = False,
+                 reward_scale: float = 1.0,
+                 baseline: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+        if np.asarray(trace.energy_j).ndim != 2:
+            raise ValueError("trace counters must be stacked (T+1, N)")
+        self.trace = trace
+        self._ladder = tuple(float(f) for f in ladder_ghz)
+        self._interval_s = float(interval_s)
+        self._variable = bool(variable_interval)
+        self._rs = reward_scale
+        self._baseline = baseline
+        self._cursor = 0
+        self.requested_arms: list = []
+
+    def __len__(self) -> int:
+        """Number of replayable decision intervals."""
+        return int(np.asarray(self.trace.energy_j).shape[0]) - 1
+
+    # -- EnergyBackend surface ----------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return int(np.asarray(self.trace.energy_j).shape[1])
+
+    @property
+    def ladder_ghz(self):
+        return self._ladder
+
+    @property
+    def interval_s(self) -> float:
+        return self._interval_s
+
+    @property
+    def variable_interval(self) -> bool:
+        return self._variable
+
+    @property
+    def reward_scale(self):
+        return self._rs
+
+    def baseline_interval(self):
+        if self._baseline is None:
+            raise NotImplementedError("trace recorded without a baseline")
+        return self._baseline
+
+    def apply_arms(self, arms) -> None:
+        self.requested_arms.append(np.asarray(arms, np.int32))
+
+    def advance(self, work_fn: Optional[Callable[[], Any]] = None) -> Any:
+        if self._cursor >= len(self):
+            raise RuntimeError(
+                f"trace exhausted after {len(self)} intervals"
+            )
+        out = work_fn() if work_fn is not None else None
+        self._cursor += 1
+        return out
+
+    def read_counters(self) -> Counters:
+        i = self._cursor
+        return Counters(*(np.asarray(leaf)[i] for leaf in self.trace))
+
+    # -- persistence ---------------------------------------------------
+    def save(self, path: str) -> None:
+        np.savez(
+            path,
+            ladder_ghz=np.asarray(self._ladder),
+            interval_s=self._interval_s,
+            variable_interval=self._variable,
+            reward_scale=np.asarray(self._rs),
+            has_baseline=self._baseline is not None,
+            baseline_e=np.zeros(0) if self._baseline is None else self._baseline[0],
+            baseline_t=np.zeros(0) if self._baseline is None else self._baseline[1],
+            **{f: np.asarray(getattr(self.trace, f)) for f in Counters._fields},
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "TraceReplayBackend":
+        z = np.load(path)
+        trace = Counters(*(z[f] for f in Counters._fields))
+        baseline = (
+            (z["baseline_e"], z["baseline_t"]) if bool(z["has_baseline"]) else None
+        )
+        return cls(
+            trace, ladder_ghz=z["ladder_ghz"].tolist(),
+            interval_s=float(z["interval_s"]),
+            variable_interval=bool(z["variable_interval"]),
+            reward_scale=z["reward_scale"], baseline=baseline,
+        )
+
+
+def record_trace(backend: EnergyBackend, arm_schedule) -> TraceReplayBackend:
+    """Drive ``backend`` through a (T, N) arm schedule and capture its
+    counter log as a replayable backend. Advances (mutates) ``backend``."""
+    sched = np.asarray(arm_schedule, np.int32)
+    if sched.ndim == 1:
+        sched = sched[:, None]
+    rows = [backend.read_counters()]
+    for arms in sched:
+        backend.apply_arms(arms)
+        backend.advance()
+        rows.append(backend.read_counters())
+    try:
+        baseline = backend.baseline_interval()
+    except NotImplementedError:
+        baseline = None
+    return TraceReplayBackend(
+        stack_counters(rows),
+        ladder_ghz=backend.ladder_ghz,
+        interval_s=backend.interval_s,
+        variable_interval=backend.variable_interval,
+        reward_scale=np.asarray(backend.reward_scale),
+        baseline=baseline,
+    )

@@ -5,19 +5,26 @@ A real deployment implements ``FrequencyActuator`` against the platform
 power API and ``Telemetry`` against hardware counters; this container
 wires in the simulated implementation, which is driven by the
 StepEnergyModel calibrated from the dry-run roofline terms.
+``SimulatedGEOPM`` doubles as the single-node :class:`EnergyBackend`
+(a fleet of N=1 with variable-length decision intervals), so the
+:class:`~repro.energy.controller.EnergyController` drives it through
+the exact surface a hardware backend would expose.
 """
 from __future__ import annotations
 
 import abc
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.core.calibration import (
     FREQS_GHZ,
     SWITCH_ENERGY_J,
     SWITCH_LATENCY_S,
 )
+from repro.energy.backend import Counters, EnergyBackend
 
 
 class FrequencyActuator(abc.ABC):
@@ -48,8 +55,13 @@ class Telemetry(abc.ABC):
 
 
 @dataclass
-class SimulatedGEOPM(FrequencyActuator, Telemetry):
-    """Simulated node: integrates the StepEnergyModel between reads."""
+class SimulatedGEOPM(FrequencyActuator, Telemetry, EnergyBackend):
+    """Simulated node: integrates the StepEnergyModel between reads.
+
+    As an :class:`EnergyBackend` it is a fleet of N=1 whose decision
+    interval is one train/serve step — the interval's wall time varies
+    with the chosen frequency (``variable_interval``), so the controller
+    normalizes interval energy to the f_max step time."""
 
     model: "StepEnergyModel"  # noqa: F821  (repro.energy.model)
     arm: int = len(FREQS_GHZ) - 1
@@ -57,6 +69,7 @@ class SimulatedGEOPM(FrequencyActuator, Telemetry):
     _core_s: float = 0.0
     _uncore_s: float = 0.0
     _clock_s: float = 0.0
+    _steps: int = 0
     switches: int = 0
     switch_overhead_j: float = 0.0
 
@@ -83,6 +96,7 @@ class SimulatedGEOPM(FrequencyActuator, Telemetry):
         self._core_s += m["core_active_s"]
         self._uncore_s += m["uncore_active_s"]
         self._clock_s += m["step_time_s"]
+        self._steps += 1
         return m
 
     def read(self) -> Dict[str, float]:
@@ -92,3 +106,49 @@ class SimulatedGEOPM(FrequencyActuator, Telemetry):
             "uncore_active_s": self._uncore_s,
             "timestamp_s": self._clock_s,
         }
+
+    # -- EnergyBackend surface (fleet of N=1) --------------------------
+    @property
+    def n_nodes(self) -> int:
+        return 1
+
+    @property
+    def interval_s(self) -> float:
+        return self._fmax_step()["step_time_s"]
+
+    @property
+    def variable_interval(self) -> bool:
+        return True  # one step at f takes t(f) seconds
+
+    @property
+    def reward_scale(self) -> float:
+        base = self._fmax_step()
+        return base["energy_j"] * base["uc"] / max(base["uu"], 1e-3)
+
+    def _fmax_step(self) -> Dict[str, float]:
+        return self.model.step(len(FREQS_GHZ) - 1)
+
+    def baseline_interval(self):
+        base = self._fmax_step()
+        return (np.asarray([base["energy_j"]], np.float64),
+                np.asarray([base["step_time_s"]], np.float64))
+
+    def apply_arms(self, arms) -> None:
+        self.set_arm(int(np.ravel(np.asarray(arms))[0]))
+
+    def advance(self, work_fn: Optional[Callable[[], Any]] = None) -> Any:
+        out = work_fn() if work_fn is not None else None
+        self.advance_one_step()
+        return out
+
+    def read_counters(self) -> Counters:
+        f = lambda v: np.asarray([v], np.float64)
+        return Counters(
+            energy_j=f(self._energy_j),
+            core_active_s=f(self._core_s),
+            uncore_active_s=f(self._uncore_s),
+            timestamp_s=f(self._clock_s),
+            progress=f(min(1.0, self._steps / max(self.model.steps_total, 1))),
+            switches=np.asarray([self.switches], np.int32),
+            active=np.asarray([self._steps < self.model.steps_total], bool),
+        )

@@ -1,99 +1,46 @@
-"""EnergyAwareRuntime: EnergyUCB as a first-class feature of the
-training/serving loop.
+"""Deprecated shim: ``EnergyAwareRuntime`` is now ``EnergyController``
+over a :class:`SimulatedGEOPM` backend.
 
-Wraps any step callable (jitted train_step / decode step). Per step the
-controller picks a frequency arm, the actuator applies it, the step
-runs, telemetry deltas become the bandit observation, and the policy
-updates — the paper's GEOPM loop with "decision interval" = one step
-slice. On this container the actuator/telemetry are the calibrated
-simulation; on hardware the same loop drives the real GEOPM-equivalent.
+The legacy class drove ``SimulatedGEOPM`` one node at a time through the
+bound ``Policy`` surface and reported ``switched=False`` unconditionally;
+the controller derives the real switch bit (and every other observation
+field) from backend counter deltas in one vectorized path and routes
+policy state through ``PolicyFns``/the fleet step. This wrapper keeps
+the old constructor signature working for one release — new code should
+build the backend explicitly:
+
+    from repro.energy import EnergyController, SimulatedGEOPM
+    ctl = EnergyController(policy, SimulatedGEOPM(model=model))
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+import warnings
+from typing import Optional
 
 from repro.core.policies import Policy
-from repro.core.simulator import Obs
+from repro.energy.controller import EnergyController
 from repro.energy.geopm import SimulatedGEOPM
 from repro.energy.model import StepEnergyModel
 
 
-@dataclass
-class EnergyAwareRuntime:
-    policy: Policy
-    model: StepEnergyModel
-    seed: int = 0
-    reward_scale: Optional[float] = None
+class EnergyAwareRuntime(EnergyController):
+    """Deprecated alias — one release of constructor compatibility."""
 
-    def __post_init__(self):
-        self.node = SimulatedGEOPM(model=self.model)
-        self._key = jax.random.key(self.seed)
-        self._pstate = self.policy.init(self._key)
-        base = self.model.step(len(self.node.ladder_ghz) - 1)
-        self._rs = self.reward_scale or (
-            base["energy_j"] * base["uc"] / max(base["uu"], 1e-3)
+    def __init__(self, policy: Policy, model: StepEnergyModel, seed: int = 0,
+                 reward_scale: Optional[float] = None):
+        warnings.warn(
+            "EnergyAwareRuntime is deprecated; use EnergyController with an "
+            "explicit EnergyBackend (e.g. SimulatedGEOPM or SimBackend)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        self._last = self.node.read()
-        self.history: List[Dict[str, float]] = []
-
-    def step(self, work_fn: Optional[Callable[[], Any]] = None) -> Dict[str, Any]:
-        """One decision interval: select arm -> actuate -> run work ->
-        observe counters -> update policy."""
-        self._key, k_sel = jax.random.split(self._key)
-        arm = int(self.policy.select(self._pstate, k_sel))
-        self.node.set_arm(arm)
-        out = work_fn() if work_fn is not None else None
-        sim = self.node.advance_one_step()
-        now = self.node.read()
-        d_e = now["energy_j"] - self._last["energy_j"]
-        d_core = now["core_active_s"] - self._last["core_active_s"]
-        d_unc = now["uncore_active_s"] - self._last["uncore_active_s"]
-        d_t = now["timestamp_s"] - self._last["timestamp_s"]
-        self._last = now
-        uc = min(1.0, d_core / max(d_t, 1e-9))
-        uu = max(1e-3, min(1.0, d_unc / max(d_t, 1e-9)))
-        reward = -(d_e) * (uc / uu) / self._rs
-        obs = Obs(
-            energy_j=jnp.float32(d_e),
-            uc=jnp.float32(uc),
-            uu=jnp.float32(uu),
-            progress=jnp.float32(1.0 / self.model.steps_total),
-            reward=jnp.float32(reward),
-            switched=jnp.bool_(False),
-            active=jnp.bool_(True),
+        self.model = model
+        super().__init__(
+            policy, SimulatedGEOPM(model=model), seed=seed,
+            reward_scale=reward_scale,
         )
-        self._pstate = self.policy.update(self._pstate, jnp.int32(arm), obs)
-        rec = {
-            "arm": arm,
-            "freq_ghz": float(self.node.ladder_ghz[arm]),
-            "energy_j": d_e,
-            "step_time_s": sim["step_time_s"],
-            "reward": float(reward),
-        }
-        self.history.append(rec)
-        return {"work": out, **rec}
 
-    # ------------------------------------------------------------------
-    def summary(self) -> Dict[str, float]:
-        e = sum(h["energy_j"] for h in self.history)
-        t = sum(h["step_time_s"] for h in self.history)
-        base = self.model.step(len(self.node.ladder_ghz) - 1)
-        n = max(len(self.history), 1)
-        return {
-            "steps": n,
-            "energy_j": e,
-            "time_s": t,
-            "baseline_energy_j": base["energy_j"] * n,
-            "baseline_time_s": base["step_time_s"] * n,
-            "saved_energy_j": base["energy_j"] * n - e,
-            "saved_energy_pct": 100.0 * (1 - e / max(base["energy_j"] * n, 1e-9)),
-            "slowdown_pct": 100.0 * (t / max(base["step_time_s"] * n, 1e-9) - 1),
-            "switches": self.node.switches,
-            "switch_overhead_j": self.node.switch_overhead_j,
-        }
+    @property
+    def node(self) -> SimulatedGEOPM:
+        """Legacy attribute: the simulated node behind the controller."""
+        return self.backend

@@ -159,7 +159,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None) -> Dic
             - ma.alias_size_in_bytes
         ),
     }
-    ca = compiled.cost_analysis() or {}
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device program
+        ca = ca[0] if ca else {}
+    ca = ca or {}
     rec["hlo_cost"] = {
         "flops_raw": float(ca.get("flops", -1.0)),
         "bytes_raw": float(ca.get("bytes accessed", -1.0)),

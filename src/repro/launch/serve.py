@@ -12,8 +12,7 @@ import numpy as np
 
 from repro.configs import get_arch, get_reduced
 from repro.core.policies import energy_ucb
-from repro.energy.model import StepEnergyModel
-from repro.energy.runtime import EnergyAwareRuntime
+from repro.energy import EnergyController, StepEnergyModel, make_backend
 from repro.models import build_model
 from repro.serve.engine import Request, ServeEngine
 
@@ -34,16 +33,14 @@ def main():
     cfg = get_arch(args.arch) if args.full_config else get_reduced(args.arch)
     bundle = build_model(cfg)
     params = bundle.init(jax.random.key(args.seed))
-    runtime = None
+    controller = None
     if args.energy:
         pol = energy_ucb(qos_delta=args.qos) if args.qos else energy_ucb()
-        runtime = EnergyAwareRuntime(
-            pol,
-            StepEnergyModel(t_compute_s=0.01, t_memory_s=0.05, t_collective_s=0.02,
-                            n_chips=4, steps_total=500),
-        )
+        model = StepEnergyModel(t_compute_s=0.01, t_memory_s=0.05,
+                                t_collective_s=0.02, n_chips=4, steps_total=500)
+        controller = EnergyController(pol, make_backend(model))
     eng = ServeEngine(bundle, params, n_slots=args.slots, max_len=args.max_len,
-                      energy_runtime=runtime)
+                      controller=controller)
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(i, rng.integers(0, cfg.vocab_size,
@@ -55,9 +52,9 @@ def main():
     for r in done[:4]:
         print(f"req {r.rid}: {len(r.out)} tokens -> {r.out[:8]}{'...' if len(r.out)>8 else ''}")
     print("stats:", eng.stats)
-    if runtime is not None:
+    if controller is not None:
         print({k: round(v, 2) if isinstance(v, float) else v
-               for k, v in runtime.summary().items()})
+               for k, v in controller.summary().items()})
 
 
 if __name__ == "__main__":

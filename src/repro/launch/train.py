@@ -15,8 +15,7 @@ import argparse
 from repro.configs import get_arch, get_reduced
 from repro.configs.base import ShapeConfig
 from repro.core.policies import energy_ucb
-from repro.energy.model import StepEnergyModel
-from repro.energy.runtime import EnergyAwareRuntime
+from repro.energy import EnergyController, StepEnergyModel, make_backend
 from repro.models import build_model
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -37,26 +36,25 @@ def main():
     cfg = get_arch(args.arch) if args.full_config else get_reduced(args.arch)
     bundle = build_model(cfg)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
-    runtime = None
+    controller = None
     if args.energy:
         pol = energy_ucb(qos_delta=args.qos) if args.qos else energy_ucb()
-        runtime = EnergyAwareRuntime(
-            pol,
-            StepEnergyModel(t_compute_s=0.2, t_memory_s=0.3, t_collective_s=0.1,
-                            n_chips=8, steps_total=args.steps),
-        )
+        model = StepEnergyModel(t_compute_s=0.2, t_memory_s=0.3,
+                                t_collective_s=0.1, n_chips=8,
+                                steps_total=args.steps)
+        controller = EnergyController(pol, make_backend(model))
     tr = Trainer(
         bundle, shape,
         tcfg=TrainerConfig(total_steps=args.steps, ckpt_every=max(10, args.steps // 4),
                            ckpt_dir=args.ckpt, log_every=max(1, args.steps // 10)),
-        energy_runtime=runtime,
+        energy_runtime=controller,
     )
     start = tr.init_or_restore()
     print(f"arch={cfg.name} family={cfg.family} start_step={start}")
     res = tr.run()
     for m in res["metrics"]:
         print(f"step {m['step']:5d}  loss {m['loss']:.4f}")
-    if runtime is not None:
+    if controller is not None:
         print({k: round(v, 2) if isinstance(v, float) else v
                for k, v in res["energy"].items()})
 

@@ -252,6 +252,34 @@ def _unembed(cfg, layout, params, x, sharder):
     return sharder.act(logits, "batch", None, "vocab")
 
 
+@jax.custom_vjp
+def _pin(tree):
+    return jax.lax.optimization_barrier(tree)
+
+
+def _pin_fwd(tree):
+    return jax.lax.optimization_barrier(tree), None
+
+
+def _pin_bwd(_, ct):
+    # float0 cotangents (int leaves: positions / cache_index) carry no
+    # data for XLA to sink; barrier the rest leaf-wise
+    return (
+        jax.tree.map(
+            lambda x: x
+            if getattr(x, "dtype", None) == jax.dtypes.float0
+            else jax.lax.optimization_barrier(x),
+            ct,
+        ),
+    )
+
+
+# optimization_barrier has no differentiation rule (jax 0.4.x), but it is
+# semantically the identity: give it one, pinning the cotangents on the
+# way back for the same sink-prevention in the bwd scan.
+_pin.defvjp(_pin_fwd, _pin_bwd)
+
+
 def _stack_body(cfg, layout, sharder, mode):
     """Returns the scan body over (super-)layers."""
     nd = cfg.moe_interleave - 1 if cfg.moe_num_experts else 0
@@ -262,7 +290,7 @@ def _stack_body(cfg, layout, sharder, mode):
         # loop, e.g. convert(slice(stack)) -> slice(convert(stack)),
         # materializing an f32 copy of the WHOLE residual-checkpoint
         # stack (+31.5 GB measured on the 405B cell, EXPERIMENTS.md §Perf).
-        carry, xs = jax.lax.optimization_barrier((carry, xs))
+        carry, xs = _pin((carry, xs))
         x, positions, cache_index = carry
         aux = jnp.zeros((), jnp.float32)
         if cfg.moe_num_experts:

@@ -1,6 +1,7 @@
 """Batched serving engine: prefill + greedy decode with slot-based
 continuous batching (finished slots are refilled from the request
-queue), optionally under an EnergyAwareRuntime controller.
+queue), optionally under an EnergyController (each prefill/decode call
+is one decision interval on the controller's EnergyBackend).
 
 The KV cache is allocated once at (n_slots, max_len) and prefill writes
 into a slot's prefix — decode steps are a single jitted call for the
@@ -8,6 +9,7 @@ whole batch.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -34,12 +36,19 @@ class ServeEngine:
     moe/vlm path supports per-slot refill via cache splicing."""
 
     def __init__(self, bundle: ModelBundle, params, n_slots: int, max_len: int,
-                 energy_runtime=None):
+                 controller=None, energy_runtime=None):
+        if energy_runtime is not None:
+            warnings.warn(
+                "ServeEngine(energy_runtime=...) is deprecated; pass "
+                "controller= (an EnergyController)", DeprecationWarning,
+                stacklevel=2,
+            )
+            controller = controller or energy_runtime
         self.bundle = bundle
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        self.energy = energy_runtime
+        self.energy = controller
         self._decode = jax.jit(bundle.decode)
         self._prefill = jax.jit(bundle.prefill)
         self.stats: Dict[str, float] = {"prefills": 0, "decode_steps": 0}

@@ -4,8 +4,9 @@ Composition of the substrates:
   - jitted microbatched train step (repro.train.train_step)
   - deterministic restartable data pipeline (repro.train.data)
   - atomic/async checkpointing + restore-on-restart (repro.train.checkpoint)
-  - EnergyUCB controller in the loop (repro.energy.runtime) — one
-    decision per step, real step executed, energy simulated/telemetered
+  - EnergyUCB controller in the loop (repro.energy.EnergyController
+    over any EnergyBackend) — one decision per step, real step
+    executed, telemetry read back as counter deltas
   - fault injection + automatic restart (repro.train.fault)
   - straggler watch: flags steps whose wall time exceeds the trailing
     median by a configurable factor (on real fleets this feeds the

@@ -38,17 +38,36 @@ def test_engine_greedy_matches_prefill_path():
     assert req.out[0] == want
 
 
-def test_engine_with_energy_runtime():
+def test_engine_with_energy_controller():
     from repro.core.policies import energy_ucb
-    from repro.energy.model import StepEnergyModel
-    from repro.energy.runtime import EnergyAwareRuntime
+    from repro.energy import EnergyController, StepEnergyModel, make_backend
 
     cfg = get_reduced("qwen2.5-3b")
     bundle = build_model(cfg)
     params = bundle.init(jax.random.key(0))
     m = StepEnergyModel(t_compute_s=0.02, t_memory_s=0.08, t_collective_s=0.01,
                         n_chips=1, steps_total=100)
-    rt = EnergyAwareRuntime(energy_ucb(), m)
-    eng = ServeEngine(bundle, params, n_slots=2, max_len=32, energy_runtime=rt)
+    ctl = EnergyController(energy_ucb(), make_backend(m))
+    eng = ServeEngine(bundle, params, n_slots=2, max_len=32, controller=ctl)
     eng.generate([Request(0, np.arange(4, dtype=np.int32), max_new=5)])
-    assert len(rt.history) >= 5
+    assert len(ctl.history) >= 5
+
+
+def test_engine_deprecated_energy_runtime_kwarg():
+    """One release of compatibility: the old kwarg still routes through
+    the controller hook (with a DeprecationWarning)."""
+    import pytest
+
+    from repro.core.policies import energy_ucb
+    from repro.energy import EnergyController, StepEnergyModel, make_backend
+
+    cfg = get_reduced("qwen2.5-3b")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    m = StepEnergyModel(t_compute_s=0.02, t_memory_s=0.08, t_collective_s=0.01,
+                        n_chips=1, steps_total=100)
+    ctl = EnergyController(energy_ucb(), make_backend(m))
+    with pytest.warns(DeprecationWarning):
+        eng = ServeEngine(bundle, params, n_slots=2, max_len=32,
+                          energy_runtime=ctl)
+    assert eng.energy is ctl
