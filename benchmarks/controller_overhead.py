@@ -92,9 +92,9 @@ def run(fast: bool = True, out_json=None):
     # end-to-end per-interval latency through the streaming control
     # plane (EnergyController over SimBackend): telemetry advance +
     # counter read + Obs derivation + policy step per decision interval
-    def ctrl_us(nn, use_kernel, label, reps):
+    def ctrl_us(nn, use_kernel, label, reps, policy=pol):
         ctl = EnergyController(
-            pol, SimBackend(p, n=nn), use_kernel=use_kernel,
+            policy, SimBackend(p, n=nn), use_kernel=use_kernel,
             interpret=use_kernel and not ops.pallas_available(),
             record_history=nn == 1,  # fleet streams skip the host sync
         )
@@ -114,6 +114,9 @@ def run(fast: bool = True, out_json=None):
     nf = 2048 if fast else 8192
     ctrl_us(nf, False, "vmap", 10)
     ctrl_us(nf, True, "fused", 3 if not ops.pallas_available() else 10)
+    # the QoS feasible-set lane's latency cost on the same fused path
+    ctrl_us(nf, True, "fused_qos", 3 if not ops.pallas_available() else 10,
+            policy=energy_ucb(qos_delta=0.05))
     return rows
 
 

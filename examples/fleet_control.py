@@ -62,7 +62,9 @@ def main():
     for i in range(12):
         noisy = kobs._replace(
             reward=-jax.random.uniform(jax.random.key(100 + i), (nk,),
-                                       minval=0.6, maxval=1.4))
+                                       minval=0.6, maxval=1.4),
+            progress=jax.random.uniform(jax.random.key(200 + i), (nk,),
+                                        minval=5e-5, maxval=2e-4))
         s1, a1 = kern.step(s1, a1, noisy)
     alphas = jnp.linspace(0.05, 0.3, nk)
     out = ops.fleet_step(
@@ -72,6 +74,19 @@ def main():
     )
     print(f"per-controller alpha sweep ({nk} configs, one launch): "
           f"{len(np.unique(np.asarray(out[-1])))} distinct arms selected")
+
+    # QoS budgets are lanes too: a mixed fleet (half unconstrained via
+    # the -1 sentinel, half delta=0.02) dispatches in the same launch
+    qos = jnp.where(jnp.arange(nk) % 2 == 0, -1.0, 0.02)
+    f_max_arm = s1["mu"].shape[1] - 1
+    out_q = ops.fleet_step(
+        s1["mu"], s1["n"], s1["phat"], s1["pn"], s1["prev"], s1["t"],
+        a1, kobs.reward, kobs.progress, kobs.active.astype(jnp.float32),
+        alphas, 0.02, qos, f_max_arm, interpret=not ops.pallas_available(),
+    )
+    moved = int(jnp.sum(out_q[-1] != out[-1]))
+    print(f"mixed QoS lanes (sentinel-off x delta=0.02, one launch): "
+          f"budget re-routed {moved} controllers")
 
     # the streaming control plane: one EnergyBackend surface from the
     # simulator to the fleet — the controller reads counters, derives

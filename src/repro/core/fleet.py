@@ -13,9 +13,14 @@ data-parallel job) live in the unified rollout engine
   deployment path: at each interval boundary it applies the previous
   interval's observations (update) and picks every node's next arm
   (select) in ONE fused Pallas launch (kernels/fleet_ucb.fleet_step)
-  when the policy is kernel-compatible, falling back to vmapped policy
-  fns elsewhere. Hyperparameters are per-controller data, so a fleet
-  can sweep alpha x lambda across its own nodes.
+  when the policy is kernel-compatible — including the QoS-constrained
+  variant, which rides as per-controller ``qos_delta``/``default_arm``
+  lanes (sentinel ``qos_delta < 0`` = unconstrained) — falling back to
+  vmapped policy fns elsewhere. Hyperparameters are per-controller
+  data, so a fleet can sweep alpha x lambda (and mix QoS budgets)
+  across its own nodes. Fleets beyond one chip's VMEM pass ``mesh=`` to
+  shard the (N, K) state over the mesh's data axis
+  (repro.parallel.fleet.make_sharded_fleet_step).
 """
 from __future__ import annotations
 
@@ -35,35 +40,35 @@ PyTree = Any
 
 def kernel_compatible(policy: Policy) -> bool:
     """True when the fused SA-UCB kernel implements this policy exactly:
-    the EnergyUCB function set with QoS off, stationary means, and
-    optimistic init (the kernel has no feasible-set / warm-up lanes).
-    alpha/lam may be scalar or per-controller (N,) lanes."""
+    the EnergyUCB function set with stationary means and optimistic
+    init. QoS-constrained variants dispatch fused too — the kernel
+    carries the feasible-set lane, with the sentinel ``qos_delta < 0``
+    meaning unconstrained, so mixed constrained/unconstrained fleets
+    share one launch. alpha/lam/qos_delta/default_arm may be scalar or
+    per-controller (N,) lanes; sliding-window (gamma < 1) and the
+    round-robin warm-up ablation still take the vmapped path."""
     if policy.fns is not UCB_FNS:
         return False
     p: PolicyParams = policy.params
     if any(jnp.ndim(leaf) > 1 for leaf in p) or any(
-        jnp.ndim(leaf) > 0 for leaf in (p.qos_delta, p.gamma, p.optimistic)
+        jnp.ndim(leaf) > 0 for leaf in (p.gamma, p.optimistic)
     ):
         return False
-    return bool(
-        jnp.all(p.qos_delta < 0.0)
-        and jnp.all(p.gamma >= 1.0)
-        and jnp.all(p.optimistic >= 0.5)
-    )
+    return bool(jnp.all(p.gamma >= 1.0) and jnp.all(p.optimistic >= 0.5))
 
 
 def _params_axes(policy: Policy, n: int):
     """vmap in_axes for the params pytree: per-controller (N,) lanes of
-    alpha/lam map over axis 0, everything else broadcasts. Only the
-    EnergyUCB family supports per-node lanes (prior_mu is (K,) per-arm,
-    never confused with a node axis)."""
+    alpha/lam/qos_delta/default_arm map over axis 0, everything else
+    broadcasts. Only the EnergyUCB family supports per-node lanes
+    (prior_mu is (K,) per-arm, never confused with a node axis)."""
     p = policy.params
     if not isinstance(p, PolicyParams):
         return None
     ax = lambda leaf: 0 if (jnp.ndim(leaf) == 1 and leaf.shape[0] == n) else None
     return PolicyParams(
-        alpha=ax(p.alpha), lam=ax(p.lam), qos_delta=None, gamma=None,
-        optimistic=None,
+        alpha=ax(p.alpha), lam=ax(p.lam), qos_delta=ax(p.qos_delta),
+        gamma=None, optimistic=None,
         prior_mu=0 if jnp.ndim(p.prior_mu) == 2 else None,
         prior_n=ax(p.prior_n), default_arm=ax(p.default_arm),
     )
@@ -93,7 +98,7 @@ class Fleet:
     """
 
     def __init__(self, policy: Policy, n: int, use_kernel: Optional[bool] = None,
-                 interpret: bool = False):
+                 interpret: bool = False, mesh=None, mesh_axis: str = "data"):
         self.policy = policy
         self.n = n
         self.interpret = interpret
@@ -106,11 +111,31 @@ class Fleet:
             )
         elif use_kernel and not kernel_compatible(policy):
             raise ValueError(
-                f"policy {policy.name!r} is not kernel-exact (QoS / "
-                "sliding-window / warm-up variants and non-UCB families "
+                f"policy {policy.name!r} is not kernel-exact "
+                "(sliding-window / warm-up variants and non-UCB families "
                 "must use the vmapped path)"
             )
         self.use_kernel = use_kernel
+        self._sharded_step = None
+        if mesh is not None:
+            # fleets beyond one chip's VMEM: shard the (N, K) controller
+            # state over the mesh's data axis (pure row parallelism)
+            if not self.use_kernel:
+                reason = (
+                    "the policy is not kernel-exact"
+                    if not kernel_compatible(policy)
+                    else "no TPU is present (pass interpret=True to force "
+                         "interpret mode)"
+                )
+                raise ValueError(
+                    f"sharded fleet state requires the fused kernel path, "
+                    f"but {reason}"
+                )
+            from repro.parallel.fleet import make_sharded_fleet_step
+
+            self._sharded_step = make_sharded_fleet_step(
+                mesh, axis=mesh_axis, interpret=interpret
+            )
 
     @property
     def params(self) -> PyTree:
@@ -134,10 +159,13 @@ class Fleet:
         Returns (new_states, next_arms)."""
         if self.use_kernel:
             p: PolicyParams = self.params
-            mu, n, phat, pn, prev, t, nxt = ops.fleet_step(
+            step_fn = (self._sharded_step if self._sharded_step is not None
+                       else functools.partial(ops.fleet_step,
+                                              interpret=self.interpret))
+            mu, n, phat, pn, prev, t, nxt = step_fn(
                 states["mu"], states["n"], states["phat"], states["pn"],
                 states["prev"], states["t"], arms, obs.reward, obs.progress,
-                obs.active, p.alpha, p.lam, interpret=self.interpret,
+                obs.active, p.alpha, p.lam, p.qos_delta, p.default_arm,
             )
             return (
                 {"mu": mu, "n": n, "phat": phat, "pn": pn, "prev": prev, "t": t},

@@ -203,15 +203,18 @@ def ucb_select(params: PolicyParams, state: PyTree, key) -> jax.Array:
     warm = jnp.where(untried, 1e9 - arms * 1.0, -1e9)
     sa = jnp.where((params.optimistic < 0.5) & jnp.any(untried), warm, sa)
     # feasible set {i : 1 - p_hat_i / p_hat[f_max] <= delta}; untried
-    # arms stay feasible (optimism under uncertainty)
-    p_ref = jnp.where(
-        state["pn"][params.default_arm] > 0,
-        state["phat"][params.default_arm],
-        jnp.inf,
-    )
+    # arms stay feasible (optimism under uncertainty), and until the
+    # reference arm itself has a progress sample EVERY arm stays
+    # feasible — p_ref = inf would otherwise give every tried arm
+    # slowdown 1.0 and leave only untried arms selectable
+    pn_ref = state["pn"][params.default_arm]
+    p_ref = jnp.where(pn_ref > 0, state["phat"][params.default_arm], jnp.inf)
     slowdown = 1.0 - state["phat"] / p_ref
     feasible = (
-        (params.qos_delta < 0.0) | (state["pn"] < 1.0) | (slowdown <= params.qos_delta)
+        (params.qos_delta < 0.0)
+        | (pn_ref < 1.0)
+        | (state["pn"] < 1.0)
+        | (slowdown <= params.qos_delta)
     )
     return _masked_argmax(sa, feasible)
 

@@ -183,7 +183,14 @@ class SimBackend(EnergyBackend):
     @property
     def ladder_ghz(self):
         f = np.asarray(self.params.freqs)
-        return tuple(f[0] if f.ndim == 2 else f)
+        if f.ndim == 2:
+            if not (f == f[0]).all():
+                raise ValueError(
+                    "heterogeneous per-node frequency ladders: there is no "
+                    "single fleet ladder (index self.params.freqs per node)"
+                )
+            f = f[0]
+        return tuple(f)
 
     @property
     def interval_s(self) -> float:
@@ -201,7 +208,11 @@ class SimBackend(EnergyBackend):
         return e, t
 
     def apply_arms(self, arms) -> None:
-        self._arms = jnp.asarray(arms, jnp.int32).reshape((self._n,))
+        # broadcast, don't reshape: a scalar or (1,) actuation fans out
+        # to the whole fleet; a mismatched (M,) still fails loudly
+        a = jnp.asarray(arms, jnp.int32)
+        self._arms = jnp.broadcast_to(a.reshape(-1) if a.ndim > 1 else a,
+                                      (self._n,))
 
     def advance(self, work_fn: Optional[Callable[[], Any]] = None) -> Any:
         out = work_fn() if work_fn is not None else None
@@ -334,7 +345,10 @@ def record_trace(backend: EnergyBackend, arm_schedule) -> TraceReplayBackend:
     counter log as a replayable backend. Advances (mutates) ``backend``."""
     sched = np.asarray(arm_schedule, np.int32)
     if sched.ndim == 1:
-        sched = sched[:, None]
+        # a 1-D schedule is one arm per interval for the WHOLE fleet:
+        # broadcast across nodes instead of pinning the shape to N=1
+        sched = np.broadcast_to(sched[:, None],
+                                (sched.shape[0], backend.n_nodes))
     rows = [backend.read_counters()]
     for arms in sched:
         backend.apply_arms(arms)

@@ -11,7 +11,11 @@ switch counter — and folds it into policy state through the
 - a single node is just a fleet of N=1;
 - a fleet of N>1 with a kernel-exact policy auto-dispatches the fused
   Pallas ``fleet_step`` (update-then-select in one launch, see
-  repro.core.fleet.Fleet / kernels.fleet_ucb);
+  repro.core.fleet.Fleet / kernels.fleet_ucb) — including the
+  QoS-constrained variant, whose feasible set rides as per-controller
+  ``qos_delta``/``default_arm`` kernel lanes;
+- fleets beyond one chip's VMEM pass ``mesh=`` to shard the (N, K)
+  controller state over the mesh's data axis (repro.parallel.fleet);
 - every other policy variant takes the vmapped ``PolicyFns`` path.
 
 For backends whose raw interval wall-time depends on the chosen
@@ -80,12 +84,13 @@ class EnergyController:
     tests do). Policy state, selection and updates all flow through the
     :class:`~repro.core.fleet.Fleet` / ``PolicyFns`` surface, so one
     jitted trace serves every hyperparameter value — including
-    per-node alpha/lambda lanes.
+    per-node alpha/lambda/qos_delta lanes.
     """
 
     def __init__(self, policy: Policy, backend: EnergyBackend, seed: int = 0,
                  reward_scale=None, use_kernel: Optional[bool] = None,
-                 interpret: bool = False, record_history: bool = True):
+                 interpret: bool = False, record_history: bool = True,
+                 mesh=None):
         self.policy = policy
         self.backend = backend
         # fleet-scale streams opt out: per-interval records are (N,) host
@@ -99,7 +104,7 @@ class EnergyController:
                 and (ops.pallas_available() or interpret)
             )
         self.fleet = Fleet(policy, self.n, use_kernel=use_kernel,
-                           interpret=interpret)
+                           interpret=interpret, mesh=mesh)
         self._key = jax.random.key(seed)
         self._key, k0 = jax.random.split(self._key)
         self._states = self.fleet.init(k0)

@@ -16,12 +16,18 @@ kernels, both bandwidth-trivial but latency-sensitive:
   arm it had selected; the kernel applies the mu/n/phat/pn running-mean
   update, advances prev/t, and selects the next arm from the updated
   state — update-then-select, one kernel instead of two plus the XLA
-  scatter soup in between.
+  scatter soup in between. The select half carries the QoS feasible-set
+  lane (§3.3): arms whose estimated slowdown vs the reference arm
+  exceeds the per-controller ``qos`` budget are masked out of the
+  argmax, with untried arms (and every arm while the reference arm has
+  no progress samples) staying feasible — optimism under uncertainty.
 
 Hyperparameters ride as per-controller (N,) arrays (hyperparams-as-data:
-a fleet can sweep alpha x lambda across its nodes in the same launch).
+a fleet can sweep alpha x lambda across its nodes, and mix QoS budgets
+— sentinel ``qos < 0`` = unconstrained — in the same launch).
 One program handles a BLOCK_N-controller stripe with all K arms resident
-in VMEM; K is small so the argmax/one-hot reductions stay in registers.
+in VMEM; K is small so the argmax/one-hot/feasibility reductions stay in
+registers.
 
 Validated in interpret mode against kernels.ref.ref_fleet_select /
 ref_fleet_step on ragged fleet sizes (tests/test_kernels.py).
@@ -50,6 +56,37 @@ def _first_argmax(sa, k):
     return jnp.min(jnp.where(sa >= best, arms, k), axis=1).astype(jnp.int32)
 
 
+def _qos_feasible(phat, pn, qos, def_arm, arms):
+    """(BN, K) QoS feasible mask {i : 1 - phat_i/phat[def] <= qos}.
+
+    Mirrors policies.ucb_select bit-for-bit: the reference progress is
+    the default (f_max) arm's estimate; until that arm has >= 1 progress
+    sample — and for every still-untried arm — feasibility defaults to
+    True (optimism under uncertainty), and sentinel ``qos < 0`` turns the
+    constraint off for that controller entirely."""
+    def_onehot = (arms == def_arm[:, None]).astype(phat.dtype)
+    pn_ref = jnp.sum(pn * def_onehot, axis=1)
+    phat_ref = jnp.sum(phat * def_onehot, axis=1)
+    p_ref = jnp.where(pn_ref > 0, phat_ref, jnp.inf)
+    slowdown = 1.0 - phat / p_ref[:, None]
+    return (
+        (qos[:, None] < 0.0)
+        | (pn_ref[:, None] < 1.0)
+        | (pn < 1.0)
+        | (slowdown <= qos[:, None])
+    )
+
+
+def _feasible_argmax(sa, feasible, k):
+    """policies._masked_argmax, rowwise: argmax over the feasible set,
+    falling back to the unmasked argmax when nothing is feasible."""
+    neg = jnp.finfo(sa.dtype).min
+    masked = jnp.where(feasible, sa, neg)
+    # float reduce instead of a bool jnp.any: TPU-safe either way
+    has_f = jnp.max(jnp.where(feasible, 1.0, 0.0), axis=1) > 0.5
+    return jnp.where(has_f, _first_argmax(masked, k), _first_argmax(sa, k))
+
+
 def _fleet_select_kernel(mu_ref, n_ref, prev_ref, t_ref, alpha_ref, lam_ref,
                          arm_ref, *, k):
     sa = _sa_scores(
@@ -61,7 +98,7 @@ def _fleet_select_kernel(mu_ref, n_ref, prev_ref, t_ref, alpha_ref, lam_ref,
 
 def _fleet_step_kernel(
     mu_ref, n_ref, phat_ref, pn_ref, prev_ref, t_ref,
-    arm_ref, r_ref, p_ref, act_ref, alpha_ref, lam_ref,
+    arm_ref, r_ref, prog_ref, act_ref, alpha_ref, lam_ref, qos_ref, def_ref,
     mu_o, n_o, phat_o, pn_o, prev_o, t_o, next_o, *, k,
 ):
     mu, cnt = mu_ref[...], n_ref[...]
@@ -74,18 +111,20 @@ def _fleet_step_kernel(
     n2 = cnt + onehot
     mu2 = mu + onehot * (r_ref[...][:, None] - mu) / jnp.maximum(n2, 1.0)
     pn2 = pn + onehot
-    phat2 = phat + onehot * (p_ref[...][:, None] - phat) / jnp.maximum(pn2, 1.0)
+    phat2 = phat + onehot * (prog_ref[...][:, None] - phat) / jnp.maximum(pn2, 1.0)
     prev2 = jnp.where(act > 0.5, arm, prev).astype(jnp.int32)
     t2 = t + act
-    # --- select the next arm from the freshly updated state
+    # --- select the next arm from the freshly updated state, restricted
+    # to each controller's QoS feasible set
     sa = _sa_scores(mu2, n2, prev2, t2, alpha_ref[...], lam_ref[...])
+    feasible = _qos_feasible(phat2, pn2, qos_ref[...], def_ref[...], arms)
     mu_o[...] = mu2
     n_o[...] = n2
     phat_o[...] = phat2
     pn_o[...] = pn2
     prev_o[...] = prev2
     t_o[...] = t2
-    next_o[...] = _first_argmax(sa, k)
+    next_o[...] = _feasible_argmax(sa, feasible, k)
 
 
 def _pad(a, pad, fill=0):
@@ -141,6 +180,8 @@ def fleet_step(
     active: jax.Array,  # (N,) f32 0/1: controller's job still running
     alpha: jax.Array,  # (N,)
     lam: jax.Array,  # (N,)
+    qos: jax.Array,  # (N,) slowdown budget; sentinel < 0 = unconstrained
+    def_arm: jax.Array,  # (N,) int32 QoS reference (f_max) arm
     *,
     block_n: int = 1024,
     interpret: bool = False,
@@ -154,7 +195,8 @@ def fleet_step(
             _pad(mu, pad), _pad(n, pad, 1), _pad(phat, pad), _pad(pn, pad, 1),
             _pad(prev, pad), _pad(t, pad, 2.0), _pad(arm, pad),
             _pad(reward, pad), _pad(progress, pad), _pad(active, pad),
-            _pad(alpha, pad), _pad(lam, pad),
+            _pad(alpha, pad), _pad(lam, pad), _pad(qos, pad, -1.0),
+            _pad(def_arm, pad),
             block_n=block_n, interpret=interpret,
         )
         return tuple(o[:nn] for o in out)
@@ -165,7 +207,8 @@ def fleet_step(
     return pl.pallas_call(
         kernel,
         grid=(nn // block_n,),
-        in_specs=[mat, mat, mat, mat, row, row, row, row, row, row, row, row],
+        in_specs=[mat, mat, mat, mat, row, row, row, row, row, row, row, row,
+                  row, row],
         out_specs=(mat, mat, mat, mat, row, row, row),
         out_shape=(
             jax.ShapeDtypeStruct((nn, k), f32),
@@ -177,4 +220,5 @@ def fleet_step(
             jax.ShapeDtypeStruct((nn,), jnp.int32),
         ),
         interpret=interpret,
-    )(mu, n, phat, pn, prev, t, arm, reward, progress, active, alpha, lam)
+    )(mu, n, phat, pn, prev, t, arm, reward, progress, active, alpha, lam,
+      qos, def_arm)

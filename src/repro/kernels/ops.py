@@ -60,12 +60,19 @@ def fleet_select(mu, n, prev, t, alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, *,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
-               alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, *,
-               interpret: bool = False):
-    """Fused per-interval fleet controller step (update then select).
+               alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, qos_delta=-1.0,
+               default_arm=None, *, interpret: bool = False):
+    """Fused per-interval fleet controller step (update then select,
+    restricted to each controller's QoS feasible set; the ``qos_delta``
+    sentinel < 0 disables the constraint per controller, so mixed
+    constrained/unconstrained fleets share one launch). ``default_arm``
+    is the QoS reference and defaults to the top-of-ladder f_max arm
+    (K-1), matching the policy convention.
     Returns (mu, n, phat, pn, prev, t, next_arm)."""
     interp = interpret or not pallas_available()
-    nn = mu.shape[0]
+    nn, k = mu.shape
+    if default_arm is None:
+        default_arm = k - 1
     return _fleet_step(
         mu, n, phat, pn, prev, t,
         jnp.asarray(arm, jnp.int32),
@@ -73,5 +80,7 @@ def fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
         jnp.asarray(progress, jnp.float32),
         jnp.asarray(active, jnp.float32),
         _per_controller(alpha, nn), _per_controller(lam, nn),
+        _per_controller(qos_delta, nn),
+        jnp.broadcast_to(jnp.asarray(default_arm, jnp.int32), (nn,)),
         interpret=interp,
     )

@@ -59,10 +59,13 @@ def ref_fleet_select(mu, n, prev, t, *, alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM):
 
 
 def ref_fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
-                   alpha, lam):
+                   alpha, lam, qos=None, default_arm=None):
     """Fused update-then-select oracle for kernels.fleet_ucb.fleet_step:
     apply the interval's observation as a one-hot running-mean update
-    (frozen where inactive), then pick the next SA-UCB arm."""
+    (frozen where inactive), then pick the next SA-UCB arm from each
+    controller's QoS feasible set. ``qos=None`` (or the per-controller
+    sentinel ``qos < 0``) is the unconstrained lane; until the reference
+    arm has a progress sample, every arm stays feasible."""
     act = active.astype(mu.dtype)
     k = mu.shape[1]
     onehot = (jnp.arange(k)[None, :] == arm[:, None]).astype(mu.dtype) * act[:, None]
@@ -73,5 +76,29 @@ def ref_fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
     prev2 = jnp.where(act > 0.5, arm, prev).astype(jnp.int32)
     t2 = t + act
     sa = _ref_sa_scores(mu2, n2, prev2, t2, alpha, lam)
-    nxt = jnp.argmax(sa, axis=1).astype(jnp.int32)
+    if qos is None:
+        nxt = jnp.argmax(sa, axis=1).astype(jnp.int32)
+        return mu2, n2, phat2, pn2, prev2, t2, nxt
+    nn = mu.shape[0]
+    q = jnp.broadcast_to(jnp.asarray(qos, jnp.float32), (nn,))
+    da = jnp.broadcast_to(
+        jnp.asarray(k - 1 if default_arm is None else default_arm, jnp.int32),
+        (nn,),
+    )
+    pn_ref = jnp.take_along_axis(pn2, da[:, None], axis=1)[:, 0]
+    phat_ref = jnp.take_along_axis(phat2, da[:, None], axis=1)[:, 0]
+    p_ref = jnp.where(pn_ref > 0, phat_ref, jnp.inf)
+    slowdown = 1.0 - phat2 / p_ref[:, None]
+    feasible = (
+        (q[:, None] < 0.0)
+        | (pn_ref[:, None] < 1.0)
+        | (pn2 < 1.0)
+        | (slowdown <= q[:, None])
+    )
+    neg = jnp.finfo(sa.dtype).min
+    masked = jnp.where(feasible, sa, neg)
+    nxt = jnp.where(
+        jnp.any(feasible, axis=1), jnp.argmax(masked, axis=1),
+        jnp.argmax(sa, axis=1),
+    ).astype(jnp.int32)
     return mu2, n2, phat2, pn2, prev2, t2, nxt

@@ -17,7 +17,7 @@ from repro.models import build_model
 from repro.serve.engine import Request, ServeEngine
 
 
-def main():
+def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="starcoder2-15b")
     ap.add_argument("--requests", type=int, default=8)
@@ -28,14 +28,23 @@ def main():
     ap.add_argument("--energy", action="store_true")
     ap.add_argument("--qos", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap.parse_args(argv)
 
+
+def build_policy(args):
+    # --qos 0.0 is a valid (strictest) slowdown budget: dispatch on
+    # `is None`, never on truthiness
+    return energy_ucb(qos_delta=args.qos)
+
+
+def main():
+    args = parse_args()
     cfg = get_arch(args.arch) if args.full_config else get_reduced(args.arch)
     bundle = build_model(cfg)
     params = bundle.init(jax.random.key(args.seed))
     controller = None
     if args.energy:
-        pol = energy_ucb(qos_delta=args.qos) if args.qos else energy_ucb()
+        pol = build_policy(args)
         model = StepEnergyModel(t_compute_s=0.01, t_memory_s=0.05,
                                 t_collective_s=0.02, n_chips=4, steps_total=500)
         controller = EnergyController(pol, make_backend(model))

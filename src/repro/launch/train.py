@@ -20,7 +20,7 @@ from repro.models import build_model
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def main():
+def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--steps", type=int, default=50)
@@ -31,14 +31,23 @@ def main():
                     help="run the EnergyUCB controller in the loop")
     ap.add_argument("--qos", type=float, default=None)
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
-    args = ap.parse_args()
+    return ap.parse_args(argv)
 
+
+def build_policy(args):
+    # --qos 0.0 is a valid (strictest) slowdown budget: dispatch on
+    # `is None`, never on truthiness
+    return energy_ucb(qos_delta=args.qos)
+
+
+def main():
+    args = parse_args()
     cfg = get_arch(args.arch) if args.full_config else get_reduced(args.arch)
     bundle = build_model(cfg)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     controller = None
     if args.energy:
-        pol = energy_ucb(qos_delta=args.qos) if args.qos else energy_ucb()
+        pol = build_policy(args)
         model = StepEnergyModel(t_compute_s=0.2, t_memory_s=0.3,
                                 t_collective_s=0.1, n_chips=8,
                                 steps_total=args.steps)

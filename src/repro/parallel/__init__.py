@@ -1,3 +1,10 @@
+from repro.parallel.fleet import fleet_mesh, make_sharded_fleet_step
 from repro.parallel.sharding import DEFAULT_RULES, Sharder, spec_for_axes
 
-__all__ = ["DEFAULT_RULES", "Sharder", "spec_for_axes"]
+__all__ = [
+    "DEFAULT_RULES",
+    "Sharder",
+    "fleet_mesh",
+    "make_sharded_fleet_step",
+    "spec_for_axes",
+]

@@ -1,0 +1,82 @@
+"""Sharded fleet step: (N, K) controller state over the mesh's data axis.
+
+One chip's VMEM comfortably holds tens of thousands of controllers (the
+fused kernel streams BLOCK_N stripes), but Aurora-scale fleets (63,720
+controllers) with per-controller hyperparameter lanes — or fleets grown
+past that — eventually exceed a single device. The controller step is
+embarrassingly row-parallel: every node's update-then-select touches
+only its own (K,) slice, so the whole step ``shard_map``s over the
+mesh's data axis with ZERO collectives — each device runs the fused
+Pallas kernel (kernels/fleet_ucb.fleet_step) on its own N/D stripe, and
+state never leaves the device between intervals.
+
+Bit-parity with the single-device kernel is asserted in
+tests/test_sharding.py (in-process on the host mesh, and on a forced
+8-device mesh in a subprocess).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.fleet_ucb import _pad, fleet_step
+
+
+def fleet_mesh(devices: Optional[Sequence] = None, axis: str = "data") -> Mesh:
+    """A 1-D controller mesh over the given (default: all) devices."""
+    devs = np.asarray(jax.devices() if devices is None else list(devices))
+    return Mesh(devs.reshape(-1), (axis,))
+
+
+def make_sharded_fleet_step(
+    mesh: Mesh, axis: str = "data", block_n: int = 1024,
+    interpret: bool = False,
+) -> Callable:
+    """Build the jitted sharded fleet step for ``mesh``.
+
+    Returns ``step(mu, n, phat, pn, prev, t, arm, reward, progress,
+    active, alpha, lam, qos, def_arm) -> (mu, n, phat, pn, prev, t,
+    next_arm)`` with every array sharded on its leading N axis over
+    ``axis``. Scalar hyperparameters broadcast to (N,) lanes first, and
+    ragged fleets are padded to a shard multiple with inactive (frozen)
+    controllers — same convention as the kernel's stripe padding — then
+    sliced back.
+    """
+    n_shards = int(mesh.shape[axis])
+    kernel = functools.partial(fleet_step, block_n=block_n,
+                               interpret=interpret)
+    row, mat = P(axis), P(axis, None)
+    sharded = shard_map(
+        kernel, mesh=mesh,
+        in_specs=(mat, mat, mat, mat, row, row, row, row, row, row, row,
+                  row, row, row),
+        out_specs=(mat, mat, mat, mat, row, row, row),
+        check_rep=False,  # pallas_call has no replication rule
+    )
+
+    @jax.jit
+    def step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
+             alpha, lam, qos, def_arm):
+        nn = mu.shape[0]
+        lane = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (nn,))
+        ilane = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.int32), (nn,))
+        args = [
+            mu, n, phat, pn, ilane(prev), lane(t), ilane(arm),
+            lane(reward), lane(progress), lane(active),
+            lane(alpha), lane(lam), lane(qos), ilane(def_arm),
+        ]
+        pad = (-nn) % n_shards
+        if pad:
+            fills = (0, 1, 0, 1, 0, 2.0, 0, 0, 0, 0, 0, 0, -1.0, 0)
+            args = [_pad(a, pad, f) for a, f in zip(args, fills)]
+        out = sharded(*args)
+        return tuple(o[:nn] for o in out) if pad else out
+
+    return step

@@ -78,6 +78,33 @@ def test_qos_constrained_respects_budget():
     assert out["energy_kj"].mean() <= TABLE1_KJ[name][-1] * 1.01
 
 
+def test_qos_all_feasible_until_reference_arm_sampled():
+    """Regression: with no progress samples on the reference arm,
+    p_ref = inf gave every TRIED arm slowdown 1.0 (infeasible), so the
+    controller could only ever pick untried arms. Until the reference
+    arm has >= 1 sample the whole ladder must stay feasible."""
+    import jax.numpy as jnp
+
+    pol = energy_ucb(qos_delta=0.05)
+    state = pol.init(jax.random.key(0))
+    k = state["mu"].shape[0]
+    # arms 0..k-2 tried and accurately estimated, arm 0 clearly best;
+    # the reference arm (k-1) has NO progress samples yet
+    state = {
+        **state,
+        "mu": jnp.where(jnp.arange(k) == 0, -0.1, -1.0),
+        "n": jnp.where(jnp.arange(k) < k - 1, 20.0, 0.0),
+        "phat": jnp.where(jnp.arange(k) < k - 1, 2e-4, 0.0),
+        "pn": jnp.where(jnp.arange(k) < k - 1, 20.0, 0.0),
+        "prev": jnp.int32(0),
+        "t": jnp.float32(150.0),
+    }
+    arm = int(pol.select(state, jax.random.key(1)))
+    assert arm == 0, (
+        f"select picked {arm}: tried arms must stay feasible while the "
+        "reference arm is unsampled")
+
+
 def test_unconstrained_beats_constrained_on_energy():
     p = make_env_params(get_app("clvleaf"))
     unc = run_repeats(energy_ucb(), p, jax.random.key(2), 3)["energy_kj"].mean()

@@ -177,12 +177,96 @@ def test_fleet_controller_fused_dispatch_matches_vmapped():
 
 def test_controller_kernel_gating():
     """N=1 stays on the plain path; non-kernel-exact policies never
-    dispatch the fused step even for N>1."""
+    dispatch the fused step even for N>1 — but QoS-constrained fleets
+    now DO (the kernel carries the feasible-set lane)."""
     p = make_env_params(get_app("tealeaf"))
     assert not EnergyController(energy_ucb(), SimBackend(p, n=1),
                                 interpret=True).use_kernel
-    assert not EnergyController(energy_ucb(qos_delta=0.05),
+    assert EnergyController(energy_ucb(qos_delta=0.05),
+                            SimBackend(p, n=4), interpret=True).use_kernel
+    assert not EnergyController(energy_ucb(window_discount=0.99),
                                 SimBackend(p, n=4), interpret=True).use_kernel
+
+
+def test_fleet_controller_qos_fused_dispatch_matches_vmapped():
+    """Constrained streaming fleets auto-dispatch the fused kernel and
+    stay bit-identical to the vmapped PolicyFns path on a ragged N."""
+    p = make_env_params(get_app("miniswp"))
+    n = 5
+    pol = energy_ucb(qos_delta=0.05)
+    fused = EnergyController(pol, SimBackend(p, n=n, seed=5), seed=2,
+                             interpret=True)
+    assert fused.use_kernel, "constrained N>1 fleet must auto-dispatch"
+    plain = EnergyController(pol, SimBackend(p, n=n, seed=5), seed=2,
+                             use_kernel=False)
+    for _ in range(25):
+        rf = fused.step()
+        rv = plain.step()
+        np.testing.assert_array_equal(rf["arm"], rv["arm"])
+        np.testing.assert_allclose(rf["reward"], rv["reward"], rtol=1e-6)
+    for leaf in fused.states:
+        np.testing.assert_array_equal(
+            np.asarray(fused.states[leaf]), np.asarray(plain.states[leaf]),
+            err_msg=f"constrained streaming fused path diverged on {leaf}",
+        )
+
+
+def test_controller_constrained_fleet_respects_budget():
+    """Fig. 5b end to end through the streaming control plane: once the
+    warm-up exploration has sampled every arm, a constrained fleet only
+    actuates arms within the slowdown budget (true slowdown, from the
+    calibrated t_rel ladder), while the unconstrained fleet keeps
+    visiting over-budget arms on this memory-bound app."""
+    p = make_env_params(get_app("miniswp"))
+    true_slow = 1.0 - np.asarray(p.t_rel)[-1] / np.asarray(p.t_rel)
+    delta = 0.05
+
+    def post_warmup_slowdowns(policy):
+        ctl = EnergyController(policy, SimBackend(p, n=4, seed=3), seed=2,
+                               interpret=True)
+        for _ in range(400):
+            ctl.step()
+        arms = np.stack([np.asarray(h["arm"]) for h in ctl.history])
+        return true_slow[arms[50:]]
+
+    con = post_warmup_slowdowns(energy_ucb(qos_delta=delta))
+    unc = post_warmup_slowdowns(energy_ucb())
+    assert (con <= delta + 1e-6).all(), (
+        f"constrained fleet exceeded budget: max {con.max():.4f}")
+    # the budget binds: unconstrained picks over-budget arms here
+    assert (unc > delta + 1e-6).mean() > 0.05
+    assert con.mean() < unc.mean()
+    # strictest valid budget --qos 0.0 pins the fleet to ~f_max (small
+    # tolerance: feasibility works on noisy progress estimates)
+    z = post_warmup_slowdowns(energy_ucb(qos_delta=0.0))
+    assert z.mean() <= 2e-3 and z.max() <= 0.01
+
+
+def test_record_trace_broadcasts_1d_schedule_over_fleet():
+    """Regression: a 1-D arm schedule used to hard-reshape to (T, 1) and
+    crash SimBackend.apply_arms for N>1 fleets; it now means 'this arm
+    for the whole fleet each interval'."""
+    params = noise_free_params()
+    trace = record_trace(SimBackend(params, n=3), np.array([2, 5, 2, 7]))
+    assert trace.n_nodes == 3 and len(trace) == 4
+    # all three nodes saw the same actuation each interval
+    sw = np.asarray(trace.trace.switches)
+    assert sw.shape == (5, 3)
+    np.testing.assert_array_equal(sw[:, 0], sw[:, 1])
+
+
+def test_sim_backend_heterogeneous_ladder_guard():
+    """Stacked per-node EnvParams with DIFFERENT frequency ladders must
+    raise from ladder_ghz instead of silently returning node 0's."""
+    from repro.energy import stack_env_params
+
+    p = noise_free_params()
+    p_shift = p._replace(freqs=p.freqs + 0.1)
+    hetero = SimBackend(stack_env_params([p, p_shift]))
+    with pytest.raises(ValueError, match="heterogeneous"):
+        hetero.ladder_ghz
+    homo = SimBackend(stack_env_params([p, p]))
+    np.testing.assert_allclose(homo.ladder_ghz, np.asarray(p.freqs))
 
 
 # ---------------------------------------------------------------------------

@@ -122,7 +122,7 @@ def test_fleet_per_node_alpha_lanes():
 
 
 def test_fleet_step_vmap_path_requires_key():
-    pol = energy_ucb(qos_delta=0.05)  # not kernel-compatible -> vmap path
+    pol = energy_ucb(window_discount=0.9)  # not kernel-compatible -> vmap path
     f = Fleet(pol, 4)
     states = f.init(jax.random.key(0))
     arms = f.select(states, jax.random.key(1))
@@ -131,14 +131,49 @@ def test_fleet_step_vmap_path_requires_key():
 
 
 def test_fleet_kernel_dispatch_gating():
-    """Only exact-kernel policies may route to the fused step."""
+    """Only exact-kernel policies may route to the fused step; since the
+    QoS feasible-set lane landed, constrained EnergyUCB is one of them."""
     from repro.core.fleet import kernel_compatible
 
     assert kernel_compatible(energy_ucb())
-    assert not kernel_compatible(energy_ucb(qos_delta=0.05))
+    assert kernel_compatible(energy_ucb(qos_delta=0.05))
+    assert kernel_compatible(energy_ucb(qos_delta=0.0))  # strictest budget
     assert not kernel_compatible(energy_ucb(window_discount=0.99))
     assert not kernel_compatible(energy_ucb(optimistic_init=False))
     from repro.core import rr_freq
 
     assert not kernel_compatible(rr_freq())
-    assert not Fleet(energy_ucb(qos_delta=0.05), 8, interpret=True).use_kernel
+    assert Fleet(energy_ucb(qos_delta=0.05), 8, interpret=True).use_kernel
+    assert not Fleet(energy_ucb(window_discount=0.99), 8,
+                     interpret=True).use_kernel
+
+
+# ragged sub-stripe and a non-multiple above one stripe
+@pytest.mark.parametrize("n", [7, 1030])
+def test_fleet_qos_lanes_fused_matches_vmapped(n):
+    """Constrained fleets dispatch fused and stay bit-identical to the
+    vmapped path, with MIXED per-node budgets: sentinel-off (-1), a 0.0
+    strictest budget, and a spread of positive deltas, plus per-node
+    reference arms."""
+    base = energy_ucb(qos_delta=0.05)
+    qos = jnp.where(jnp.arange(n) % 3 == 0, -1.0,
+                    jnp.linspace(0.0, 0.1, n).astype(jnp.float32))
+    da = (jnp.arange(n) % 9).astype(jnp.int32)
+    pol = base.with_params(base.params._replace(qos_delta=qos, default_arm=da))
+    fused = Fleet(pol, n, interpret=True)
+    assert fused.use_kernel, "constrained fleets must dispatch fused now"
+    vmapped = Fleet(pol, n, use_kernel=False)
+    states = vmapped.init(jax.random.key(0))
+    arms = vmapped.select(states, jax.random.key(1))
+    for i in range(5):
+        states, arms = vmapped.step(states, arms,
+                                    _synth_obs(n, jax.random.key(50 + i)),
+                                    jax.random.key(60 + i))
+    obs = _synth_obs(n, jax.random.key(7))
+    s_k, a_k = fused.step(states, arms, obs)
+    s_v, a_v = vmapped.step(states, arms, obs, jax.random.key(8))
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_v))
+    for leaf in states:
+        np.testing.assert_array_equal(
+            np.asarray(s_k[leaf]), np.asarray(s_v[leaf]),
+            err_msg=f"constrained fused step diverged on {leaf} (n={n})")

@@ -102,6 +102,79 @@ def test_fleet_step_matches_ref(n):
             np.asarray(g), np.asarray(w), err_msg=f"fleet_step {nm} n={n}")
 
 
+def _qos_lanes(s, n, k=9):
+    """Mixed per-controller QoS lanes: ~half sentinel-off, the rest a
+    spread of budgets incl. 0.0; per-node reference arms; and a third of
+    the fleet with a sample-free reference arm (the untried-ref rule)."""
+    key = jax.random.key(1000 + n)
+    f = lambda i: jax.random.fold_in(key, i)
+    qos = jnp.where(jax.random.uniform(f(1), (n,)) < 0.5,
+                    jax.random.uniform(f(2), (n,), maxval=0.15), -1.0)
+    qos = qos.at[: min(4, n)].set(0.0)  # strictest valid budget
+    da = jax.random.randint(f(3), (n,), 0, k)
+    zero_ref = ((jnp.arange(n) % 3 == 0)[:, None]
+                & (jnp.arange(k)[None, :] == da[:, None]))
+    s = dict(s, pn=jnp.where(zero_ref, 0.0, s["pn"]))
+    return s, qos, da
+
+
+# ragged fleet sizes again: the QoS lane must survive pad-and-slice
+@pytest.mark.parametrize("n", [7, 1024, 2049])
+def test_fleet_step_qos_lane_matches_ref(n):
+    """The fused step's QoS feasible-set lane (interpret mode) is exact
+    vs the oracle on mixed constrained/sentinel-off fleets, including
+    controllers whose reference arm has no progress samples yet."""
+    s, qos, da = _qos_lanes(_fleet_state(n, seed=n + 1), n)
+    args = (s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+            s["reward"], s["progress"], s["active"], s["alpha"], s["lam"])
+    got = ops.fleet_step(*args, qos, da, interpret=True)
+    want = ref.ref_fleet_step(*args, qos=qos, default_arm=da)
+    names = ("mu", "n", "phat", "pn", "prev", "t", "next_arm")
+    for nm, g, w in zip(names, got, want):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w), err_msg=f"qos fleet_step {nm} n={n}")
+
+
+def test_fleet_step_qos_constraint_binds():
+    """On a fleet where low arms look best but are too slow, the
+    constrained selection must differ from the unconstrained one (the
+    lane is live, not decorative) while the sentinel-off rows agree."""
+    n = 256
+    s = _fleet_state(n, seed=11)
+    # progress strongly increasing in arm index; rewards favor arm 0
+    k = s["mu"].shape[1]
+    s["phat"] = jnp.broadcast_to(jnp.linspace(1e-4, 2e-4, k), (n, k))
+    s["mu"] = jnp.broadcast_to(-jnp.linspace(0.2, 1.0, k), (n, k))
+    s["pn"] = jnp.full((n, k), 5.0)
+    s["n"] = jnp.full((n, k), 5.0)
+    da = jnp.full((n,), k - 1, jnp.int32)
+    qos_on = jnp.full((n,), 0.05, jnp.float32)
+    args = (s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+            s["reward"], s["progress"], s["active"], s["alpha"], s["lam"])
+    con = ops.fleet_step(*args, qos_on, da, interpret=True)[-1]
+    unc = ops.fleet_step(*args, -jnp.ones((n,)), da, interpret=True)[-1]
+    assert not np.array_equal(np.asarray(con), np.asarray(unc))
+    # constrained picks satisfy the budget on their estimated slowdown
+    phat2 = np.asarray(ops.fleet_step(*args, qos_on, da, interpret=True)[2])
+    rows = np.arange(n)
+    slow = 1.0 - phat2[rows, np.asarray(con)] / phat2[rows, k - 1]
+    assert (slow <= 0.05 + 1e-6).all()
+
+
+def test_fleet_step_qos_sentinel_matches_unconstrained():
+    """An all-sentinel (-1) qos lane reproduces the unconstrained kernel
+    bit for bit — one launch serves mixed fleets."""
+    n = 130
+    s = _fleet_state(n, seed=5)
+    args = (s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+            s["reward"], s["progress"], s["active"], s["alpha"], s["lam"])
+    got = ops.fleet_step(*args, -jnp.ones((n,)),
+                         jnp.zeros((n,), jnp.int32), interpret=True)
+    want = ref.ref_fleet_step(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
 def test_fleet_step_frozen_controllers_keep_state():
     s = _fleet_state(64, seed=3)
     s["active"] = jnp.zeros((64,), jnp.float32)

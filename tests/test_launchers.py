@@ -1,0 +1,41 @@
+"""Launcher CLI -> policy wiring. Regression for the silent --qos 0.0
+drop: both launchers used `if args.qos` (falsy for 0.0), discarding the
+strictest valid slowdown budget a user can ask for."""
+import numpy as np
+import pytest
+
+from repro.launch import serve, train
+
+
+@pytest.mark.parametrize("mod", [serve, train], ids=["serve", "train"])
+def test_qos_zero_reaches_policy_as_binding_constraint(mod):
+    args = mod.parse_args(["--energy", "--qos", "0.0"])
+    pol = mod.build_policy(args)
+    # qos_delta == 0.0 (not the -1.0 'off' sentinel): the constraint binds
+    assert float(pol.params.qos_delta) == 0.0
+    assert "QoS" in pol.name
+    # and a 0.0-budget policy is feasibility-restricted: with accurate
+    # progress estimates it must refuse any arm slower than the reference
+    import jax
+    import jax.numpy as jnp
+
+    state = pol.init(jax.random.key(0))
+    k = state["mu"].shape[0]
+    state = {
+        **state,
+        "mu": -jnp.linspace(0.1, 1.0, k),  # slowest arm looks best
+        "n": jnp.full((k,), 5.0),
+        "phat": jnp.linspace(1e-4, 2e-4, k),  # but IS 2x slower
+        "pn": jnp.full((k,), 5.0),
+        "t": jnp.float32(45.0),
+    }
+    arm = int(pol.select(state, jax.random.key(1)))
+    assert arm == k - 1, f"qos=0.0 must pin to f_max, picked {arm}"
+
+
+@pytest.mark.parametrize("mod", [serve, train], ids=["serve", "train"])
+def test_qos_default_and_value(mod):
+    assert mod.parse_args([]).qos is None
+    assert float(mod.build_policy(mod.parse_args([])).params.qos_delta) < 0.0
+    pol = mod.build_policy(mod.parse_args(["--qos", "0.05"]))
+    np.testing.assert_allclose(float(pol.params.qos_delta), 0.05)
