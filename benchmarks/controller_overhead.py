@@ -4,8 +4,19 @@ controllers) — vmapped, and through the fused Pallas select+update
 fleet step — and end-to-end through the streaming EnergyController
 (actuate -> advance -> read counters -> derive Obs -> policy step), the
 path every deployment runs. The paper's feasibility argument
-('lightweight') quantified."""
+('lightweight') quantified.
+
+CLI (the CI benchmark-smoke job runs --quick and uploads the JSON):
+
+  PYTHONPATH=src:. python benchmarks/controller_overhead.py \\
+      [--full] [--quick] [--json BENCH_controller_overhead.json]
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +29,11 @@ from repro.energy import EnergyController, SimBackend
 from repro.kernels import ops
 
 
-def run(fast: bool = True, out_json=None):
+def run(fast: bool = True, out_json=None, quick: bool = False):
+    """``fast`` shrinks the fleet from Aurora scale; ``quick`` shrinks
+    further (CI smoke: minutes, not tens of minutes, on a cold CPU
+    runner). ``out_json`` writes the rows + environment metadata so CI
+    can upload the perf trajectory as an artifact."""
     rows = []
     pol = energy_ucb()
     p = make_env_params(get_app("tealeaf"))
@@ -42,7 +57,7 @@ def run(fast: bool = True, out_json=None):
     rows.append({"name": "controller_update", "us_per_call": f"{us_upd:.1f}",
                  "derived": "single"})
 
-    n = 63_720 if not fast else 8192
+    n = 2048 if quick else (63_720 if not fast else 8192)
     # pin the vmap path so the vmap-vs-kernel rows stay distinct on TPU
     fleet = Fleet(pol, n, use_kernel=False)
     states = fleet.init(jax.random.key(2))
@@ -75,7 +90,7 @@ def run(fast: bool = True, out_json=None):
                  "derived": f"{us_step/n*1000:.2f} ns/controller"})
 
     # the fused Pallas kernel (interpret mode off-TPU, so time a small N)
-    nk = n if ops.pallas_available() else 2048
+    nk = n if ops.pallas_available() else (512 if quick else 2048)
     kf = Fleet(pol, nk, use_kernel=True, interpret=not ops.pallas_available())
     kstates = kf.init(jax.random.key(5))
     karms = kf.select(kstates, jax.random.key(6))
@@ -110,15 +125,42 @@ def run(fast: bool = True, out_json=None):
               f"({us/nn*1000:.1f} ns/controller)")
         return us
 
-    ctrl_us(1, False, "python", 50)
-    nf = 2048 if fast else 8192
-    ctrl_us(nf, False, "vmap", 10)
-    ctrl_us(nf, True, "fused", 3 if not ops.pallas_available() else 10)
+    ctrl_us(1, False, "python", 20 if quick else 50)
+    nf = 512 if quick else (2048 if fast else 8192)
+    ctrl_us(nf, False, "vmap", 5 if quick else 10)
+    kreps = 3 if not ops.pallas_available() else 10
+    ctrl_us(nf, True, "fused", kreps)
     # the QoS feasible-set lane's latency cost on the same fused path
-    ctrl_us(nf, True, "fused_qos", 3 if not ops.pallas_available() else 10,
-            policy=energy_ucb(qos_delta=0.05))
+    ctrl_us(nf, True, "fused_qos", kreps, policy=energy_ucb(qos_delta=0.05))
+
+    if out_json is not None:
+        payload = {
+            "benchmark": "controller_overhead",
+            "mode": "quick" if quick else ("fast" if fast else "full"),
+            "backend": jax.default_backend(),
+            "pallas": ops.pallas_available(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "rows": rows,
+        }
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {len(rows)} rows -> {out_json}")
     return rows
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="Aurora-scale fleet (63,720 controllers)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (minutes on a cold CPU runner)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + env metadata as JSON")
+    args = ap.parse_args(argv)
+    run(fast=not args.full, out_json=args.json, quick=args.quick)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

@@ -1,9 +1,20 @@
 """Fleet-scale control plane: 63,720 controllers (10,620 Aurora nodes x
 6 GPUs) advanced in lockstep through the fused select+update fleet
 step, plus the coordinated gang mode for synchronous data-parallel
-training.
+training — and the multi-process deployment shape, where H controller
+processes each own a backend stripe (repro.parallel.distributed).
 
   PYTHONPATH=src python examples/fleet_control.py
+
+The multi-process control plane also has its own CLI launcher
+(repro.launch.fleet_serve): run one process per host with
+``--num-hosts H --host-id h --coordinator host:port`` (plus ``--app``,
+``--nodes``, ``--qos``, ``--trace`` for recorded-counter replay, and
+``--report-every`` for periodic fleet aggregates), or ``--spawn`` to
+fork all H hosts locally in one command:
+
+  PYTHONPATH=src python -m repro.launch.fleet_serve --spawn \\
+      --num-hosts 2 --nodes 64 --intervals 100 --report-every 25
 """
 import time
 
@@ -110,6 +121,26 @@ def main():
           f"{'fused kernel' if ctl.use_kernel else 'vmapped'}): "
           f"{dt*1e3:.2f} ms/interval; saved {s['saved_energy_pct']:.1f}% "
           f"vs f_max, {s['switches']} switches")
+
+    # the multi-process deployment shape: H controller processes, each
+    # owning its own EnergyBackend stripe and N/H controllers, zero
+    # per-interval collectives — fleet aggregates rendezvous over the
+    # stdlib-socket coordinator (see module docstring for the per-host
+    # CLI; --spawn forks both hosts locally)
+    import subprocess
+    import sys
+
+    nd, td = 16, 40
+    print(f"\n2-process distributed control plane (N={nd}, {td} intervals):")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.fleet_serve", "--spawn",
+         "--num-hosts", "2", "--nodes", str(nd), "--intervals", str(td),
+         "--app", "tealeaf", "--report-every", str(td // 2)],
+        capture_output=True, text=True, timeout=600,
+    )
+    print("\n".join("  " + l for l in r.stdout.strip().splitlines()))
+    if r.returncode != 0:
+        print(r.stderr[-1500:])
 
     # coordinated vs independent on a memory-bound app (8-node gang demo)
     p = make_env_params(get_app("miniswp"))

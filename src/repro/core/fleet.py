@@ -57,6 +57,24 @@ def kernel_compatible(policy: Policy) -> bool:
     return bool(jnp.all(p.gamma >= 1.0) and jnp.all(p.optimistic >= 0.5))
 
 
+def slice_policy_lanes(policy: Policy, lo: int, hi: int, n: int) -> Policy:
+    """The stripe [lo, hi) of a policy whose hyperparameters carry
+    per-controller (N,) lanes — the policy-side half of striping a fleet
+    across controller processes (repro.parallel.distributed). Exactly
+    the leaves :func:`_params_axes` vmaps over the node axis slice
+    rowwise (the classification lives there, once); scalars and the
+    (K,) prior_mu pass through, so a host's stripe Fleet sees the same
+    lane values the full fleet's rows [lo:hi) would. Non-EnergyUCB
+    params have no node lanes and return unchanged."""
+    axes = _params_axes(policy, n)
+    if axes is None:
+        return policy
+    p = policy.params
+    return policy.with_params(type(p)(
+        *(leaf[lo:hi] if ax == 0 else leaf for leaf, ax in zip(p, axes))
+    ))
+
+
 def _params_axes(policy: Policy, n: int):
     """vmap in_axes for the params pytree: per-controller (N,) lanes of
     alpha/lam/qos_delta/default_arm map over axis 0, everything else

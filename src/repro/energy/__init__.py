@@ -28,10 +28,15 @@ from repro.energy.backend import (
     SimBackend,
     TraceReplayBackend,
     record_trace,
+    slice_counters,
     stack_counters,
     stack_env_params,
 )
-from repro.energy.controller import EnergyController, derive_obs
+from repro.energy.controller import (
+    EnergyController,
+    derive_obs,
+    reduce_summaries,
+)
 from repro.energy.geopm import FrequencyActuator, SimulatedGEOPM, Telemetry
 from repro.energy.model import StepEnergyModel, env_params_from_roofline
 from repro.energy.runtime import EnergyAwareRuntime
@@ -69,6 +74,8 @@ __all__ = [
     "env_params_from_roofline",
     "make_backend",
     "record_trace",
+    "reduce_summaries",
+    "slice_counters",
     "stack_counters",
     "stack_env_params",
 ]

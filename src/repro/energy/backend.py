@@ -60,6 +60,13 @@ def stack_counters(rows: Sequence[Counters]) -> Counters:
                       for i in range(len(Counters._fields))))
 
 
+def slice_counters(counters: Counters, lo: int, hi: int) -> Counters:
+    """The node-slice [lo, hi) of a counter snapshot or (T, N) trace —
+    the per-host view of fleet telemetry (slices the LAST axis, so one
+    helper serves both (N,) snapshots and stacked traces)."""
+    return Counters(*(np.asarray(leaf)[..., lo:hi] for leaf in counters))
+
+
 class EnergyBackend(abc.ABC):
     """One counter/actuator surface across simulated and real hardware.
 
@@ -115,6 +122,21 @@ class EnergyBackend(abc.ABC):
         (the paper's default-frequency baseline)."""
         raise NotImplementedError
 
+    def local_slice(self, lo: int, hi: int) -> "EnergyBackend":
+        """The per-host backend owning fleet nodes [lo, hi).
+
+        The distributed control plane (repro.parallel.distributed) gives
+        each of H controller processes its own backend stripe: telemetry
+        and actuation stay host-local, and the stripe must reproduce the
+        full-fleet backend's rows [lo:hi) bit for bit so striped and
+        single-process runs agree. Backends that are inherently per-host
+        (real hardware counters, SimulatedGEOPM) don't implement this —
+        they ARE the local slice."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support node slicing; "
+            "construct it per host instead"
+        )
+
 
 # ---------------------------------------------------------------------------
 # SimBackend: the pure-JAX env, batched over N apps
@@ -127,10 +149,15 @@ def stack_env_params(cfgs: Sequence[EnvParams]) -> EnvParams:
 
 
 @functools.partial(jax.jit, static_argnames=("stacked",))
-def _sim_advance(params, estates, core_s, uncore_s, arms, key, stacked):
+def _sim_advance(params, estates, core_s, uncore_s, arms, node_ids, key,
+                 stacked):
     pax = 0 if stacked else None
-    n = arms.shape[0]
-    keys = jax.random.split(key, n)
+    # per-node streams are keyed by GLOBAL node id (fold_in, not a
+    # split over the local batch): a host owning the stripe [lo, hi) of
+    # a striped fleet draws exactly the noise rows the full-fleet
+    # backend would, which is what makes multi-process runs bit-parity
+    # with single-process ones (repro.parallel.distributed)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(node_ids)
     estates2, obs = jax.vmap(env_step, in_axes=(pax, 0, 0, 0))(
         params, estates, arms, keys
     )
@@ -152,7 +179,7 @@ class SimBackend(EnergyBackend):
     """
 
     def __init__(self, params: EnvParams, n: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0, node_offset: int = 0):
         self._stacked = jnp.ndim(params.dt_s) == 1
         if self._stacked:
             n_params = int(params.dt_s.shape[0])
@@ -161,7 +188,13 @@ class SimBackend(EnergyBackend):
             n = n_params
         self._n = int(n or 1)
         self.params = params
+        self._seed = int(seed)
+        self._offset = int(node_offset)
         self._key = jax.random.key(seed)
+        # global node ids: local row i is fleet node offset + i, which
+        # pins each node's noise stream independently of how the fleet
+        # is striped across controller processes
+        self._node_ids = jnp.arange(self._offset, self._offset + self._n)
         self._estates = jax.vmap(lambda _: env_init(params))(jnp.arange(self._n))
         self._core_s = jnp.zeros((self._n,), jnp.float32)
         self._uncore_s = jnp.zeros((self._n,), jnp.float32)
@@ -219,9 +252,21 @@ class SimBackend(EnergyBackend):
         self._key, k = jax.random.split(self._key)
         self._estates, self._core_s, self._uncore_s = _sim_advance(
             self.params, self._estates, self._core_s, self._uncore_s,
-            self._arms, k, self._stacked,
+            self._arms, self._node_ids, k, self._stacked,
         )
         return out
+
+    def local_slice(self, lo: int, hi: int) -> "SimBackend":
+        """A fresh backend owning fleet nodes [lo, hi): stacked params
+        slice rowwise, and the stripe inherits this backend's seed plus
+        a shifted node offset, so (advanced in lockstep from t=0) its
+        counters equal the full fleet's rows [lo:hi) bit for bit."""
+        if not 0 <= lo < hi <= self._n:
+            raise ValueError(f"slice [{lo}, {hi}) out of range for N={self._n}")
+        params = (jax.tree.map(lambda x: x[lo:hi], self.params)
+                  if self._stacked else self.params)
+        return SimBackend(params, n=hi - lo, seed=self._seed,
+                          node_offset=self._offset + lo)
 
     def read_counters(self) -> Counters:
         es = self._estates
@@ -311,6 +356,26 @@ class TraceReplayBackend(EnergyBackend):
         i = self._cursor
         return Counters(*(np.asarray(leaf)[i] for leaf in self.trace))
 
+    def local_slice(self, lo: int, hi: int) -> "TraceReplayBackend":
+        """The trace columns [lo, hi) as a per-host replay backend: a
+        single-process recording striped across H controller processes
+        replays each host's nodes from its own shard."""
+        n = self.n_nodes
+        if not 0 <= lo < hi <= n:
+            raise ValueError(f"slice [{lo}, {hi}) out of range for N={n}")
+        rs = np.asarray(self._rs)
+        baseline = self._baseline
+        return TraceReplayBackend(
+            slice_counters(self.trace, lo, hi),
+            ladder_ghz=self._ladder,
+            interval_s=self._interval_s,
+            variable_interval=self._variable,
+            reward_scale=rs[lo:hi] if rs.ndim >= 1 and rs.shape[0] == n else rs,
+            baseline=None if baseline is None else tuple(
+                np.asarray(b)[lo:hi] for b in baseline
+            ),
+        )
+
     # -- persistence ---------------------------------------------------
     def save(self, path: str) -> None:
         np.savez(
@@ -326,18 +391,32 @@ class TraceReplayBackend(EnergyBackend):
         )
 
     @classmethod
-    def load(cls, path: str) -> "TraceReplayBackend":
+    def load(cls, path: str,
+             nodes: Optional[Tuple[int, int]] = None) -> "TraceReplayBackend":
+        """Load a saved trace; ``nodes=(lo, hi)`` keeps only that column
+        stripe, so a host replaying its shard of a big recording never
+        materializes the full-fleet backend (the multi-process replay
+        path — see :func:`trace_n_nodes` for sizing the stripes)."""
         z = np.load(path)
-        trace = Counters(*(z[f] for f in Counters._fields))
+        sl = slice(None) if nodes is None else slice(*nodes)
+        trace = Counters(*(z[f][:, sl] for f in Counters._fields))
+        rs = z["reward_scale"]
         baseline = (
-            (z["baseline_e"], z["baseline_t"]) if bool(z["has_baseline"]) else None
+            (z["baseline_e"][sl], z["baseline_t"][sl])
+            if bool(z["has_baseline"]) else None
         )
         return cls(
             trace, ladder_ghz=z["ladder_ghz"].tolist(),
             interval_s=float(z["interval_s"]),
             variable_interval=bool(z["variable_interval"]),
-            reward_scale=z["reward_scale"], baseline=baseline,
+            reward_scale=rs[sl] if rs.ndim >= 1 else rs, baseline=baseline,
         )
+
+
+def trace_n_nodes(path: str) -> int:
+    """Fleet width N of a saved trace (reads one counter member)."""
+    with np.load(path) as z:
+        return int(z["energy_j"].shape[1])
 
 
 def record_trace(backend: EnergyBackend, arm_schedule) -> TraceReplayBackend:

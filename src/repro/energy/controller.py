@@ -75,6 +75,41 @@ def derive_obs(last: Counters, now: Counters, reward_scale,
     )
 
 
+def reduce_summaries(summaries) -> Dict[str, Any]:
+    """Fold H per-host :meth:`EnergyController.summary` dicts into one
+    fleet-level summary — the only cross-host reduction the distributed
+    control plane ever performs (extensive counters sum, per-node times
+    average weighted by stripe width, and the derived percentages are
+    recomputed from the fleet totals so they match what a single process
+    owning the whole fleet would report)."""
+    summaries = list(summaries)
+    if not summaries:
+        raise ValueError("no summaries to reduce")
+    nodes = np.asarray([s["nodes"] for s in summaries], np.float64)
+    w = nodes / nodes.sum()
+    tot = lambda f: float(sum(s[f] for s in summaries))
+    wmean = lambda f: float(sum(wi * s[f] for wi, s in zip(w, summaries)))
+    out = {
+        "steps": max(s["steps"] for s in summaries),
+        "hosts": len(summaries),
+        "nodes": int(nodes.sum()),
+        "energy_j": tot("energy_j"),
+        "time_s": wmean("time_s"),
+        "switches": int(tot("switches")),
+        "switch_overhead_j": tot("switch_overhead_j"),
+    }
+    if all("baseline_energy_j" in s for s in summaries):
+        base_e, base_t = tot("baseline_energy_j"), wmean("baseline_time_s")
+        out.update(
+            baseline_energy_j=base_e,
+            baseline_time_s=base_t,
+            saved_energy_j=base_e - out["energy_j"],
+            saved_energy_pct=100.0 * (1 - out["energy_j"] / max(base_e, 1e-9)),
+            slowdown_pct=100.0 * (out["time_s"] / max(base_t, 1e-9) - 1),
+        )
+    return out
+
+
 class EnergyController:
     """Consumes any :class:`EnergyBackend`; N = ``backend.n_nodes``.
 
@@ -109,6 +144,10 @@ class EnergyController:
         self._key, k0 = jax.random.split(self._key)
         self._states = self.fleet.init(k0)
         self._arms: Optional[jax.Array] = None
+        # the arms actuated by the most recent step() — a device array,
+        # so observers (e.g. the distributed plane's arm log) can read
+        # it without forcing a host sync on the streaming path
+        self.last_arms: Optional[jax.Array] = None
         self._start = backend.read_counters()
         self._last = self._start
         self._rs = (backend.reward_scale if reward_scale is None
@@ -137,6 +176,7 @@ class EnergyController:
             self._key, k = jax.random.split(self._key)
             self._arms = self.fleet.select(self._states, k)
         arms = self._arms
+        self.last_arms = arms
         self.backend.apply_arms(arms)
         out = self.backend.advance(work_fn)
         now = self.backend.read_counters()

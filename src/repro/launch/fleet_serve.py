@@ -1,0 +1,236 @@
+"""Distributed fleet-control launcher: H controller processes, each
+owning its EnergyBackend stripe + N/H fused-kernel controllers
+(repro.parallel.distributed), coordinated over a stdlib socket.
+
+One process per host (the production shape — run this on every host):
+
+  PYTHONPATH=src python -m repro.launch.fleet_serve --nodes 64 \\
+      --intervals 200 --num-hosts 2 --host-id 0 \\
+      --coordinator 127.0.0.1:7733 --app tealeaf --report-every 50
+  PYTHONPATH=src python -m repro.launch.fleet_serve --nodes 64 \\
+      --intervals 200 --num-hosts 2 --host-id 1 \\
+      --coordinator 127.0.0.1:7733 --app tealeaf --report-every 50
+
+Single-command local demo / CI (forks the H host processes itself, on a
+free port):
+
+  PYTHONPATH=src python -m repro.launch.fleet_serve --spawn \\
+      --num-hosts 2 --nodes 64 --intervals 100 --app tealeaf
+
+Any deployment whose coordinator port is reachable beyond loopback MUST
+set a per-deployment rendezvous secret in the ``FLEET_AUTHKEY`` env var
+on every host (``--spawn`` generates a fresh one per run).
+
+Replay a recorded trace shard-per-host instead of the simulator with
+``--trace trace.npz`` (see repro.energy.record_trace); ``--out arms.npz``
+makes host 0 gather and persist the full (T, N) arm trajectory — the
+bit-parity oracle tests/test_distributed.py compares against a
+single-process run. ``--jax-distributed`` switches coordination to
+``jax.distributed`` initialization for real multi-host TPU/GPU
+deployments (the socket coordinator still carries the periodic
+aggregates).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import secrets
+import socket
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core import get_app, make_env_params
+from repro.core.fleet import slice_policy_lanes
+from repro.core.policies import energy_ucb
+from repro.energy import SimBackend, TraceReplayBackend
+from repro.energy.backend import trace_n_nodes
+from repro.parallel.distributed import (
+    DEFAULT_AUTHKEY,
+    DistributedFleetController,
+    connect_fleet,
+    init_jax_distributed,
+    parse_address,
+)
+from repro.parallel.fleet import host_stripe, stripe_bounds
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=64,
+                    help="fleet size N (ignored with --trace)")
+    ap.add_argument("--intervals", type=int, default=200)
+    ap.add_argument("--app", default="tealeaf")
+    ap.add_argument("--trace", default=None,
+                    help="replay this recorded .npz trace instead of the sim")
+    ap.add_argument("--num-hosts", type=int, default=1)
+    ap.add_argument("--host-id", type=int, default=0)
+    ap.add_argument("--coordinator", default="127.0.0.1:7733",
+                    help="host:port of the host-0 rendezvous socket")
+    ap.add_argument("--spawn", action="store_true",
+                    help="fork all --num-hosts processes locally (demo/CI)")
+    ap.add_argument("--jax-distributed", action="store_true",
+                    help="also run jax.distributed.initialize on "
+                         "--coordinator (real multi-host TPU/GPU "
+                         "deployments); the aggregate rendezvous socket "
+                         "then uses the next port up")
+    ap.add_argument("--alpha", type=float, default=None)
+    ap.add_argument("--lam", type=float, default=None)
+    ap.add_argument("--qos", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--report-every", type=int, default=0)
+    ap.add_argument("--interpret", action="store_true",
+                    help="force the fused Pallas kernel in interpret mode "
+                         "(parity testing off-TPU)")
+    ap.add_argument("--out", default=None,
+                    help="host 0 gathers the full (T, N) arm trajectory "
+                         "and writes it (npz) here")
+    return ap.parse_args(argv)
+
+
+def build_policy(args):
+    # --qos 0.0 is a valid (strictest) budget: dispatch on `is None`
+    kw = {"qos_delta": args.qos}
+    if args.alpha is not None:
+        kw["alpha"] = args.alpha
+    if args.lam is not None:
+        kw["switching_penalty"] = args.lam
+    return energy_ucb(**kw)
+
+
+def build_local_backend(args, lo: int, hi: int):
+    """This host's backend stripe, built DIRECTLY — never the full
+    fleet: a SimBackend stripe is just (n, node_offset) over shared
+    params (identical to what ``local_slice`` would produce), and trace
+    shards load only their columns. Per-host footprint stays O(N/H)."""
+    if args.trace is not None:
+        return TraceReplayBackend.load(args.trace, nodes=(lo, hi))
+    return SimBackend(make_env_params(get_app(args.app)), n=hi - lo,
+                      seed=args.seed, node_offset=lo)
+
+
+def _authkey() -> bytes:
+    """Rendezvous secret: FLEET_AUTHKEY env var (REQUIRED for any
+    coordinator reachable beyond loopback — the payloads are pickles,
+    so the key gates code execution on host 0); falls back to the
+    same-machine demo default."""
+    key = os.environ.get("FLEET_AUTHKEY", "")
+    return key.encode() if key else DEFAULT_AUTHKEY
+
+
+def run_host(args) -> dict:
+    """One controller process: build this host's stripe, stream
+    intervals with zero cross-host traffic, gather periodic aggregates.
+    Returns the final fleet summary (identical on every host)."""
+    rendezvous = parse_address(args.coordinator)
+    if args.jax_distributed:
+        # jax's coordination service owns --coordinator's port; the
+        # aggregate rendezvous socket moves to the next port up so both
+        # can live on host 0
+        init_jax_distributed(args.coordinator, args.num_hosts, args.host_id)
+        rendezvous = (rendezvous[0], rendezvous[1] + 1)
+    n_total = (trace_n_nodes(args.trace) if args.trace is not None
+               else args.nodes)
+    lo, hi = host_stripe(n_total, args.num_hosts, args.host_id)
+    backend = build_local_backend(args, lo, hi)
+    intervals = args.intervals
+    if isinstance(backend, TraceReplayBackend):
+        intervals = min(intervals, len(backend))
+    comm = connect_fleet(args.num_hosts, args.host_id, rendezvous,
+                         authkey=_authkey())
+    lead = comm.host_id == 0
+    with comm:
+        ctl = DistributedFleetController(
+            slice_policy_lanes(build_policy(args), lo, hi, n_total),
+            backend, comm, stripe=(lo, hi), n_total=n_total,
+            seed=args.seed, interpret=args.interpret,
+            log_arms=args.out is not None,
+        )
+        comm.barrier("start")
+
+        def on_report(i, fleet):
+            if lead:
+                print(f"[interval {i:5d}] fleet energy {fleet['energy_j']:.1f} J"
+                      + (f", saved {fleet['saved_energy_pct']:.1f}%"
+                         if "saved_energy_pct" in fleet else "")
+                      + f", {fleet['switches']} switches", flush=True)
+
+        fleet = ctl.run(intervals, report_every=args.report_every,
+                        on_report=on_report)
+        if args.out is not None:
+            arms = ctl.gather_arms()
+            # final controller state rides along so parity tests can
+            # compare state trajectories, not just the arms
+            states = comm.allgather(
+                {k: np.asarray(v) for k, v in ctl.controller.states.items()},
+                tag="states",
+            )
+            if lead:
+                merged = {f"state_{k}": np.concatenate([s[k] for s in states])
+                          for k in states[0]}
+                stripes = stripe_bounds(ctl.n_total, comm.num_hosts)
+                np.savez(args.out, arms=arms,
+                         stripe_lo=np.asarray([s[0] for s in stripes]),
+                         stripe_hi=np.asarray([s[1] for s in stripes]),
+                         **merged)
+        if lead:
+            kernel = "fused kernel" if ctl.use_kernel else "vmapped"
+            print(f"host 0/{comm.num_hosts}: stripe {ctl.stripe} of "
+                  f"N={ctl.n_total} ({kernel}); fleet summary:")
+            print({k: round(v, 3) if isinstance(v, float) else v
+                   for k, v in fleet.items()}, flush=True)
+    return fleet
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def spawn_local(args) -> int:
+    """Fork --num-hosts copies of this launcher on a free local port and
+    wait for the whole fleet (the zero-to-running path for demos/CI)."""
+    coordinator = f"127.0.0.1:{_free_port()}"
+    base = [sys.executable, "-m", "repro.launch.fleet_serve",
+            "--nodes", str(args.nodes), "--intervals", str(args.intervals),
+            "--app", args.app, "--num-hosts", str(args.num_hosts),
+            "--coordinator", coordinator, "--seed", str(args.seed),
+            "--report-every", str(args.report_every)]
+    if args.trace is not None:
+        base += ["--trace", args.trace]
+    if args.alpha is not None:
+        base += ["--alpha", str(args.alpha)]
+    if args.lam is not None:
+        base += ["--lam", str(args.lam)]
+    if args.qos is not None:
+        base += ["--qos", str(args.qos)]
+    if args.interpret:
+        base += ["--interpret"]
+    if args.jax_distributed:
+        base += ["--jax-distributed"]
+    if args.out is not None:
+        base += ["--out", args.out]
+    # fresh random rendezvous secret per run (children inherit it; see
+    # _authkey) unless the operator pinned one
+    env = dict(os.environ)
+    env.setdefault("FLEET_AUTHKEY", secrets.token_hex(16))
+    procs = [subprocess.Popen(base + ["--host-id", str(h)], env=env)
+             for h in range(args.num_hosts)]
+    codes = [p.wait() for p in procs]
+    # signal-killed children report negative codes; any nonzero child
+    # must fail the whole fleet
+    return next((c if c > 0 else 1 for c in codes if c != 0), 0)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    if args.spawn:
+        return spawn_local(args)
+    run_host(args)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

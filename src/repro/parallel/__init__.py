@@ -1,10 +1,29 @@
-from repro.parallel.fleet import fleet_mesh, make_sharded_fleet_step
+from repro.parallel.distributed import (
+    DistributedFleetController,
+    FleetComm,
+    connect_fleet,
+    init_jax_distributed,
+    parse_address,
+)
+from repro.parallel.fleet import (
+    fleet_mesh,
+    host_stripe,
+    make_sharded_fleet_step,
+    stripe_bounds,
+)
 from repro.parallel.sharding import DEFAULT_RULES, Sharder, spec_for_axes
 
 __all__ = [
     "DEFAULT_RULES",
+    "DistributedFleetController",
+    "FleetComm",
     "Sharder",
+    "connect_fleet",
     "fleet_mesh",
+    "host_stripe",
+    "init_jax_distributed",
     "make_sharded_fleet_step",
+    "parse_address",
     "spec_for_axes",
+    "stripe_bounds",
 ]

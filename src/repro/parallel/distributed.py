@@ -1,0 +1,319 @@
+"""Multi-process fleet control plane: H controller processes, one fleet.
+
+The paper's deployment target is per-host energy control (GEOPM-style:
+every node reads its own counters and actuates its own frequency), but
+until now the repo's control plane assumed one Python process owned the
+world — ``make_sharded_fleet_step`` shards controller state across a
+single-host mesh, and every :class:`~repro.energy.backend.EnergyBackend`
+lives next to the policy. This module promotes that to H controller
+processes, each owning
+
+- a LOCAL backend stripe (``backend.local_slice(lo, hi)``: SimBackend
+  noise streams are keyed by global node id, trace shards slice the
+  recorded columns), and
+- the matching N/H stripe of fused-kernel controller state (per-node
+  hyperparameter lanes sliced by ``core.fleet.slice_policy_lanes``).
+
+Per decision interval there are ZERO collectives: telemetry, actuation
+and the fused Pallas fleet step all stay host-local (the controller step
+is embarrassingly row-parallel — the same property ``shard_map`` exploits
+within one process). Hosts coordinate only through
+
+- a stdlib-socket coordinator (:func:`connect_fleet`, built on
+  ``multiprocessing.connection`` so it runs anywhere — CPU CI included)
+  used for the startup barrier and for PERIODIC fleet-level aggregates
+  (energy saved, slowdown, switch counts) via
+  :func:`~repro.energy.controller.reduce_summaries`; or
+- ``jax.distributed`` initialization (:func:`init_jax_distributed`) on
+  real multi-host TPU/GPU deployments, where ``fleet_mesh()`` then spans
+  every process and each host may additionally shard its own stripe over
+  its local chips.
+
+Bit-parity with the single-process sharded step is the correctness
+oracle: a 2-process run must reproduce the exact arm/state trajectories
+of one process owning the whole fleet (tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import time
+from multiprocessing.connection import Client, Listener
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.fleet import slice_policy_lanes
+from repro.core.policies import Policy
+from repro.energy.backend import EnergyBackend
+from repro.energy.controller import EnergyController, reduce_summaries
+from repro.parallel.fleet import host_stripe
+
+# Rendezvous auth (multiprocessing.connection HMAC handshake). The
+# payloads are pickles, so WHOEVER HOLDS THE KEY CAN EXECUTE CODE on the
+# coordinator: any deployment whose coordinator port is reachable beyond
+# loopback MUST supply its own secret (fleet_serve reads FLEET_AUTHKEY,
+# and --spawn generates a fresh random key per run). This constant is
+# only the convenience default for same-machine demos and tests.
+DEFAULT_AUTHKEY = b"repro-fleet-v1"
+
+
+def parse_address(spec: str) -> Tuple[str, int]:
+    """'host:port' -> (host, port) for the coordinator socket."""
+    host, _, port = spec.rpartition(":")
+    return (host or "127.0.0.1", int(port))
+
+
+def init_jax_distributed(coordinator: str, num_hosts: int, host_id: int):
+    """Initialize ``jax.distributed`` for a real multi-host deployment
+    (after this, ``jax.devices()`` — and therefore ``fleet_mesh()`` —
+    spans every controller process). The CPU-CI control plane never
+    needs this: the socket coordinator below carries the few fleet-level
+    aggregates, and everything else is host-local."""
+    import jax
+
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=num_hosts,
+        process_id=host_id,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the socket coordinator: startup barrier + periodic aggregate gathers
+# ---------------------------------------------------------------------------
+
+
+class FleetComm:
+    """H-process rendezvous with one verb: ``allgather(payload, tag)``
+    returns every host's payload ordered by host_id, on every host. Tags
+    guard against rounds drifting out of step (every gather in the
+    control plane happens at the same logical point on all hosts)."""
+
+    num_hosts: int
+    host_id: int
+
+    def allgather(self, payload: Any, tag: str) -> List[Any]:
+        raise NotImplementedError
+
+    def barrier(self, tag: str = "barrier") -> None:
+        self.allgather(None, tag)
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class NullComm(FleetComm):
+    """The H=1 degenerate case: one process already owns the fleet."""
+
+    num_hosts, host_id = 1, 0
+
+    def allgather(self, payload: Any, tag: str) -> List[Any]:
+        return [payload]
+
+
+class CoordinatorComm(FleetComm):
+    """Host 0: serves the rendezvous socket and participates in every
+    gather in-process. Accepts exactly H-1 peers at startup (each peer
+    identifies itself with its host_id), then each allgather round
+    collects one tagged payload per peer and broadcasts the full list."""
+
+    def __init__(self, address: Tuple[str, int], num_hosts: int,
+                 authkey: bytes = DEFAULT_AUTHKEY, timeout_s: float = 120.0):
+        self.num_hosts, self.host_id = int(num_hosts), 0
+        self._listener = Listener(address, authkey=authkey)
+        self.address = self._listener.address
+        self._conns: Dict[int, Any] = {}
+        # a peer that dies before connecting must fail the rendezvous
+        # fast, not hang host 0 (and CI) until the job timeout. A
+        # timeout on the listening socket is the only reliable way to
+        # bound the blocking accept (closing the listener from another
+        # thread does NOT wake accept on Linux); accepted connections
+        # come back blocking, so gather rounds are unaffected. (A peer
+        # that connects but never sends its host_id can still block the
+        # handshake recv — the connect itself is the flaky part.)
+        sock = getattr(getattr(self._listener, "_listener", None),
+                       "_socket", None)
+        if sock is not None:
+            sock.settimeout(timeout_s)
+        while len(self._conns) < num_hosts - 1:
+            try:
+                conn = self._listener.accept()
+            except OSError:
+                self._listener.close()
+                raise TimeoutError(
+                    f"fleet rendezvous: {len(self._conns) + 1}/"
+                    f"{num_hosts} hosts checked in after {timeout_s}s"
+                ) from None
+            peer = int(conn.recv())
+            if peer in self._conns or not 0 < peer < num_hosts:
+                conn.close()
+                raise RuntimeError(f"bad or duplicate host_id {peer}")
+            self._conns[peer] = conn
+
+    def allgather(self, payload: Any, tag: str) -> List[Any]:
+        gathered = {0: payload}
+        for peer, conn in self._conns.items():
+            got_peer, got_tag, data = conn.recv()
+            if got_peer != peer or got_tag != tag:
+                raise RuntimeError(
+                    f"fleet comm out of step: expected {(peer, tag)}, "
+                    f"got {(got_peer, got_tag)}"
+                )
+            gathered[peer] = data
+        out = [gathered[h] for h in range(self.num_hosts)]
+        for conn in self._conns.values():
+            conn.send(out)
+        return out
+
+    def close(self) -> None:
+        for conn in self._conns.values():
+            conn.close()
+        self._listener.close()
+
+
+class ClientComm(FleetComm):
+    """Hosts 1..H-1: connect (with retry while host 0 comes up), then
+    mirror the coordinator's gather rounds."""
+
+    def __init__(self, address: Tuple[str, int], num_hosts: int, host_id: int,
+                 authkey: bytes = DEFAULT_AUTHKEY, timeout_s: float = 60.0):
+        self.num_hosts, self.host_id = int(num_hosts), int(host_id)
+        deadline = time.monotonic() + timeout_s
+        while True:
+            try:
+                self._conn = Client(address, authkey=authkey)
+                break
+            except (ConnectionError, OSError):
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"host {host_id}: coordinator {address} not up "
+                        f"after {timeout_s}s"
+                    )
+                time.sleep(0.1)
+        self._conn.send(self.host_id)
+
+    def allgather(self, payload: Any, tag: str) -> List[Any]:
+        self._conn.send((self.host_id, tag, payload))
+        return self._conn.recv()
+
+    def close(self) -> None:
+        self._conn.close()
+
+
+def connect_fleet(num_hosts: int, host_id: int,
+                  address: Optional[Tuple[str, int]] = None,
+                  authkey: bytes = DEFAULT_AUTHKEY) -> FleetComm:
+    """The one entry point: host 0 serves, the rest connect, H=1 is a
+    no-op comm. Blocks until the whole fleet has checked in."""
+    if num_hosts == 1:
+        return NullComm()
+    if address is None:
+        raise ValueError("multi-host fleets need a coordinator address")
+    if host_id == 0:
+        return CoordinatorComm(address, num_hosts, authkey=authkey)
+    return ClientComm(address, num_hosts, host_id, authkey=authkey)
+
+
+# ---------------------------------------------------------------------------
+# the distributed controller: one stripe per process, zero per-interval
+# collectives
+# ---------------------------------------------------------------------------
+
+
+class DistributedFleetController:
+    """One controller process's share of the fleet: a local
+    :class:`EnergyController` over the host's backend stripe and policy
+    lanes, plus the comm used ONLY for periodic fleet-level aggregates.
+
+    Build with :meth:`from_global` (each process constructs the same
+    full-fleet description, then slices its own stripe — parity by
+    construction) or pass an already-local backend with its ``stripe``.
+    ``step``/``run`` never touch the network; ``fleet_summary`` and the
+    optional ``report_every`` ticks gather H small summary dicts."""
+
+    def __init__(self, policy: Policy, local_backend: EnergyBackend,
+                 comm: Optional[FleetComm] = None,
+                 stripe: Optional[Tuple[int, int]] = None,
+                 n_total: Optional[int] = None, seed: int = 0,
+                 use_kernel: Optional[bool] = None, interpret: bool = False,
+                 record_history: bool = False, mesh=None,
+                 log_arms: bool = False):
+        self.comm = comm or NullComm()
+        self.stripe = stripe or (0, local_backend.n_nodes)
+        self.n_total = int(n_total or local_backend.n_nodes)
+        self.n_local = int(local_backend.n_nodes)
+        self.controller = EnergyController(
+            policy, local_backend, seed=seed, use_kernel=use_kernel,
+            interpret=interpret, record_history=record_history, mesh=mesh,
+        )
+        self.log_arms = log_arms
+        self.arm_log: List[np.ndarray] = []
+        self.reports: List[Dict[str, Any]] = []
+
+    @classmethod
+    def from_global(cls, policy: Policy, backend: EnergyBackend,
+                    comm: FleetComm, **kw) -> "DistributedFleetController":
+        """Slice this host's stripe out of the full-fleet backend and
+        policy lanes. Every host calls this with the SAME (policy,
+        backend) description; H=1 degenerates to the whole fleet."""
+        n = int(backend.n_nodes)
+        lo, hi = host_stripe(n, comm.num_hosts, comm.host_id)
+        local = backend if comm.num_hosts == 1 else backend.local_slice(lo, hi)
+        return cls(slice_policy_lanes(policy, lo, hi, n), local, comm,
+                   stripe=(lo, hi), n_total=n, **kw)
+
+    @property
+    def use_kernel(self) -> bool:
+        return self.controller.use_kernel
+
+    def step(self, work_fn: Optional[Callable[[], Any]] = None) -> Dict[str, Any]:
+        """One host-local decision interval — no collectives."""
+        rec = self.controller.step(work_fn)
+        if self.log_arms:
+            self.arm_log.append(
+                np.asarray(self.controller.last_arms).reshape(self.n_local)
+            )
+        return rec
+
+    def run(self, n_intervals: int,
+            work_fn: Optional[Callable[[], Any]] = None,
+            report_every: int = 0,
+            on_report: Optional[Callable[[int, Dict[str, Any]], None]] = None,
+            ) -> Dict[str, Any]:
+        """Drive the stripe for ``n_intervals``; every ``report_every``
+        intervals (0 = never) gather the fleet aggregate and append it
+        to ``self.reports`` (``on_report(interval, fleet_summary)`` fires
+        on every host). Returns the final fleet summary."""
+        for i in range(n_intervals):
+            self.step(work_fn)
+            if report_every and (i + 1) % report_every == 0:
+                fleet = self.fleet_summary(tag=f"report-{i + 1}")
+                self.reports.append(fleet)
+                if on_report is not None:
+                    on_report(i + 1, fleet)
+        return self.fleet_summary(tag="final")
+
+    def local_summary(self) -> Dict[str, Any]:
+        return self.controller.summary()
+
+    def fleet_summary(self, tag: str = "summary") -> Dict[str, Any]:
+        """Gather H per-host summaries, reduce to the fleet aggregate
+        (identical result on every host)."""
+        return reduce_summaries(
+            self.comm.allgather(self.local_summary(), tag=tag)
+        )
+
+    def gather_arms(self, tag: str = "arms") -> np.ndarray:
+        """The full fleet's (T, N) arm trajectory, assembled from every
+        host's stripe log (requires ``log_arms=True``) — the parity
+        oracle against a single-process run."""
+        if not self.log_arms:
+            raise RuntimeError("construct with log_arms=True to gather arms")
+        local = (np.stack(self.arm_log) if self.arm_log
+                 else np.zeros((0, self.n_local), np.int32))
+        return np.concatenate(self.comm.allgather(local, tag=tag), axis=1)

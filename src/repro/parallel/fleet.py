@@ -30,9 +30,38 @@ from repro.kernels.fleet_ucb import _pad, fleet_step
 
 
 def fleet_mesh(devices: Optional[Sequence] = None, axis: str = "data") -> Mesh:
-    """A 1-D controller mesh over the given (default: all) devices."""
+    """A 1-D controller mesh over the given (default: all) devices.
+
+    Under ``jax.distributed`` initialization ``jax.devices()`` spans
+    every controller process, so this is also the process-spanning mesh
+    for multi-host fused steps; a host that only wants to shard its own
+    stripe across local chips passes ``jax.local_devices()``."""
     devs = np.asarray(jax.devices() if devices is None else list(devices))
     return Mesh(devs.reshape(-1), (axis,))
+
+
+def stripe_bounds(n: int, num_hosts: int):
+    """Contiguous per-host stripes [(lo, hi), ...] covering an N-node
+    fleet: host h owns ceil-balanced rows, ragged remainders going to
+    the leading hosts (each stripe's fused step then reuses the
+    kernel's own BLOCK_N padding — see kernels.fleet_ucb._pad — so no
+    host-level padding convention is needed on top)."""
+    if not 1 <= num_hosts <= n:
+        raise ValueError(f"need 1 <= num_hosts <= n, got H={num_hosts}, N={n}")
+    base, rem = divmod(n, num_hosts)
+    bounds, lo = [], 0
+    for h in range(num_hosts):
+        hi = lo + base + (1 if h < rem else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
+def host_stripe(n: int, num_hosts: int, host_id: int):
+    """This host's (lo, hi) stripe of the fleet's node axis."""
+    if not 0 <= host_id < num_hosts:
+        raise ValueError(f"host_id {host_id} out of range for H={num_hosts}")
+    return stripe_bounds(n, num_hosts)[host_id]
 
 
 def make_sharded_fleet_step(
