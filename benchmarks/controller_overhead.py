@@ -132,6 +132,19 @@ def run(fast: bool = True, out_json=None, quick: bool = False):
     ctrl_us(nf, True, "fused", kreps)
     # the QoS feasible-set lane's latency cost on the same fused path
     ctrl_us(nf, True, "fused_qos", kreps, policy=energy_ucb(qos_delta=0.05))
+    # the nonstationary lanes: sliding-window discount, and a fully
+    # mixed fleet (per-node alpha + QoS + gamma + warm-up lanes in one
+    # launch) — the whole EnergyUCB family is kernel-exact now
+    ctrl_us(nf, True, "fused_sw", kreps,
+            policy=energy_ucb(window_discount=0.95))
+    base = energy_ucb()
+    mixed = base.with_params(base.params._replace(
+        alpha=jnp.linspace(0.05, 0.3, nf).astype(jnp.float32),
+        qos_delta=jnp.where(jnp.arange(nf) % 3 == 0, 0.05, -1.0),
+        gamma=jnp.where(jnp.arange(nf) % 2 == 0, 0.95, 1.0),
+        optimistic=jnp.where(jnp.arange(nf) % 5 == 0, 0.0, 1.0),
+    ))
+    ctrl_us(nf, True, "fused_mixed", kreps, policy=mixed)
 
     if out_json is not None:
         payload = {

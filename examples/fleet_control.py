@@ -9,7 +9,9 @@ processes each own a backend stripe (repro.parallel.distributed).
 The multi-process control plane also has its own CLI launcher
 (repro.launch.fleet_serve): run one process per host with
 ``--num-hosts H --host-id h --coordinator host:port`` (plus ``--app``,
-``--nodes``, ``--qos``, ``--trace`` for recorded-counter replay, and
+``--nodes``, ``--qos``, ``--window-discount``/``--warmup`` for the
+nonstationary variants, ``--drift``/``--drift-every`` for cycling
+workload phases, ``--trace`` for recorded-counter replay, and
 ``--report-every`` for periodic fleet aggregates), or ``--spawn`` to
 fork all H hosts locally in one command:
 
@@ -98,6 +100,50 @@ def main():
     moved = int(jnp.sum(out_q[-1] != out[-1]))
     print(f"mixed QoS lanes (sentinel-off x delta=0.02, one launch): "
           f"budget re-routed {moved} controllers")
+
+    # ... and so are the nonstationary variants: sliding-window
+    # discounts (gamma < 1) and round-robin warm-up (optimistic < 0.5)
+    # ride per-controller lanes in the SAME launch, so a mixed
+    # stationary / sliding-window / warm-up fleet never leaves the
+    # fused path (they used to silently fall back to vmap)
+    gamma = jnp.where(jnp.arange(nk) % 2 == 0, 0.97, 1.0)
+    optimistic = jnp.where(jnp.arange(nk) % 3 == 0, 0.0, 1.0)
+    out_ns = ops.fleet_step(
+        s1["mu"], s1["n"], s1["phat"], s1["pn"], s1["prev"], s1["t"],
+        a1, kobs.reward, kobs.progress, kobs.active.astype(jnp.float32),
+        alphas, 0.02, qos, f_max_arm, gamma, optimistic,
+        interpret=not ops.pallas_available(),
+    )
+    moved_ns = int(jnp.sum(out_ns[-1] != out_q[-1]))
+    print(f"mixed nonstationary lanes (half SW gamma=0.97, third warm-up, "
+          f"one launch): re-routed {moved_ns} controllers")
+
+    # drifting workloads end to end: the simulator cycles phases
+    # (miniswp: memory-bound, low f best -> lbm: compute-bound, high f
+    # best) every 150 intervals, and the sliding-window fleet
+    # re-converges after each boundary where the stationary fleet is
+    # stuck on stale estimates (CLI: fleet_serve --drift lbm
+    # --drift-every 150 --window-discount 0.99)
+    from repro.core.simulator import expected_rewards
+    from repro.energy import EnergyController, SimBackend
+
+    pa, pb = make_env_params(get_app("miniswp")), make_env_params(get_app("lbm"))
+    mu_b = np.asarray(expected_rewards(pb))
+
+    def drift_tail(policy):
+        ctl = EnergyController(
+            policy, SimBackend(pa, n=8, seed=0, drift_params=[pb],
+                               drift_every=150),
+            interpret=not ops.pallas_available())
+        for _ in range(300):
+            ctl.step()
+        arms = np.stack([np.asarray(h["arm"]) for h in ctl.history])
+        return float(np.mean(mu_b[arms[-60:]]))
+
+    q_sw = drift_tail(energy_ucb(window_discount=0.97))
+    q_st = drift_tail(energy_ucb())
+    print(f"\ndrifting workload (miniswp -> lbm, fused all the way): tail "
+          f"reward SW {q_sw:.3f} vs stationary {q_st:.3f} (best -0.998)")
 
     # the streaming control plane: one EnergyBackend surface from the
     # simulator to the fleet — the controller reads counters, derives

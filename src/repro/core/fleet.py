@@ -13,12 +13,16 @@ data-parallel job) live in the unified rollout engine
   deployment path: at each interval boundary it applies the previous
   interval's observations (update) and picks every node's next arm
   (select) in ONE fused Pallas launch (kernels/fleet_ucb.fleet_step)
-  when the policy is kernel-compatible — including the QoS-constrained
-  variant, which rides as per-controller ``qos_delta``/``default_arm``
-  lanes (sentinel ``qos_delta < 0`` = unconstrained) — falling back to
-  vmapped policy fns elsewhere. Hyperparameters are per-controller
-  data, so a fleet can sweep alpha x lambda (and mix QoS budgets)
-  across its own nodes. Fleets beyond one chip's VMEM pass ``mesh=`` to
+  when the policy is kernel-compatible — which, since the nonstationary
+  lanes landed, is the whole EnergyUCB family: QoS budgets
+  (``qos_delta``/``default_arm`` lanes, sentinel ``qos_delta < 0`` =
+  unconstrained), sliding-window discounting (``gamma`` lane, sentinel
+  ``>= 1`` = stationary), and the round-robin warm-up ablation
+  (``optimistic`` lane, sentinel ``>= 0.5`` = optimistic init) — falling
+  back to vmapped policy fns for non-UCB families. Hyperparameters are
+  per-controller data, so a fleet can sweep alpha x lambda (and mix QoS
+  budgets, window discounts, and warm-up variants) across its own
+  nodes in one launch. Fleets beyond one chip's VMEM pass ``mesh=`` to
   shard the (N, K) state over the mesh's data axis
   (repro.parallel.fleet.make_sharded_fleet_step).
 """
@@ -39,22 +43,25 @@ PyTree = Any
 
 
 def kernel_compatible(policy: Policy) -> bool:
-    """True when the fused SA-UCB kernel implements this policy exactly:
-    the EnergyUCB function set with stationary means and optimistic
-    init. QoS-constrained variants dispatch fused too — the kernel
-    carries the feasible-set lane, with the sentinel ``qos_delta < 0``
-    meaning unconstrained, so mixed constrained/unconstrained fleets
-    share one launch. alpha/lam/qos_delta/default_arm may be scalar or
-    per-controller (N,) lanes; sliding-window (gamma < 1) and the
-    round-robin warm-up ablation still take the vmapped path."""
+    """True when the fused SA-UCB kernel implements this policy exactly.
+    Since the nonstationary lanes landed that is the ENTIRE EnergyUCB
+    family: QoS budgets (sentinel ``qos_delta < 0`` = unconstrained),
+    sliding windows (sentinel ``gamma >= 1`` = stationary, discounting
+    reward and progress statistics and shrinking stale means to the
+    prior at select time), and the round-robin warm-up ablation
+    (sentinel ``optimistic >= 0.5`` = optimistic init) all ride as
+    kernel lanes, so mixed fleets share one launch. Every hyperparameter
+    may be scalar or a per-controller (N,) lane (``prior_mu`` is (K,)
+    per arm, or (N, K) per node); only non-UCB function sets — and
+    config-stacked params with extra batch axes — take the vmapped
+    path."""
     if policy.fns is not UCB_FNS:
         return False
     p: PolicyParams = policy.params
-    if any(jnp.ndim(leaf) > 1 for leaf in p) or any(
-        jnp.ndim(leaf) > 0 for leaf in (p.gamma, p.optimistic)
-    ):
-        return False
-    return bool(jnp.all(p.gamma >= 1.0) and jnp.all(p.optimistic >= 0.5))
+    return all(
+        jnp.ndim(leaf) <= (2 if name == "prior_mu" else 1)
+        for name, leaf in zip(p._fields, p)
+    )
 
 
 def slice_policy_lanes(policy: Policy, lo: int, hi: int, n: int) -> Policy:
@@ -77,16 +84,17 @@ def slice_policy_lanes(policy: Policy, lo: int, hi: int, n: int) -> Policy:
 
 def _params_axes(policy: Policy, n: int):
     """vmap in_axes for the params pytree: per-controller (N,) lanes of
-    alpha/lam/qos_delta/default_arm map over axis 0, everything else
-    broadcasts. Only the EnergyUCB family supports per-node lanes
-    (prior_mu is (K,) per-arm, never confused with a node axis)."""
+    alpha/lam/qos_delta/gamma/optimistic/default_arm map over axis 0,
+    everything else broadcasts. Only the EnergyUCB family supports
+    per-node lanes (prior_mu is (K,) per-arm, never confused with a
+    node axis; a (N, K) prior maps rowwise)."""
     p = policy.params
     if not isinstance(p, PolicyParams):
         return None
     ax = lambda leaf: 0 if (jnp.ndim(leaf) == 1 and leaf.shape[0] == n) else None
     return PolicyParams(
         alpha=ax(p.alpha), lam=ax(p.lam), qos_delta=ax(p.qos_delta),
-        gamma=None, optimistic=None,
+        gamma=ax(p.gamma), optimistic=ax(p.optimistic),
         prior_mu=0 if jnp.ndim(p.prior_mu) == 2 else None,
         prior_n=ax(p.prior_n), default_arm=ax(p.default_arm),
     )
@@ -130,8 +138,8 @@ class Fleet:
         elif use_kernel and not kernel_compatible(policy):
             raise ValueError(
                 f"policy {policy.name!r} is not kernel-exact "
-                "(sliding-window / warm-up variants and non-UCB families "
-                "must use the vmapped path)"
+                "(non-UCB families and config-stacked params must use "
+                "the vmapped path)"
             )
         self.use_kernel = use_kernel
         self._sharded_step = None
@@ -184,6 +192,7 @@ class Fleet:
                 states["mu"], states["n"], states["phat"], states["pn"],
                 states["prev"], states["t"], arms, obs.reward, obs.progress,
                 obs.active, p.alpha, p.lam, p.qos_delta, p.default_arm,
+                p.gamma, p.optimistic, p.prior_mu,
             )
             return (
                 {"mu": mu, "n": n, "phat": phat, "pn": pn, "prev": prev, "t": t},

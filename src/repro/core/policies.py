@@ -220,22 +220,31 @@ def ucb_select(params: PolicyParams, state: PyTree, key) -> jax.Array:
 
 
 def ucb_update(params: PolicyParams, state: PyTree, arm, obs: Obs) -> PyTree:
-    # stationary incremental mean, and the discounted (sliding-window)
-    # effective-count mean; gamma selects elementwise so both live in
-    # one trace (and gamma can vary across a vmapped config axis)
+    # one incremental running mean serves the stationary AND the
+    # discounted (sliding-window) lanes: decaying every arm's effective
+    # count by gamma and then folding the sample in incrementally,
+    # mu + (r - mu) / (n*g + 1), is algebraically the discounted mean
+    # (mu*n*g + r) / (n*g + 1) — so gamma only ever touches the counts
+    # and the seed's exact mean dataflow is preserved bit-for-bit on
+    # stationary rows. The counts add an elementwise one-hot (not a
+    # scatter): it is the same select(g<1, n*g, n) + onehot expression
+    # the fused kernel carries, so XLA makes the same mul-add
+    # contraction choice on both paths and fused-vs-vmapped fleets stay
+    # bit-identical.
     g = params.gamma
-    n_inc = state["n"].at[arm].add(1.0)
-    mu_inc = state["mu"].at[arm].set(
-        state["mu"][arm] + (obs.reward - state["mu"][arm]) / n_inc[arm]
-    )
-    n_dis = (state["n"] * g).at[arm].add(1.0)
-    mu_dis = state["mu"].at[arm].set(
-        (state["mu"][arm] * state["n"][arm] * g + obs.reward) / n_dis[arm]
-    )
     stationary = g >= 1.0
-    n = jnp.where(stationary, n_inc, n_dis)
-    mu = jnp.where(stationary, mu_inc, mu_dis)
-    pn = state["pn"].at[arm].add(1.0)
+    hot = (jnp.arange(state["n"].shape[-1]) == arm).astype(state["n"].dtype)
+    n = jnp.where(stationary, state["n"], state["n"] * g) + hot
+    mu = state["mu"].at[arm].set(
+        state["mu"][arm] + (obs.reward - state["mu"][arm]) / n[arm]
+    )
+    # the progress statistics discount under gamma < 1 too: after a
+    # workload phase change the QoS feasible set would otherwise be
+    # computed from stale slowdown estimates forever (an arm that was
+    # fast in the old phase keeps passing the budget check in the new
+    # one). Decayed pn also re-arms the untried-arm feasibility rule, so
+    # stale arms revert to "unknown" rather than "known fast".
+    pn = jnp.where(stationary, state["pn"], state["pn"] * g) + hot
     phat = state["phat"].at[arm].set(
         state["phat"][arm] + (obs.progress - state["phat"][arm]) / pn[arm]
     )

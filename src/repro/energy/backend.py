@@ -176,10 +176,25 @@ class SimBackend(EnergyBackend):
     stacked pytree (leading N axis, see :func:`stack_env_params`) giving
     each node its own app. All counter math stays on-device; one jitted
     trace serves any N of the same shape signature.
+
+    **Drifting workloads.** ``drift_params`` (a sequence of additional
+    per-phase :class:`EnvParams`) with ``drift_every`` >= 1 makes the
+    fleet cycle through ``[params, *drift_params]``, switching the
+    active phase every ``drift_every`` intervals — the phase-changing
+    Aurora workloads the sliding-window (gamma < 1) policies exist for.
+    The schedule is keyed by the GLOBAL interval index (every stripe of
+    a striped fleet counts its own lockstep advances from t=0), so
+    multi-process deployments see bit-identical phase boundaries; all
+    phases must share the frequency ladder and stackedness, and the
+    declared ``reward_scale``/``interval_s``/``baseline_interval`` stay
+    pinned to phase 0 so the controller normalizes rewards consistently
+    across phases (the drifting arm ordering IS the scenario).
     """
 
     def __init__(self, params: EnvParams, n: Optional[int] = None,
-                 seed: int = 0, node_offset: int = 0):
+                 seed: int = 0, node_offset: int = 0,
+                 drift_params: Optional[Sequence[EnvParams]] = None,
+                 drift_every: int = 0):
         self._stacked = jnp.ndim(params.dt_s) == 1
         if self._stacked:
             n_params = int(params.dt_s.shape[0])
@@ -188,6 +203,21 @@ class SimBackend(EnergyBackend):
             n = n_params
         self._n = int(n or 1)
         self.params = params
+        self._phases = [params] + list(drift_params or ())
+        self._drift_every = int(drift_every)
+        if len(self._phases) > 1:
+            if self._drift_every < 1:
+                raise ValueError(
+                    "drift_params needs drift_every >= 1 intervals per phase")
+            for q in self._phases[1:]:
+                if jnp.ndim(q.dt_s) != jnp.ndim(params.dt_s):
+                    raise ValueError(
+                        "drift phases must all be stacked or all shared")
+                if not np.array_equal(np.asarray(q.freqs),
+                                      np.asarray(params.freqs)):
+                    raise ValueError(
+                        "drift phases must share one frequency ladder")
+        self._interval = 0
         self._seed = int(seed)
         self._offset = int(node_offset)
         self._key = jax.random.key(seed)
@@ -247,26 +277,42 @@ class SimBackend(EnergyBackend):
         self._arms = jnp.broadcast_to(a.reshape(-1) if a.ndim > 1 else a,
                                       (self._n,))
 
+    def active_phase(self) -> int:
+        """Index into the phase cycle for the NEXT interval to advance
+        (0 for non-drifting backends)."""
+        if len(self._phases) == 1:
+            return 0
+        return (self._interval // self._drift_every) % len(self._phases)
+
     def advance(self, work_fn: Optional[Callable[[], Any]] = None) -> Any:
         out = work_fn() if work_fn is not None else None
         self._key, k = jax.random.split(self._key)
+        # the active phase is a host-side pick by global interval index:
+        # params are jit operands (all phases share one shape signature),
+        # so a phase switch never retraces — and every stripe of a
+        # striped fleet, counting its own lockstep advances, switches at
+        # the same boundary
         self._estates, self._core_s, self._uncore_s = _sim_advance(
-            self.params, self._estates, self._core_s, self._uncore_s,
-            self._arms, self._node_ids, k, self._stacked,
+            self._phases[self.active_phase()], self._estates, self._core_s,
+            self._uncore_s, self._arms, self._node_ids, k, self._stacked,
         )
+        self._interval += 1
         return out
 
     def local_slice(self, lo: int, hi: int) -> "SimBackend":
         """A fresh backend owning fleet nodes [lo, hi): stacked params
-        slice rowwise, and the stripe inherits this backend's seed plus
-        a shifted node offset, so (advanced in lockstep from t=0) its
-        counters equal the full fleet's rows [lo:hi) bit for bit."""
+        (every drift phase included) slice rowwise, and the stripe
+        inherits this backend's seed plus a shifted node offset, so
+        (advanced in lockstep from t=0) its counters equal the full
+        fleet's rows [lo:hi) bit for bit."""
         if not 0 <= lo < hi <= self._n:
             raise ValueError(f"slice [{lo}, {hi}) out of range for N={self._n}")
-        params = (jax.tree.map(lambda x: x[lo:hi], self.params)
-                  if self._stacked else self.params)
-        return SimBackend(params, n=hi - lo, seed=self._seed,
-                          node_offset=self._offset + lo)
+        sl = (lambda q: jax.tree.map(lambda x: x[lo:hi], q)) if self._stacked \
+            else (lambda q: q)
+        return SimBackend(sl(self.params), n=hi - lo, seed=self._seed,
+                          node_offset=self._offset + lo,
+                          drift_params=[sl(q) for q in self._phases[1:]] or None,
+                          drift_every=self._drift_every)
 
     def read_counters(self) -> Counters:
         es = self._estates

@@ -11,12 +11,15 @@ switch counter — and folds it into policy state through the
 - a single node is just a fleet of N=1;
 - a fleet of N>1 with a kernel-exact policy auto-dispatches the fused
   Pallas ``fleet_step`` (update-then-select in one launch, see
-  repro.core.fleet.Fleet / kernels.fleet_ucb) — including the
-  QoS-constrained variant, whose feasible set rides as per-controller
-  ``qos_delta``/``default_arm`` kernel lanes;
+  repro.core.fleet.Fleet / kernels.fleet_ucb) — which is now the whole
+  EnergyUCB family: the QoS feasible set (``qos_delta``/``default_arm``
+  lanes), the sliding-window discount (``gamma`` lane; reward AND
+  progress statistics decay, so the feasible set tracks workload phase
+  changes), and the round-robin warm-up ablation (``optimistic`` lane)
+  all ride per-controller kernel lanes;
 - fleets beyond one chip's VMEM pass ``mesh=`` to shard the (N, K)
   controller state over the mesh's data axis (repro.parallel.fleet);
-- every other policy variant takes the vmapped ``PolicyFns`` path.
+- non-UCB policy families take the vmapped ``PolicyFns`` path.
 
 For backends whose raw interval wall-time depends on the chosen
 frequency (``variable_interval``, e.g. one train step at f takes t(f)

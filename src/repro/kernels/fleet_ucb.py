@@ -16,18 +16,27 @@ kernels, both bandwidth-trivial but latency-sensitive:
   arm it had selected; the kernel applies the mu/n/phat/pn running-mean
   update, advances prev/t, and selects the next arm from the updated
   state — update-then-select, one kernel instead of two plus the XLA
-  scatter soup in between. The select half carries the QoS feasible-set
-  lane (§3.3): arms whose estimated slowdown vs the reference arm
-  exceeds the per-controller ``qos`` budget are masked out of the
-  argmax, with untried arms (and every arm while the reference arm has
-  no progress samples) staying feasible — optimism under uncertainty.
+  scatter soup in between. The update half carries the nonstationary
+  lane: rows with ``gamma < 1`` decay every arm's effective count
+  (``n <- n * gamma`` before the new sample folds in) so the estimates
+  track drifting workloads — reward AND progress statistics, so the QoS
+  feasible set re-learns slowdowns after a phase change too. The select
+  half carries the QoS feasible-set lane (§3.3): arms whose estimated
+  slowdown vs the reference arm exceeds the per-controller ``qos``
+  budget are masked out of the argmax, with untried arms (and every arm
+  while the reference arm has no progress samples) staying feasible —
+  optimism under uncertainty. Sliding-window rows additionally score a
+  shrunk-to-prior mean (stale arms decay back to "untried"), and
+  ``optimistic < 0.5`` rows run the round-robin warm-up ablation.
 
 Hyperparameters ride as per-controller (N,) arrays (hyperparams-as-data:
-a fleet can sweep alpha x lambda across its nodes, and mix QoS budgets
-— sentinel ``qos < 0`` = unconstrained — in the same launch).
-One program handles a BLOCK_N-controller stripe with all K arms resident
-in VMEM; K is small so the argmax/one-hot/feasibility reductions stay in
-registers.
+a fleet can sweep alpha x lambda across its nodes, and mix QoS budgets —
+sentinel ``qos < 0`` = unconstrained — sliding windows — sentinel
+``gamma >= 1`` = stationary — and warm-up variants — sentinel
+``optimistic >= 0.5`` = optimistic init — in the same launch; sentinel
+lanes are bit-exact with the un-flagged kernel). One program handles a
+BLOCK_N-controller stripe with all K arms resident in VMEM; K is small
+so the argmax/one-hot/feasibility reductions stay in registers.
 
 Validated in interpret mode against kernels.ref.ref_fleet_select /
 ref_fleet_step on ragged fleet sizes (tests/test_kernels.py).
@@ -99,24 +108,51 @@ def _fleet_select_kernel(mu_ref, n_ref, prev_ref, t_ref, alpha_ref, lam_ref,
 def _fleet_step_kernel(
     mu_ref, n_ref, phat_ref, pn_ref, prev_ref, t_ref,
     arm_ref, r_ref, prog_ref, act_ref, alpha_ref, lam_ref, qos_ref, def_ref,
+    gamma_ref, opt_ref, prior_ref,
     mu_o, n_o, phat_o, pn_o, prev_o, t_o, next_o, *, k,
 ):
     mu, cnt = mu_ref[...], n_ref[...]
     phat, pn = phat_ref[...], pn_ref[...]
     prev, t = prev_ref[...], t_ref[...]
     arm, act = arm_ref[...], act_ref[...]  # act: (BN,) f32 0/1 mask
+    g = gamma_ref[...]
     arms = jax.lax.broadcasted_iota(jnp.int32, mu.shape, 1)
-    # --- update: running means via a one-hot scatter (K stays in VMEM)
+    # --- update: running means via a one-hot scatter (K stays in VMEM).
+    # Sliding-window rows (gamma < 1) decay EVERY arm's effective count
+    # by gamma before the new sample folds in; the incremental mean
+    # mu + (r - mu)/(n*g + 1) IS the discounted mean (mu*n*g + r) /
+    # (n*g + 1), so one expression — the policy's exact dataflow —
+    # serves both lanes and gamma only ever touches the counts.
+    # Inactive rows are frozen, so the decay is gated on the active
+    # mask; stationary rows select the undecayed counts, staying
+    # bit-exact with the undiscounted kernel.
+    sw = (g < 1.0) & (act > 0.5)  # (BN,) discount applies this interval
     onehot = (arms == arm[:, None]).astype(mu.dtype) * act[:, None]
-    n2 = cnt + onehot
-    mu2 = mu + onehot * (r_ref[...][:, None] - mu) / jnp.maximum(n2, 1.0)
-    pn2 = pn + onehot
-    phat2 = phat + onehot * (prog_ref[...][:, None] - phat) / jnp.maximum(pn2, 1.0)
+    r_col = r_ref[...][:, None]
+    n2 = jnp.where(sw[:, None], cnt * g[:, None], cnt) + onehot
+    mu2 = mu + onehot * (r_col - mu) / jnp.maximum(n2, 1.0)
+    # progress statistics discount under gamma < 1 too (stale slowdown
+    # estimates must not pin the QoS feasible set after a phase change)
+    p_col = prog_ref[...][:, None]
+    pn2 = jnp.where(sw[:, None], pn * g[:, None], pn) + onehot
+    phat2 = phat + onehot * (p_col - phat) / jnp.maximum(pn2, 1.0)
     prev2 = jnp.where(act > 0.5, arm, prev).astype(jnp.int32)
     t2 = t + act
-    # --- select the next arm from the freshly updated state, restricted
-    # to each controller's QoS feasible set
-    sa = _sa_scores(mu2, n2, prev2, t2, alpha_ref[...], lam_ref[...])
+    # --- select the next arm from the freshly updated state. Sliding-
+    # window rows score a shrunk-to-prior mean (w0 = 0.25, mirroring
+    # ucb_select's sliding-window optimism: stale arms decay back to
+    # "untried", not "bad forever"); round-robin warm-up rows
+    # (optimistic < 0.5) sweep untried arms in arm order first; and the
+    # QoS feasible set restricts the argmax per controller.
+    w0 = 0.25
+    shrunk = (n2 * mu2 + w0 * prior_ref[...]) / (n2 + w0)
+    mu_eff = jnp.where((g < 1.0)[:, None], shrunk, mu2)
+    sa = _sa_scores(mu_eff, n2, prev2, t2, alpha_ref[...], lam_ref[...])
+    untried = n2 < 1.0
+    warm = jnp.where(untried, 1e9 - arms.astype(mu.dtype), -1e9)
+    any_untried = jnp.max(jnp.where(untried, 1.0, 0.0), axis=1) > 0.5
+    rr = (opt_ref[...] < 0.5) & any_untried
+    sa = jnp.where(rr[:, None], warm, sa)
     feasible = _qos_feasible(phat2, pn2, qos_ref[...], def_ref[...], arms)
     mu_o[...] = mu2
     n_o[...] = n2
@@ -182,6 +218,9 @@ def fleet_step(
     lam: jax.Array,  # (N,)
     qos: jax.Array,  # (N,) slowdown budget; sentinel < 0 = unconstrained
     def_arm: jax.Array,  # (N,) int32 QoS reference (f_max) arm
+    gamma: jax.Array,  # (N,) sliding-window discount; sentinel >= 1 = stationary
+    optimistic: jax.Array,  # (N,) sentinel >= 0.5 = optimistic init, else warm-up
+    prior_mu: jax.Array,  # (N, K) optimistic prior the shrink decays toward
     *,
     block_n: int = 1024,
     interpret: bool = False,
@@ -196,7 +235,8 @@ def fleet_step(
             _pad(prev, pad), _pad(t, pad, 2.0), _pad(arm, pad),
             _pad(reward, pad), _pad(progress, pad), _pad(active, pad),
             _pad(alpha, pad), _pad(lam, pad), _pad(qos, pad, -1.0),
-            _pad(def_arm, pad),
+            _pad(def_arm, pad), _pad(gamma, pad, 1.0),
+            _pad(optimistic, pad, 1.0), _pad(prior_mu, pad),
             block_n=block_n, interpret=interpret,
         )
         return tuple(o[:nn] for o in out)
@@ -208,7 +248,7 @@ def fleet_step(
         kernel,
         grid=(nn // block_n,),
         in_specs=[mat, mat, mat, mat, row, row, row, row, row, row, row, row,
-                  row, row],
+                  row, row, row, row, mat],
         out_specs=(mat, mat, mat, mat, row, row, row),
         out_shape=(
             jax.ShapeDtypeStruct((nn, k), f32),
@@ -221,4 +261,4 @@ def fleet_step(
         ),
         interpret=interpret,
     )(mu, n, phat, pn, prev, t, arm, reward, progress, active, alpha, lam,
-      qos, def_arm)
+      qos, def_arm, gamma, optimistic, prior_mu)

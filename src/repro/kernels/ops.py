@@ -61,18 +61,25 @@ def fleet_select(mu, n, prev, t, alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, *,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
                alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, qos_delta=-1.0,
-               default_arm=None, *, interpret: bool = False):
+               default_arm=None, gamma=1.0, optimistic=1.0, prior_mu=None,
+               *, interpret: bool = False):
     """Fused per-interval fleet controller step (update then select,
     restricted to each controller's QoS feasible set; the ``qos_delta``
     sentinel < 0 disables the constraint per controller, so mixed
     constrained/unconstrained fleets share one launch). ``default_arm``
     is the QoS reference and defaults to the top-of-ladder f_max arm
-    (K-1), matching the policy convention.
-    Returns (mu, n, phat, pn, prev, t, next_arm)."""
+    (K-1), matching the policy convention. Nonstationary variants ride
+    the same launch: per-controller ``gamma`` (sentinel >= 1 =
+    stationary) discounts the reward and progress statistics and shrinks
+    stale means toward ``prior_mu`` at select time, and ``optimistic``
+    (sentinel >= 0.5 = optimistic init) flags the round-robin warm-up
+    ablation. Returns (mu, n, phat, pn, prev, t, next_arm)."""
     interp = interpret or not pallas_available()
     nn, k = mu.shape
     if default_arm is None:
         default_arm = k - 1
+    if prior_mu is None:
+        prior_mu = 0.0
     return _fleet_step(
         mu, n, phat, pn, prev, t,
         jnp.asarray(arm, jnp.int32),
@@ -82,5 +89,7 @@ def fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
         _per_controller(alpha, nn), _per_controller(lam, nn),
         _per_controller(qos_delta, nn),
         jnp.broadcast_to(jnp.asarray(default_arm, jnp.int32), (nn,)),
+        _per_controller(gamma, nn), _per_controller(optimistic, nn),
+        jnp.broadcast_to(jnp.asarray(prior_mu, jnp.float32), (nn, k)),
         interpret=interp,
     )

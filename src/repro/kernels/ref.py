@@ -59,23 +59,47 @@ def ref_fleet_select(mu, n, prev, t, *, alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM):
 
 
 def ref_fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
-                   alpha, lam, qos=None, default_arm=None):
+                   alpha, lam, qos=None, default_arm=None, gamma=None,
+                   optimistic=None, prior_mu=None):
     """Fused update-then-select oracle for kernels.fleet_ucb.fleet_step:
     apply the interval's observation as a one-hot running-mean update
     (frozen where inactive), then pick the next SA-UCB arm from each
     controller's QoS feasible set. ``qos=None`` (or the per-controller
     sentinel ``qos < 0``) is the unconstrained lane; until the reference
-    arm has a progress sample, every arm stays feasible."""
+    arm has a progress sample, every arm stays feasible. ``gamma`` (per
+    controller; sentinel >= 1 = stationary) discounts the reward AND
+    progress effective counts and shrinks stale means back to
+    ``prior_mu`` at select time (w0 = 0.25, mirroring ucb_select);
+    ``optimistic`` (sentinel >= 0.5 = optimistic init) selects the
+    round-robin warm-up ablation while any arm is untried."""
     act = active.astype(mu.dtype)
-    k = mu.shape[1]
+    nn, k = mu.shape
+    g = (jnp.ones((nn,), mu.dtype) if gamma is None
+         else jnp.broadcast_to(jnp.asarray(gamma, mu.dtype), (nn,)))
+    opt = (jnp.ones((nn,), mu.dtype) if optimistic is None
+           else jnp.broadcast_to(jnp.asarray(optimistic, mu.dtype), (nn,)))
+    prior = (jnp.zeros((nn, k), mu.dtype) if prior_mu is None
+             else jnp.broadcast_to(jnp.asarray(prior_mu, mu.dtype), (nn, k)))
     onehot = (jnp.arange(k)[None, :] == arm[:, None]).astype(mu.dtype) * act[:, None]
-    n2 = n + onehot
+    # decay-then-increment: the incremental mean over decayed counts IS
+    # the discounted mean, so gamma only ever touches the counts (the
+    # kernel mirrors this exactly)
+    sw = (g < 1.0) & (act > 0.5)
+    n2 = jnp.where(sw[:, None], n * g[:, None], n) + onehot
     mu2 = mu + onehot * (reward[:, None] - mu) / jnp.maximum(n2, 1.0)
-    pn2 = pn + onehot
+    pn2 = jnp.where(sw[:, None], pn * g[:, None], pn) + onehot
     phat2 = phat + onehot * (progress[:, None] - phat) / jnp.maximum(pn2, 1.0)
     prev2 = jnp.where(act > 0.5, arm, prev).astype(jnp.int32)
     t2 = t + act
-    sa = _ref_sa_scores(mu2, n2, prev2, t2, alpha, lam)
+    w0 = 0.25
+    shrunk = (n2 * mu2 + w0 * prior) / (n2 + w0)
+    mu_eff = jnp.where((g < 1.0)[:, None], shrunk, mu2)
+    sa = _ref_sa_scores(mu_eff, n2, prev2, t2, alpha, lam)
+    untried = n2 < 1.0
+    warm = jnp.where(untried, 1e9 - jnp.arange(k)[None, :].astype(mu.dtype),
+                     -1e9)
+    rr = (opt < 0.5) & jnp.any(untried, axis=1)
+    sa = jnp.where(rr[:, None], warm, sa)
     if qos is None:
         nxt = jnp.argmax(sa, axis=1).astype(jnp.int32)
         return mu2, n2, phat2, pn2, prev2, t2, nxt

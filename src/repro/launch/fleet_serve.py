@@ -21,6 +21,12 @@ Any deployment whose coordinator port is reachable beyond loopback MUST
 set a per-deployment rendezvous secret in the ``FLEET_AUTHKEY`` env var
 on every host (``--spawn`` generates a fresh one per run).
 
+Nonstationary fleets ride the same fused kernel: ``--window-discount
+0.95`` runs sliding-window EnergyUCB, ``--warmup`` the round-robin
+warm-up ablation, and ``--drift miniswp --drift-every 100`` makes the
+simulator cycle workload phases (keyed by global interval index, so
+every host stripe switches at the same boundary).
+
 Replay a recorded trace shard-per-host instead of the simulator with
 ``--trace trace.npz`` (see repro.energy.record_trace); ``--out arms.npz``
 makes host 0 gather and persist the full (T, N) arm trajectory — the
@@ -78,6 +84,18 @@ def parse_args(argv=None):
     ap.add_argument("--alpha", type=float, default=None)
     ap.add_argument("--lam", type=float, default=None)
     ap.add_argument("--qos", type=float, default=None)
+    ap.add_argument("--window-discount", type=float, default=None,
+                    help="sliding-window discount gamma < 1 (nonstationary "
+                         "fleets; still dispatches the fused kernel)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="round-robin warm-up instead of optimistic init "
+                         "(the 'w/o Opt. Ini.' ablation)")
+    ap.add_argument("--drift", default=None,
+                    help="comma-separated extra phase apps: the simulator "
+                         "cycles --app plus these every --drift-every "
+                         "intervals (drifting-workload scenario; sim only)")
+    ap.add_argument("--drift-every", type=int, default=0,
+                    help="intervals per drift phase (required with --drift)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--report-every", type=int, default=0)
     ap.add_argument("--interpret", action="store_true",
@@ -90,12 +108,18 @@ def parse_args(argv=None):
 
 
 def build_policy(args):
-    # --qos 0.0 is a valid (strictest) budget: dispatch on `is None`
+    # --qos 0.0 is a valid (strictest) budget, and --window-discount 0.0
+    # a valid (last-sample-only) window: dispatch on `is None`, never on
+    # truthiness
     kw = {"qos_delta": args.qos}
     if args.alpha is not None:
         kw["alpha"] = args.alpha
     if args.lam is not None:
         kw["switching_penalty"] = args.lam
+    if args.window_discount is not None:
+        kw["window_discount"] = args.window_discount
+    if args.warmup:
+        kw["optimistic_init"] = False
     return energy_ucb(**kw)
 
 
@@ -103,11 +127,20 @@ def build_local_backend(args, lo: int, hi: int):
     """This host's backend stripe, built DIRECTLY — never the full
     fleet: a SimBackend stripe is just (n, node_offset) over shared
     params (identical to what ``local_slice`` would produce), and trace
-    shards load only their columns. Per-host footprint stays O(N/H)."""
+    shards load only their columns. Per-host footprint stays O(N/H).
+    ``--drift`` phase schedules are keyed by global interval index, so
+    every stripe switches phase at the same boundary."""
     if args.trace is not None:
+        if args.drift:
+            raise ValueError("--drift drives the simulator; it cannot "
+                             "apply to a recorded --trace replay")
         return TraceReplayBackend.load(args.trace, nodes=(lo, hi))
+    drift = ([make_env_params(get_app(a.strip()))
+              for a in args.drift.split(",") if a.strip()]
+             if args.drift else None)
     return SimBackend(make_env_params(get_app(args.app)), n=hi - lo,
-                      seed=args.seed, node_offset=lo)
+                      seed=args.seed, node_offset=lo,
+                      drift_params=drift, drift_every=args.drift_every)
 
 
 def _authkey() -> bytes:
@@ -206,6 +239,13 @@ def spawn_local(args) -> int:
         base += ["--lam", str(args.lam)]
     if args.qos is not None:
         base += ["--qos", str(args.qos)]
+    if args.window_discount is not None:
+        base += ["--window-discount", str(args.window_discount)]
+    if args.warmup:
+        base += ["--warmup"]
+    if args.drift is not None:
+        base += ["--drift", args.drift, "--drift-every",
+                 str(args.drift_every)]
     if args.interpret:
         base += ["--interpret"]
     if args.jax_distributed:

@@ -30,14 +30,25 @@ def parse_args(argv=None):
     ap.add_argument("--energy", action="store_true",
                     help="run the EnergyUCB controller in the loop")
     ap.add_argument("--qos", type=float, default=None)
+    ap.add_argument("--window-discount", type=float, default=None,
+                    help="sliding-window discount gamma < 1 (training "
+                         "phase changes: warmup -> steady -> eval)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="round-robin warm-up instead of optimistic init")
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
     return ap.parse_args(argv)
 
 
 def build_policy(args):
-    # --qos 0.0 is a valid (strictest) slowdown budget: dispatch on
-    # `is None`, never on truthiness
-    return energy_ucb(qos_delta=args.qos)
+    # --qos 0.0 is a valid (strictest) slowdown budget and
+    # --window-discount 0.0 a valid (last-sample-only) window: dispatch
+    # on `is None`, never on truthiness
+    kw = {"qos_delta": args.qos}
+    if args.window_discount is not None:
+        kw["window_discount"] = args.window_discount
+    if args.warmup:
+        kw["optimistic_init"] = False
+    return energy_ucb(**kw)
 
 
 def main():

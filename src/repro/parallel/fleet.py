@@ -71,10 +71,11 @@ def make_sharded_fleet_step(
     """Build the jitted sharded fleet step for ``mesh``.
 
     Returns ``step(mu, n, phat, pn, prev, t, arm, reward, progress,
-    active, alpha, lam, qos, def_arm) -> (mu, n, phat, pn, prev, t,
-    next_arm)`` with every array sharded on its leading N axis over
-    ``axis``. Scalar hyperparameters broadcast to (N,) lanes first, and
-    ragged fleets are padded to a shard multiple with inactive (frozen)
+    active, alpha, lam, qos, def_arm, gamma, optimistic, prior_mu) ->
+    (mu, n, phat, pn, prev, t, next_arm)`` with every array sharded on
+    its leading N axis over ``axis``. Scalar hyperparameters broadcast
+    to (N,) lanes first (``prior_mu`` to its (N, K) lane), and ragged
+    fleets are padded to a shard multiple with inactive (frozen)
     controllers — same convention as the kernel's stripe padding — then
     sliced back.
     """
@@ -85,25 +86,29 @@ def make_sharded_fleet_step(
     sharded = shard_map(
         kernel, mesh=mesh,
         in_specs=(mat, mat, mat, mat, row, row, row, row, row, row, row,
-                  row, row, row),
+                  row, row, row, row, row, mat),
         out_specs=(mat, mat, mat, mat, row, row, row),
         check_rep=False,  # pallas_call has no replication rule
     )
 
     @jax.jit
     def step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
-             alpha, lam, qos, def_arm):
-        nn = mu.shape[0]
+             alpha, lam, qos, def_arm, gamma=1.0, optimistic=1.0,
+             prior_mu=0.0):
+        nn, k = mu.shape
         lane = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (nn,))
         ilane = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.int32), (nn,))
         args = [
             mu, n, phat, pn, ilane(prev), lane(t), ilane(arm),
             lane(reward), lane(progress), lane(active),
             lane(alpha), lane(lam), lane(qos), ilane(def_arm),
+            lane(gamma), lane(optimistic),
+            jnp.broadcast_to(jnp.asarray(prior_mu, jnp.float32), (nn, k)),
         ]
         pad = (-nn) % n_shards
         if pad:
-            fills = (0, 1, 0, 1, 0, 2.0, 0, 0, 0, 0, 0, 0, -1.0, 0)
+            fills = (0, 1, 0, 1, 0, 2.0, 0, 0, 0, 0, 0, 0, -1.0, 0,
+                     1.0, 1.0, 0)
             args = [_pad(a, pad, f) for a, f in zip(args, fills)]
         out = sharded(*args)
         return tuple(o[:nn] for o in out) if pad else out

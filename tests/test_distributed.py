@@ -80,12 +80,15 @@ def test_slice_policy_lanes():
     pol = energy_ucb().with_params(make_policy_params(k=k)._replace(
         alpha=jnp.linspace(0.05, 0.3, n),
         qos_delta=jnp.where(jnp.arange(n) % 2 == 0, 0.05, -1.0),
+        gamma=jnp.where(jnp.arange(n) % 2 == 0, 0.95, 1.0),
+        optimistic=jnp.where(jnp.arange(n) % 3 == 0, 0.0, 1.0),
     ))
     sub = slice_policy_lanes(pol, 2, 5, n)
-    np.testing.assert_allclose(np.asarray(sub.params.alpha),
-                               np.asarray(pol.params.alpha)[2:5])
-    np.testing.assert_allclose(np.asarray(sub.params.qos_delta),
-                               np.asarray(pol.params.qos_delta)[2:5])
+    for lane in ("alpha", "qos_delta", "gamma", "optimistic"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(sub.params, lane)),
+            np.asarray(getattr(pol.params, lane))[2:5],
+            err_msg=f"lane {lane}")
     # scalar lanes and the (K,) prior pass through untouched
     assert np.ndim(sub.params.lam) == 0
     assert sub.params.prior_mu.shape == (k,)
@@ -209,12 +212,15 @@ def test_striped_controllers_match_single_process():
     """H=3 in-process stripe controllers (mixed fused/vmapped: stripe
     widths differ, so dispatch differs per host) reproduce the single-
     process fleet's arm trajectory and summary exactly — including
-    per-node alpha/QoS hyperparameter lanes."""
+    per-node alpha/QoS AND sliding-window/warm-up hyperparameter
+    lanes (the nonstationary lanes must survive striping)."""
     p = make_env_params(get_app("tealeaf"))
     n, t = 8, 30
     pol = energy_ucb().with_params(make_policy_params()._replace(
         alpha=jnp.linspace(0.05, 0.3, n),
         qos_delta=jnp.where(jnp.arange(n) % 2 == 0, 0.1, -1.0),
+        gamma=jnp.where(jnp.arange(n) % 2 == 0, 0.97, 1.0),
+        optimistic=jnp.where(jnp.arange(n) % 4 == 0, 0.0, 1.0),
     ))
     ref = EnergyController(pol, SimBackend(p, n=n, seed=7), seed=0,
                            interpret=True)
@@ -335,3 +341,39 @@ def test_two_process_fleet_matches_single_process_sharded_step(tmp_path):
         np.testing.assert_array_equal(
             z[f"state_{leaf}"], np.asarray(ref.states[leaf]),
             err_msg=f"2-process state diverged on {leaf}")
+
+
+@pytest.mark.slow
+def test_two_process_nonstationary_drift_matches_single_process(tmp_path):
+    """The nonstationary acceptance oracle: a sliding-window fleet on a
+    DRIFTING workload (miniswp -> tealeaf, phase schedule keyed by
+    global interval index) run as H=2 subprocess hosts reproduces the
+    single-process sharded-step trajectory exactly — nonstationary
+    lanes and phase boundaries both survive striping."""
+    n, t, every = 10, 36, 12
+    out = tmp_path / "arms_sw.npz"
+    cmd = [sys.executable, "-m", "repro.launch.fleet_serve", "--spawn",
+           "--num-hosts", "2", "--nodes", str(n), "--intervals", str(t),
+           "--app", "miniswp", "--drift", "tealeaf",
+           "--drift-every", str(every), "--window-discount", "0.97",
+           "--seed", "0", "--interpret", "--out", str(out)]
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=600,
+                       env=_subproc_env(), cwd=str(REPO))
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    z = np.load(out)
+
+    from repro.parallel import fleet_mesh
+
+    pa = make_env_params(get_app("miniswp"))
+    pb = make_env_params(get_app("tealeaf"))
+    ref = EnergyController(
+        energy_ucb(window_discount=0.97),
+        SimBackend(pa, n=n, seed=0, drift_params=[pb], drift_every=every),
+        seed=0, interpret=True, mesh=fleet_mesh())
+    assert ref.use_kernel, "sliding-window fleets must dispatch fused"
+    ref_arms = _run_controller(ref, t)
+    np.testing.assert_array_equal(z["arms"], ref_arms)
+    for leaf in ref.states:
+        np.testing.assert_array_equal(
+            z[f"state_{leaf}"], np.asarray(ref.states[leaf]),
+            err_msg=f"2-process nonstationary state diverged on {leaf}")

@@ -177,15 +177,22 @@ def test_fleet_controller_fused_dispatch_matches_vmapped():
 
 def test_controller_kernel_gating():
     """N=1 stays on the plain path; non-kernel-exact policies never
-    dispatch the fused step even for N>1 — but QoS-constrained fleets
-    now DO (the kernel carries the feasible-set lane)."""
+    dispatch the fused step even for N>1 — but every EnergyUCB variant
+    now DOES: QoS-constrained (PR 3) and sliding-window/warm-up (PR 5)
+    all ride kernel lanes."""
+    from repro.core import energy_ts
+
     p = make_env_params(get_app("tealeaf"))
     assert not EnergyController(energy_ucb(), SimBackend(p, n=1),
                                 interpret=True).use_kernel
     assert EnergyController(energy_ucb(qos_delta=0.05),
                             SimBackend(p, n=4), interpret=True).use_kernel
-    assert not EnergyController(energy_ucb(window_discount=0.99),
-                                SimBackend(p, n=4), interpret=True).use_kernel
+    assert EnergyController(energy_ucb(window_discount=0.99),
+                            SimBackend(p, n=4), interpret=True).use_kernel
+    assert EnergyController(energy_ucb(optimistic_init=False),
+                            SimBackend(p, n=4), interpret=True).use_kernel
+    assert not EnergyController(energy_ts(), SimBackend(p, n=4),
+                                interpret=True).use_kernel
 
 
 def test_fleet_controller_qos_fused_dispatch_matches_vmapped():

@@ -122,7 +122,9 @@ def test_fleet_per_node_alpha_lanes():
 
 
 def test_fleet_step_vmap_path_requires_key():
-    pol = energy_ucb(window_discount=0.9)  # not kernel-compatible -> vmap path
+    from repro.core import eps_greedy
+
+    pol = eps_greedy()  # not kernel-compatible -> vmap path
     f = Fleet(pol, 4)
     states = f.init(jax.random.key(0))
     arms = f.select(states, jax.random.key(1))
@@ -131,21 +133,93 @@ def test_fleet_step_vmap_path_requires_key():
 
 
 def test_fleet_kernel_dispatch_gating():
-    """Only exact-kernel policies may route to the fused step; since the
-    QoS feasible-set lane landed, constrained EnergyUCB is one of them."""
+    """Only exact-kernel policies may route to the fused step — which is
+    now the ENTIRE EnergyUCB family: the QoS feasible-set lane (PR 3)
+    plus the nonstationary gamma/optimistic lanes (PR 5) cover every
+    variant; only non-UCB families and config-stacked params vmap."""
     from repro.core.fleet import kernel_compatible
+    from repro.core.policies import stack_policy_params, make_policy_params
 
     assert kernel_compatible(energy_ucb())
     assert kernel_compatible(energy_ucb(qos_delta=0.05))
     assert kernel_compatible(energy_ucb(qos_delta=0.0))  # strictest budget
-    assert not kernel_compatible(energy_ucb(window_discount=0.99))
-    assert not kernel_compatible(energy_ucb(optimistic_init=False))
+    # the nonstationary fleets used to silently fall off the fast path
+    assert kernel_compatible(energy_ucb(window_discount=0.99))
+    assert kernel_compatible(energy_ucb(window_discount=0.0))
+    assert kernel_compatible(energy_ucb(optimistic_init=False))
+    assert kernel_compatible(
+        energy_ucb(window_discount=0.95, optimistic_init=False,
+                   qos_delta=0.05))
     from repro.core import rr_freq
 
     assert not kernel_compatible(rr_freq())
+    # extra batch axes (beyond per-node lanes) are not fleet policies
+    batched = energy_ucb().with_params(
+        make_policy_params()._replace(alpha=jnp.zeros((4, 2))))
+    assert not kernel_compatible(batched)
     assert Fleet(energy_ucb(qos_delta=0.05), 8, interpret=True).use_kernel
-    assert not Fleet(energy_ucb(window_discount=0.99), 8,
-                     interpret=True).use_kernel
+    assert Fleet(energy_ucb(window_discount=0.99), 8,
+                 interpret=True).use_kernel
+    assert Fleet(energy_ucb(optimistic_init=False), 8,
+                 interpret=True).use_kernel
+
+
+# ragged sub-stripe and a non-multiple above one stripe
+@pytest.mark.parametrize("n", [7, 1030])
+def test_fleet_mixed_nonstationary_lanes_fused_matches_vmapped(n):
+    """The acceptance oracle: a fleet MIXING stationary, sliding-window
+    (spread of gamma < 1), round-robin warm-up, per-node alpha and QoS
+    lanes dispatches one fused launch and stays bit-identical to the
+    vmapped per-controller path across several desynchronizing steps."""
+    base = energy_ucb()
+    gamma = jnp.where(jnp.arange(n) % 2 == 0,
+                      jnp.linspace(0.9, 0.999, n).astype(jnp.float32), 1.0)
+    pol = base.with_params(base.params._replace(
+        gamma=gamma,
+        optimistic=jnp.where(jnp.arange(n) % 3 == 0, 0.0, 1.0),
+        alpha=jnp.linspace(0.05, 0.3, n).astype(jnp.float32),
+        qos_delta=jnp.where(jnp.arange(n) % 4 == 0, 0.05, -1.0),
+    ))
+    fused = Fleet(pol, n, interpret=True)
+    assert fused.use_kernel, "nonstationary fleets must dispatch fused now"
+    vmapped = Fleet(pol, n, use_kernel=False)
+    states = vmapped.init(jax.random.key(0))
+    arms = vmapped.select(states, jax.random.key(1))
+    s_k, s_v = states, states
+    a_k, a_v = arms, arms
+    for i in range(6):
+        obs = _synth_obs(n, jax.random.key(70 + i))
+        s_k, a_k = fused.step(s_k, a_k, obs)
+        s_v, a_v = vmapped.step(s_v, a_v, obs, jax.random.key(80 + i))
+        np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_v),
+                                      err_msg=f"arms diverged at step {i}")
+        for leaf in s_k:
+            np.testing.assert_array_equal(
+                np.asarray(s_k[leaf]), np.asarray(s_v[leaf]),
+                err_msg=f"mixed-lane fused step diverged on {leaf} "
+                        f"(n={n}, step {i})")
+
+
+def test_fleet_per_node_gamma_lane_only_discounts_its_rows():
+    """A per-node gamma lane is honored row-by-row on the vmapped path
+    (regression: _params_axes used to broadcast gamma, so a (N,) lane
+    would have collided with the (K,) arm axis inside ucb_update)."""
+    n = 5
+    base = energy_ucb()
+    pol = base.with_params(base.params._replace(
+        gamma=jnp.asarray([0.9, 1.0, 0.5, 1.0, 0.99], jnp.float32)))
+    f = Fleet(pol, n, use_kernel=False)
+    states = f.init(jax.random.key(0))
+    states = {**states, "n": jnp.full((n, 9), 4.0)}
+    obs = _synth_obs(n, jax.random.key(1), frac_active=1.0)
+    arms = jnp.zeros((n,), jnp.int32)
+    new = f.update(states, arms, obs)
+    tot = np.asarray(new["n"]).sum(axis=1)
+    # discounted rows: every arm decays to 4*gamma, then the pulled arm
+    # gains the new sample; stationary rows just gain the sample
+    want = np.asarray([36 * 0.9 + 1, 36 + 1, 36 * 0.5 + 1, 36 + 1,
+                       36 * 0.99 + 1])
+    np.testing.assert_allclose(tot, want, rtol=1e-6)
 
 
 # ragged sub-stripe and a non-multiple above one stripe

@@ -175,13 +175,126 @@ def test_fleet_step_qos_sentinel_matches_unconstrained():
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
+def _ns_lanes(n, k=9):
+    """Mixed nonstationary lanes: ~half the fleet sliding-window (a
+    spread of gamma < 1 incl. the 0.0 last-sample-only extreme), the
+    rest stationary via the gamma >= 1 sentinel; a third on round-robin
+    warm-up (optimistic < 0.5); and a nonzero optimistic prior so the
+    shrink-to-prior term is exercised off its zero fixed point."""
+    key = jax.random.key(2000 + n)
+    f = lambda i: jax.random.fold_in(key, i)
+    gamma = jnp.where(jax.random.uniform(f(1), (n,)) < 0.5,
+                      jax.random.uniform(f(2), (n,), maxval=0.999), 1.0)
+    gamma = gamma.at[: min(3, n)].set(0.0)
+    optimistic = jnp.where(jnp.arange(n) % 3 == 0, 0.0, 1.0)
+    prior = jax.random.normal(f(3), (n, k)) * 0.1
+    return gamma, optimistic, prior
+
+
+# ragged again: the nonstationary lanes must survive pad-and-slice
+@pytest.mark.parametrize("n", [7, 1024, 2049])
+def test_fleet_step_nonstationary_lanes_match_ref(n):
+    """The fused step's gamma/optimistic lanes (interpret mode) are
+    exact vs the oracle on fleets mixing sliding-window, warm-up,
+    stationary, QoS-constrained and inactive controllers — the full
+    EnergyUCB family in one launch."""
+    s, qos, da = _qos_lanes(_fleet_state(n, seed=n + 2), n)
+    # decayed effective counts below 1 (stale arms) must round-trip too
+    s["n"] = s["n"] * jnp.where(jnp.arange(n) % 2 == 0, 0.013, 1.0)[:, None]
+    gamma, optimistic, prior = _ns_lanes(n)
+    args = (s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+            s["reward"], s["progress"], s["active"], s["alpha"], s["lam"])
+    got = ops.fleet_step(*args, qos, da, gamma, optimistic, prior,
+                         interpret=True)
+    # jit the oracle: the discounted closed form is a mul-mul-add-div
+    # chain XLA contracts into FMA under jit; eager per-op execution
+    # rounds the add separately (1 ulp). Same expressions, same
+    # compiler, bit-identical results.
+    want = jax.jit(ref.ref_fleet_step)(*args, qos=qos, default_arm=da,
+                                       gamma=gamma, optimistic=optimistic,
+                                       prior_mu=prior)
+    names = ("mu", "n", "phat", "pn", "prev", "t", "next_arm")
+    for nm, g, w in zip(names, got, want):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w), err_msg=f"ns fleet_step {nm} n={n}")
+
+
+def test_fleet_step_ns_sentinels_match_stationary_kernel():
+    """All-sentinel gamma (>= 1) / optimistic (>= 0.5) lanes reproduce
+    the stationary kernel bit for bit — mixed fleets share one launch
+    with zero cost to the stationary rows."""
+    n = 130
+    s = _fleet_state(n, seed=6)
+    args = (s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+            s["reward"], s["progress"], s["active"], s["alpha"], s["lam"])
+    got = ops.fleet_step(*args, -jnp.ones((n,)), jnp.zeros((n,), jnp.int32),
+                         jnp.full((n,), 1.5), jnp.ones((n,)),
+                         jax.random.normal(jax.random.key(0), (n, 9)),
+                         interpret=True)
+    want = ref.ref_fleet_step(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_fleet_step_sw_discounts_counts_and_progress():
+    """A gamma < 1 row decays EVERY arm's reward and progress counts by
+    gamma before the new sample lands; stationary rows are untouched."""
+    n, k = 4, 9
+    s = _fleet_state(n, seed=9)
+    s["active"] = jnp.ones((n,), jnp.float32)
+    gamma = jnp.asarray([0.9, 1.0, 0.9, 1.0], jnp.float32)
+    out = ops.fleet_step(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        s["reward"], s["progress"], s["active"], s["alpha"], s["lam"],
+        -jnp.ones((n,)), jnp.zeros((n,), jnp.int32), gamma, jnp.ones((n,)),
+        jnp.zeros((n, k)), interpret=True)
+    onehot = np.eye(k, dtype=np.float32)[np.asarray(s["arm"])]
+    for name, new, old in (("n", out[1], s["n"]), ("pn", out[3], s["pn"])):
+        want = np.where(np.asarray(gamma)[:, None] < 1.0,
+                        np.asarray(old) * np.asarray(gamma)[:, None],
+                        np.asarray(old)) + onehot
+        np.testing.assert_allclose(np.asarray(new), want, rtol=1e-6,
+                                   err_msg=f"discounted {name}")
+
+
+def test_fleet_step_warmup_lane_round_robins_untried():
+    """optimistic < 0.5 rows sweep untried arms lowest-index-first (the
+    'w/o Opt. Ini.' ablation), while optimistic rows keep the SA-UCB
+    argmax; once every arm is tried the warm-up lane is inert."""
+    n, k = 6, 9
+    s = _fleet_state(n, seed=12)
+    s["active"] = jnp.ones((n,), jnp.float32)
+    s["n"] = jnp.full((n, k), 5.0).at[0, 4].set(0.0).at[0, 2].set(0.0) \
+        .at[1, 7].set(0.0)
+    opt = jnp.asarray([0.0, 0.0, 0.0, 1.0, 1.0, 1.0], jnp.float32)
+    # keep the just-pulled arm's count clear of the probe zeros
+    s["arm"] = jnp.zeros((n,), jnp.int32)
+    out = ops.fleet_step(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        s["reward"], s["progress"], s["active"], s["alpha"], s["lam"],
+        -jnp.ones((n,)), jnp.zeros((n,), jnp.int32), jnp.ones((n,)), opt,
+        jnp.zeros((n, k)), interpret=True)
+    nxt = np.asarray(out[-1])
+    assert nxt[0] == 2, "warm-up must take the lowest-index untried arm"
+    assert nxt[1] == 7
+    # row 2 warm-up with nothing untried, rows 3-5 optimistic: plain SA
+    want = ref.ref_fleet_step(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        s["reward"], s["progress"], s["active"], s["alpha"], s["lam"])[-1]
+    np.testing.assert_array_equal(nxt[2:], np.asarray(want)[2:])
+
+
 def test_fleet_step_frozen_controllers_keep_state():
+    """Inactive controllers ride through untouched — including
+    sliding-window rows, whose discount must NOT decay a finished job's
+    state (the vmapped path freezes whole rows the same way)."""
     s = _fleet_state(64, seed=3)
     s["active"] = jnp.zeros((64,), jnp.float32)
+    gamma = jnp.where(jnp.arange(64) % 2 == 0, 0.9, 1.0)
     got = ops.fleet_step(
         s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
         s["reward"], s["progress"], s["active"], s["alpha"], s["lam"],
-        interpret=True,
+        gamma=gamma, interpret=True,
     )
     for nm, g in zip(("mu", "n", "phat", "pn", "prev", "t"), got):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(s[nm]),

@@ -1,10 +1,15 @@
 """Launcher CLI -> policy wiring. Regression for the silent --qos 0.0
-drop: both launchers used `if args.qos` (falsy for 0.0), discarding the
-strictest valid slowdown budget a user can ask for."""
+drop (both launchers used `if args.qos`, falsy for 0.0, discarding the
+strictest valid slowdown budget), and for the nonstationary flags that
+simply did not exist: --window-discount / --warmup now reach the policy
+on every launcher (same `is not None` dispatch class of bug)."""
 import numpy as np
 import pytest
 
-from repro.launch import serve, train
+from repro.launch import fleet_serve, serve, train
+
+ALL_LAUNCHERS = [serve, train, fleet_serve]
+ALL_IDS = ["serve", "train", "fleet_serve"]
 
 
 @pytest.mark.parametrize("mod", [serve, train], ids=["serve", "train"])
@@ -39,3 +44,58 @@ def test_qos_default_and_value(mod):
     assert float(mod.build_policy(mod.parse_args([])).params.qos_delta) < 0.0
     pol = mod.build_policy(mod.parse_args(["--qos", "0.05"]))
     np.testing.assert_allclose(float(pol.params.qos_delta), 0.05)
+
+
+@pytest.mark.parametrize("mod", ALL_LAUNCHERS, ids=ALL_IDS)
+def test_window_discount_reaches_policy(mod):
+    """--window-discount must produce a sliding-window (gamma < 1)
+    policy — the nonstationary variants simply were not launchable
+    before. 0.0 is a valid (last-sample-only) window: `is not None`
+    dispatch, never truthiness."""
+    assert mod.parse_args([]).window_discount is None
+    assert float(mod.build_policy(mod.parse_args([])).params.gamma) == 1.0
+    pol = mod.build_policy(mod.parse_args(["--window-discount", "0.97"]))
+    np.testing.assert_allclose(float(pol.params.gamma), 0.97)
+    assert "SW" in pol.name
+    zero = mod.build_policy(mod.parse_args(["--window-discount", "0.0"]))
+    assert float(zero.params.gamma) == 0.0
+
+
+@pytest.mark.parametrize("mod", ALL_LAUNCHERS, ids=ALL_IDS)
+def test_warmup_flag_reaches_policy(mod):
+    """--warmup selects the round-robin warm-up ablation (optimistic
+    init off) on every launcher."""
+    assert float(mod.build_policy(mod.parse_args([])).params.optimistic) == 1.0
+    pol = mod.build_policy(mod.parse_args(["--warmup"]))
+    assert float(pol.params.optimistic) == 0.0
+    assert "noOptInit" in pol.name
+
+
+@pytest.mark.parametrize("mod", ALL_LAUNCHERS, ids=ALL_IDS)
+def test_nonstationary_policies_stay_kernel_exact(mod):
+    """The launched nonstationary variants must dispatch the fused
+    kernel — the silent fall-off-the-fast-path this PR fixes."""
+    from repro.core.fleet import kernel_compatible
+
+    args = mod.parse_args(["--window-discount", "0.95", "--warmup",
+                           "--qos", "0.05"])
+    assert kernel_compatible(mod.build_policy(args))
+
+
+def test_fleet_serve_drift_flags_build_phase_schedule():
+    """--drift wires a cycling phase schedule into the host's SimBackend
+    stripe (and is refused for recorded-trace replay)."""
+    args = fleet_serve.parse_args(
+        ["--nodes", "6", "--app", "miniswp", "--drift", "tealeaf,lbm",
+         "--drift-every", "50"])
+    backend = fleet_serve.build_local_backend(args, 0, 3)
+    assert backend.n_nodes == 3
+    assert len(backend._phases) == 3 and backend._drift_every == 50
+    assert backend.active_phase() == 0
+    with pytest.raises(ValueError, match="drift_every"):
+        fleet_serve.build_local_backend(
+            fleet_serve.parse_args(["--drift", "tealeaf"]), 0, 2)
+    with pytest.raises(ValueError, match="--trace"):
+        fleet_serve.build_local_backend(
+            fleet_serve.parse_args(["--trace", "x.npz", "--drift", "tealeaf",
+                                    "--drift-every", "10"]), 0, 2)

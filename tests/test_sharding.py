@@ -85,6 +85,9 @@ def test_rank_mismatch_raises():
 
 
 def _fleet_step_args(n, k=9, seed=0):
+    """Full mixed-lane argument set: per-node alpha/lam, mixed QoS
+    budgets, sliding-window gamma lanes (half the fleet), warm-up
+    optimistic lanes (a third), and a nonzero prior."""
     import jax.numpy as jnp
 
     key = jax.random.key(seed)
@@ -104,6 +107,11 @@ def _fleet_step_args(n, k=9, seed=0):
         jax.random.uniform(f(12), (n,), minval=0.0, maxval=0.05),
         jnp.where(jnp.arange(n) % 2 == 0, 0.05, -1.0).astype(jnp.float32),
         jnp.full((n,), k - 1, jnp.int32),
+        jnp.where(jnp.arange(n) % 2 == 0,
+                  jax.random.uniform(f(13), (n,), minval=0.5, maxval=0.999),
+                  1.0).astype(jnp.float32),
+        jnp.where(jnp.arange(n) % 3 == 0, 0.0, 1.0).astype(jnp.float32),
+        jax.random.normal(f(14), (n, k)) * 0.1,
     )
 
 
@@ -131,7 +139,8 @@ def test_sharded_fleet_step_matches_single_device(n):
 def test_sharded_fleet_step_multi_device_parity():
     """Same parity on a real 8-way data mesh (forced host devices in a
     subprocess so the fake device count never leaks into this run),
-    with a ragged N and mixed QoS lanes — the Aurora-scale config."""
+    with a ragged N and mixed QoS + sliding-window/warm-up lanes — the
+    Aurora-scale config."""
     prog = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
         assert jax.device_count() == 8, jax.device_count()
@@ -154,6 +163,9 @@ def test_sharded_fleet_step_multi_device_parity():
             jnp.float32(0.1), jnp.float32(0.02),
             jnp.where(jnp.arange(n) % 2 == 0, 0.05, -1.0),
             jnp.full((n,), k - 1, jnp.int32),
+            jnp.where(jnp.arange(n) % 2 == 0, 0.95, 1.0),
+            jnp.where(jnp.arange(n) % 3 == 0, 0.0, 1.0),
+            jax.random.normal(f(11), (n, k)) * 0.1,
         )
         mesh = fleet_mesh()
         assert mesh.shape["data"] == 8
