@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Benchmark regression guard for the CI bench-smoke lane.
+
+Compares a freshly produced ``BENCH_controller_overhead.json`` against
+the committed ``BENCH_baseline.json`` row-by-row (matched on ``name``)
+and fails the job when any comparable row slowed down by more than the
+allowed factor.
+
+CI runners are not the machine the baseline was recorded on, so raw
+us_per_call is never compared directly: a machine-speed factor — the
+median of (current / baseline) across comparable rows, clamped to
+[0.25, 4] — rescales the baseline first.  A single regressed row can't
+hide behind the factor (the median is robust), and a uniformly slower
+runner doesn't trip the guard.
+
+Skipped rows: names present in only one file (benchmarks grow), and
+rows whose ``derived`` mentions "interpret" — Pallas interpret mode on
+CPU is an emulation path whose latency is noise, not a product number.
+
+Non-numeric ``us_per_call`` is an ERROR, not a skip: the benchmark
+contract (and this guard) depends on numeric rows.
+
+  python scripts/bench_check.py BENCH_controller_overhead.json \\
+      --baseline BENCH_baseline.json [--factor 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    rows = {}
+    for row in payload["rows"]:
+        us = row.get("us_per_call")
+        if isinstance(us, bool) or not isinstance(us, (int, float)):
+            raise SystemExit(
+                f"{path}: row {row.get('name')!r} has non-numeric "
+                f"us_per_call {us!r} — benchmark rows must be numbers"
+            )
+        rows[row["name"]] = row
+    return rows
+
+
+def check(cur_path: str, base_path: str, factor: float) -> int:
+    cur = load_rows(cur_path)
+    base = load_rows(base_path)
+    shared = sorted(set(cur) & set(base))
+    for name in sorted(set(cur) ^ set(base)):
+        where = "baseline" if name in base else "current"
+        print(f"skip {name}: only in {where}")
+
+    comparable = []
+    for name in shared:
+        derived = f"{cur[name].get('derived', '')} {base[name].get('derived', '')}"
+        if "interpret" in derived:
+            print(f"skip {name}: interpret-mode row (emulated, not a "
+                  f"product number)")
+            continue
+        comparable.append(name)
+    if not comparable:
+        print("no comparable rows; nothing to check")
+        return 0
+
+    ratios = [cur[n]["us_per_call"] / base[n]["us_per_call"]
+              for n in comparable if base[n]["us_per_call"] > 0]
+    speed = min(4.0, max(0.25, statistics.median(ratios))) if ratios else 1.0
+    print(f"machine-speed factor (median cur/base, clamped): {speed:.3f}")
+
+    failures = []
+    for name in comparable:
+        b = base[name]["us_per_call"] * speed
+        c = cur[name]["us_per_call"]
+        verdict = "OK" if c <= factor * b or b == 0 else "REGRESSED"
+        print(f"{verdict:9s} {name}: {c:.2f} us vs {b:.2f} us adjusted "
+              f"baseline (limit {factor:.1f}x)")
+        if verdict == "REGRESSED":
+            failures.append(name)
+
+    if failures:
+        print(f"FAIL: {len(failures)} row(s) regressed beyond "
+              f"{factor:.1f}x: {', '.join(failures)}")
+        return 1
+    print(f"PASS: {len(comparable)} row(s) within {factor:.1f}x of the "
+          f"speed-adjusted baseline")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly produced benchmark JSON")
+    ap.add_argument("--baseline", default="BENCH_baseline.json",
+                    help="committed baseline JSON to compare against")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max allowed slowdown after speed adjustment")
+    args = ap.parse_args(argv)
+    return check(args.current, args.baseline, args.factor)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

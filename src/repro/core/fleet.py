@@ -209,3 +209,61 @@ class Fleet:
         states = _row_where(obs.active, updated, states)
         return states, self._select(self.params, states,
                                     jax.random.split(key, self.n))
+
+    # -- episode scan: T intervals per dispatch ------------------------
+    def _episode_eligible(self) -> None:
+        if not kernel_compatible(self.policy):
+            raise ValueError(
+                f"policy {self.policy.name!r} is not kernel-exact; the "
+                "episode scan only covers the fused-UCB family (stream "
+                "interval by interval instead)"
+            )
+        if self._sharded_step is not None:
+            raise ValueError(
+                "mesh-sharded fleets stream interval by interval (the "
+                "episode scan does not shard its T-axis grid yet)"
+            )
+
+    def episode_trace(self, states: PyTree, arm: jax.Array,
+                      reward, progress, active):
+        """T fused decision intervals in ONE dispatch, observations
+        precomputed as (T, N) columns (kernels.episode_scan trace-fed
+        mode; Pallas megakernel on TPU / interpret, XLA lax.scan over
+        the same math elsewhere). NOTE: ``states`` may be donated —
+        callers replace their state with the returned one. Returns
+        ``(new_states, next_arm, arms_run)``."""
+        self._episode_eligible()
+        p: PolicyParams = self.params
+        (mu, n, phat, pn, prev, t, nxt), arms = ops.episode_scan_trace(
+            states["mu"], states["n"], states["phat"], states["pn"],
+            states["prev"], states["t"], arm, reward, progress, active,
+            p.alpha, p.lam, p.qos_delta, p.default_arm, p.gamma,
+            p.optimistic, p.prior_mu, interpret=self.interpret,
+        )
+        return (
+            {"mu": mu, "n": n, "phat": phat, "pn": pn, "prev": prev, "t": t},
+            nxt, arms,
+        )
+
+    def episode_sim(self, states: PyTree, arm: jax.Array, env_rows, z,
+                    scan_env, *, t_start: int = 0, drift_every: int = 0,
+                    counter_obs: bool = True):
+        """T fused env+controller intervals in ONE dispatch — the
+        sim-fused episode scan over a SimBackend-style environment
+        (``env_rows``/``z``/``scan_env`` from the backend's episode
+        surface). Same donation caveat as :meth:`episode_trace`.
+        Returns ``(new_states, next_arm, env_rows, arms_run)``."""
+        self._episode_eligible()
+        p: PolicyParams = self.params
+        (mu, n, phat, pn, prev, t, nxt), env2, arms = ops.episode_scan_sim(
+            states["mu"], states["n"], states["phat"], states["pn"],
+            states["prev"], states["t"], arm, env_rows, z, scan_env,
+            p.alpha, p.lam, p.qos_delta, p.default_arm, p.gamma,
+            p.optimistic, p.prior_mu, t_start=t_start,
+            drift_every=drift_every, counter_obs=counter_obs,
+            interpret=self.interpret,
+        )
+        return (
+            {"mu": mu, "n": n, "phat": phat, "pn": pn, "prev": prev, "t": t},
+            nxt, env2, arms,
+        )

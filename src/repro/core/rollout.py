@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies import Policy, PolicyFns
+from repro.core.policies import UCB_FNS, Policy, PolicyFns
 from repro.core.simulator import (
     EnvParams,
     EnvState,
@@ -263,6 +263,118 @@ _SWEEP_KEYS = ("energy_kj", "time_s", "switches", "steps", "completed",
                "cum_regret")
 
 
+# ---------------------------------------------------------------------------
+# episode-scan lane: the whole sweep/fleet episode as ONE fused scan
+# (kernels.episode_scan) instead of a lax.scan of per-step policy calls.
+# The env noise is the one thing the scan cannot draw itself without
+# replicating the engine's key tree, so these helpers precompute the raw
+# standard normals on the engine's EXACT key schedule.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def _engine_noise(keys, max_steps):
+    """(R, max_steps, 4) raw normals: per repeat, the draws
+    ``_single_rollout`` would consume (split -> per-step split ->
+    env key -> split(4))."""
+
+    def per_repeat(key):
+        _, k_run = jax.random.split(key)
+        ks = jax.random.split(k_run, max_steps)
+
+        def per_step(k):
+            _, k2 = jax.random.split(k)
+            kk = jax.random.split(k2, 4)
+            return jnp.stack([jax.random.normal(kk[i]) for i in range(4)])
+
+        return jax.vmap(per_step)(ks)
+
+    return jax.vmap(per_repeat)(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps", "n_nodes"))
+def _fleet_noise(k_run, max_steps, n_nodes):
+    """(max_steps, N, 4) raw normals on ``_indep_fleet_rollout``'s key
+    schedule (per step: split(k, 2N) -> row 1 are the env keys)."""
+    ks = jax.random.split(k_run, max_steps)
+
+    def per_step(k):
+        kk = jax.random.split(k, 2 * n_nodes).reshape(2, n_nodes)[1]
+
+        def draw(q):
+            qs = jax.random.split(q, 4)
+            return jnp.stack([jnp.asarray(jax.random.normal(qs[i]))
+                              for i in range(4)])
+
+        return jax.vmap(draw)(kk)
+
+    return jax.vmap(per_step)(ks)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _flat_ucb_start(flat, n):
+    """Vmapped init + first select over per-node UCB params (keys are
+    dummies: the UCB fns are deterministic)."""
+    ks = jax.random.split(jax.random.key(0), n)
+    states = jax.vmap(UCB_FNS.init)(flat, ks)
+    return states, jax.vmap(UCB_FNS.select)(flat, states, ks)
+
+
+@functools.partial(jax.jit, static_argnames=("n_configs", "n_repeats"))
+def _sweep_episode_metrics(env_f, arms, params, n_configs, n_repeats):
+    """run_sweep's output dict reconstructed from the scan's final env
+    rows + (T, N) arm trace. ``active[t] = t < steps`` is exact because
+    a node's active intervals are a prefix (remaining is monotone and
+    sticks at 0)."""
+    ms = arms.shape[0]
+    mu = expected_rewards(params)
+    mu_star = jnp.max(mu)
+    active = jnp.arange(ms)[:, None] < env_f.t[None, :]
+    regret_inc = (mu_star - mu[arms]) * active
+    shape = lambda x: x.reshape((n_configs, n_repeats))
+    return {
+        "energy_kj": shape(env_f.energy_kj),
+        "time_s": shape(env_f.time_s),
+        "switches": shape(env_f.switches),
+        "steps": shape(env_f.t),
+        "completed": shape(env_f.remaining <= 0.0),
+        "cum_regret": jnp.cumsum(regret_inc, axis=0).T.reshape(
+            (n_configs, n_repeats, ms)
+        ),
+    }
+
+
+def _run_sweep_episode(policy, stacked, params, key, n_repeats, max_steps):
+    from repro.kernels import ops
+    from repro.kernels.episode_scan import env_rows_init, make_scan_env
+
+    if policy.fns is not UCB_FNS:
+        raise ValueError(
+            f"policy {policy.name!r} is not kernel-exact; episode_scan "
+            "sweeps cover the fused-UCB family only"
+        )
+    c = int(jnp.shape(stacked.alpha)[0])
+    r = int(n_repeats)
+    n = c * r
+    # configs x repeats flattened config-major onto the fleet axis:
+    # node c*R + r runs config c with repeat r's noise
+    flat = jax.tree.map(lambda x: jnp.repeat(x, r, axis=0), stacked)
+    ms = int(max_steps)
+    z4 = _engine_noise(jax.random.split(key, r), ms)  # (R, ms, 4)
+    zz = jnp.tile(jnp.transpose(z4, (1, 0, 2)), (1, c, 1))  # (ms, N, 4)
+    states, arm0 = _flat_ucb_start(flat, n)
+    (_, env_f, arms) = ops.episode_scan_sim(
+        states["mu"], states["n"], states["phat"], states["pn"],
+        states["prev"], states["t"], arm0, env_rows_init(n),
+        tuple(zz[..., i] for i in range(4)), make_scan_env([params]),
+        flat.alpha, flat.lam, flat.qos_delta, flat.default_arm,
+        flat.gamma, flat.optimistic, flat.prior_mu,
+        counter_obs=False,
+    )
+    out = _sweep_episode_metrics(env_f, arms, params, c, r)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
 @functools.partial(
     jax.jit, static_argnames=("fns", "max_steps", "reward_fn", "n_repeats")
 )
@@ -288,16 +400,84 @@ def run_sweep(
     n_repeats: int = 3,
     max_steps: Optional[int] = None,
     reward_fn=None,
+    episode_scan: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Batched hyperparameter sweep: configs x seeds through ONE trace.
 
     ``stacked_params`` is a pytree of configs stacked on axis 0 (see
     policies.stack_policy_params / sweep_policy_params). Outputs are
     shaped (n_configs, n_repeats, ...).
+
+    ``episode_scan=True`` flattens configs x repeats onto one fleet axis
+    and runs the WHOLE sweep as a single fused episode scan
+    (kernels.episode_scan, sim-fused mode) on the engine's exact noise
+    schedule — the same arm trajectories and integer outputs, float
+    accumulators equal to round-off — instead of a per-interval
+    scan-of-policy-calls per (config, repeat). UCB-family policies and
+    the plain env reward only (``reward_fn`` keeps the legacy lane).
     """
     ms = int(max_steps or max_steps_hint(params))
+    if episode_scan:
+        if reward_fn is not None:
+            raise NotImplementedError(
+                "episode_scan sweeps use the env reward; pass "
+                "reward_fn only on the legacy lane"
+            )
+        return _run_sweep_episode(policy, stacked_params, params, key,
+                                  n_repeats, ms)
     out = _sweep(policy.fns, stacked_params, params, key, ms, reward_fn, n_repeats)
     return {k: np.asarray(v) for k, v in out.items()}
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _fleet_episode_metrics(env_f, arms, params):
+    """Independent-fleet outputs from the scan's final env rows + arm
+    trace. Gang time is re-folded sequentially (lax.scan) so the float
+    accumulation order matches the streaming loop's."""
+    ms = arms.shape[0]
+    active = jnp.arange(ms)[:, None] < env_f.t[None, :]
+    step_t = jnp.where(
+        jnp.any(active, axis=1),
+        jnp.max(params.t_rel[arms] * params.dt_s, axis=1),
+        0.0,
+    )
+    gang_time, _ = jax.lax.scan(lambda s, x: (s + x, None),
+                                jnp.float32(0.0), step_t)
+    return {
+        "energy_kj": jnp.sum(env_f.energy_kj),
+        "gang_time_s": gang_time,
+        "switches": jnp.sum(env_f.switches),
+    }
+
+
+def _run_fleet_episode_scan(policy, params, key, n_nodes, max_steps):
+    from repro.kernels import ops
+    from repro.kernels.episode_scan import env_rows_init, make_scan_env
+
+    if policy.fns is not UCB_FNS:
+        raise ValueError(
+            f"policy {policy.name!r} is not kernel-exact; episode_scan "
+            "fleets cover the fused-UCB family only"
+        )
+    n, ms = int(n_nodes), int(max_steps)
+    k0, kr = jax.random.split(key)
+    p = policy.params
+    flat = jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            jnp.asarray(x), (n,) + jnp.shape(jnp.asarray(x))
+        ),
+        p,
+    )
+    states, arm0 = _flat_ucb_start(flat, n)
+    zz = _fleet_noise(kr, ms, n)  # (ms, N, 4)
+    (_, env_f, arms) = ops.episode_scan_sim(
+        states["mu"], states["n"], states["phat"], states["pn"],
+        states["prev"], states["t"], arm0, env_rows_init(n),
+        tuple(zz[..., i] for i in range(4)), make_scan_env([params]),
+        p.alpha, p.lam, p.qos_delta, p.default_arm, p.gamma, p.optimistic,
+        p.prior_mu, counter_obs=False,
+    )
+    return _fleet_episode_metrics(env_f, arms, params)
 
 
 def run_fleet_episode(
@@ -307,8 +487,23 @@ def run_fleet_episode(
     n_nodes: int,
     max_steps: int,
     coordinated: bool = False,
+    episode_scan: bool = False,
 ) -> Dict[str, jax.Array]:
-    """N identical nodes on the same job — see RolloutSpec modes."""
+    """N identical nodes on the same job — see RolloutSpec modes.
+
+    ``episode_scan=True`` runs the INDEPENDENT fleet as one fused
+    episode scan (kernels.episode_scan) on the engine's exact noise
+    schedule; the coordinated gang shares one controller across nodes
+    (a cross-node reduction per interval) and keeps the legacy engine.
+    """
+    if episode_scan:
+        if coordinated:
+            raise NotImplementedError(
+                "the coordinated gang reduces across nodes every "
+                "interval; only independent fleets episode-scan"
+            )
+        return _run_fleet_episode_scan(policy, params, key, n_nodes,
+                                       int(max_steps))
     spec = RolloutSpec(n_nodes=n_nodes, coordinated=coordinated)
     return _engine(policy.fns, policy.params, params, key, int(max_steps),
                    None, spec, None, None)

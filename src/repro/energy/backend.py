@@ -35,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.calibration import DEFAULT_ARM, FREQS_GHZ
-from repro.core.simulator import EnvParams, env_init, env_step
+from repro.core.simulator import EnvParams, EnvState, env_init, env_step
 
 PyTree = Any
 
@@ -166,6 +166,38 @@ def _sim_advance(params, estates, core_s, uncore_s, arms, node_ids, key,
     # that same wall delta so deltas reproduce obs.uc / obs.uu exactly
     d_t = estates2.time_s - estates.time_s
     return estates2, core_s + obs.uc * d_t, uncore_s + obs.uu * d_t
+
+
+@functools.partial(jax.jit, static_argnames=("n_intervals",))
+def _episode_noise(key, node_ids, n_intervals):
+    """The raw standard normals the next ``n_intervals`` streaming
+    advances would draw — the same split -> fold_in(global node id) ->
+    split(4) -> four scalar normals schedule ``env_step`` consumes via
+    ``advance``, so threefry determinism makes the draws bit-identical
+    to the streaming ones. (The per-node schedule is deliberately NOT
+    batched into one normal(kk, (4,)) draw: per-element float bits of a
+    draw must not depend on the batch shape, or striped fleets and
+    scanned episodes would drift from the full-fleet streaming loop at
+    the ulp level.)
+
+    Only the per-interval split chain is inherently sequential; fold_in
+    and the normals are per-key independent, so they batch over all
+    T*N keys at once (one fused draw instead of T sequential N-wide
+    ones)."""
+    key2, ks = jax.lax.scan(
+        lambda k, _: tuple(jax.random.split(k)), key, None,
+        length=n_intervals)
+    keys = jax.vmap(
+        lambda k: jax.vmap(lambda i: jax.random.fold_in(k, i))(node_ids)
+    )(ks)
+
+    def draw(kk):
+        k1, k2, k3, k4 = jax.random.split(kk, 4)
+        return jnp.stack([jax.random.normal(k1), jax.random.normal(k2),
+                          jax.random.normal(k3), jax.random.normal(k4)])
+
+    z = jax.vmap(jax.vmap(draw))(keys)
+    return key2, (z[..., 0], z[..., 1], z[..., 2], z[..., 3])
 
 
 class SimBackend(EnergyBackend):
@@ -325,6 +357,53 @@ class SimBackend(EnergyBackend):
             switches=es.switches,
             active=es.remaining > 0.0,
         )
+
+    # -- episode scan surface (kernels.episode_scan) -------------------
+    @property
+    def drift_every(self) -> int:
+        return self._drift_every
+
+    @property
+    def interval_index(self) -> int:
+        """Global index of the NEXT interval to advance (this is what
+        keys the drift-phase schedule)."""
+        return self._interval
+
+    def episode_env(self):
+        """The phase cycle as kernel-consumable :class:`ScanEnv` tables
+        for the sim-fused episode scan. Raises on per-node stacked
+        params — those fleets keep the streaming path."""
+        from repro.kernels.episode_scan import make_scan_env
+
+        return make_scan_env(self._phases)
+
+    def episode_noise(self, n_intervals: int):
+        """``(new_key, z)``: the four (T, N) raw-normal streams the next
+        ``n_intervals`` :meth:`advance` calls would consume, plus the
+        key the backend would hold afterwards. Pure — pair with
+        :meth:`absorb_episode` to commit the scanned episode."""
+        return _episode_noise(self._key, self._node_ids, int(n_intervals))
+
+    def env_rows(self):
+        """Env + counter state as the episode scan's (N,) EnvRows carry."""
+        from repro.kernels.episode_scan import EnvRows
+
+        es = self._estates
+        return EnvRows(es.remaining, es.prev_arm, es.t, es.energy_kj,
+                       es.time_s, es.switches, self._core_s, self._uncore_s)
+
+    def absorb_episode(self, rows, key, n_intervals: int) -> None:
+        """Adopt post-scan env state: afterwards the backend is
+        bit-identical to one that streamed ``n_intervals`` advances."""
+        self._estates = EnvState(
+            remaining=rows.remaining, prev_arm=rows.prev_arm, t=rows.t,
+            energy_kj=rows.energy_kj, time_s=rows.time_s,
+            switches=rows.switches,
+        )
+        self._core_s = rows.core_s
+        self._uncore_s = rows.uncore_s
+        self._key = key
+        self._interval += int(n_intervals)
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ cell, which the legacy runtime's raw delta did not.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -113,6 +114,17 @@ def reduce_summaries(summaries) -> Dict[str, Any]:
     return out
 
 
+@functools.partial(jax.jit, static_argnames=("n",))
+def _burn_key(key, n):
+    """The key a controller streaming ``n`` intervals would hold (one
+    split per step), without the Python loop."""
+
+    def f(k, _):
+        return jax.random.split(k)[0], None
+
+    return jax.lax.scan(f, key, None, length=n)[0]
+
+
 class EnergyController:
     """Consumes any :class:`EnergyBackend`; N = ``backend.n_nodes``.
 
@@ -151,6 +163,8 @@ class EnergyController:
         # so observers (e.g. the distributed plane's arm log) can read
         # it without forcing a host sync on the streaming path
         self.last_arms: Optional[jax.Array] = None
+        # the (T, N) arm trace of the most recent run_scanned() episode
+        self.last_episode_arms: Optional[jax.Array] = None
         self._start = backend.read_counters()
         self._last = self._start
         self._rs = (backend.reward_scale if reward_scale is None
@@ -210,6 +224,93 @@ class EnergyController:
         """Drive ``n_intervals`` decision intervals; returns summary()."""
         for _ in range(n_intervals):
             self.step(work_fn)
+        return self.summary()
+
+    def run_scanned(self, n_intervals: int) -> Dict[str, float]:
+        """Advance ``n_intervals`` decision intervals in ONE episode-scan
+        dispatch (kernels.episode_scan) instead of ``n_intervals``
+        streamed :meth:`step` calls — identical to streaming arm for
+        arm and counter for counter (env counters and RNG/key streams
+        are bit-exact; the controller MEANS agree to float32 round-off,
+        because streaming derives observations eagerly op-by-op while
+        the scan fuses the same expressions, so FMA contraction can
+        differ by ulps) — but paying one launch (or one XLA scan) per
+        episode.
+
+        Works over a :class:`~repro.energy.backend.SimBackend` (the
+        sim-fused mode: env step, counters, obs derivation and the
+        drift-phase schedule run inside the scan; the backend then
+        adopts the post-scan state, so streaming can resume seamlessly)
+        or a :class:`~repro.energy.backend.TraceReplayBackend` (the
+        trace-fed mode: observation columns derived vectorized from the
+        counter trace, requested arms logged, cursor advanced). Raises
+        for non-scannable setups — non-UCB policies, per-node stacked
+        EnvParams, overridden reward scales, other backend types —
+        which keep the streaming loop. Per-interval ``history`` records
+        are NOT produced (the whole point is not materializing
+        per-interval host data); ``summary()``/telemetry still work.
+        Returns :meth:`summary`; the (T, N) arm trace is left on
+        ``self.last_episode_arms`` for observers."""
+        from repro.energy.backend import SimBackend, TraceReplayBackend
+
+        tt = int(n_intervals)
+        if tt < 1:
+            return self.summary()
+        if self._arms is None:
+            self._key, k = jax.random.split(self._key)
+            self._arms = self.fleet.select(self._states, k)
+        backend = self.backend
+        if isinstance(backend, SimBackend):
+            # the kernel pins the reward normalizer to the phase-0
+            # reward_scale (the backend's declared one); a constructor
+            # override would silently diverge from streaming
+            rs0 = np.asarray(backend.params.reward_scale)
+            rs = np.asarray(self._rs)
+            if rs.shape != () or rs0.shape != () or float(rs) != float(rs0):
+                raise ValueError(
+                    "scanned sim episodes need the backend's scalar "
+                    "phase-0 reward_scale (got an override or per-node "
+                    "scales); stream with run() instead"
+                )
+            senv = backend.episode_env()  # raises on stacked params
+            key2, z = backend.episode_noise(tt)
+            self._states, self._arms, env2, arms = self.fleet.episode_sim(
+                self._states, self._arms, backend.env_rows(), z, senv,
+                t_start=backend.interval_index,
+                drift_every=backend.drift_every, counter_obs=True,
+            )
+            backend.absorb_episode(env2, key2, tt)
+        elif isinstance(backend, TraceReplayBackend):
+            c = backend._cursor
+            if c + tt > len(backend):
+                raise RuntimeError(
+                    f"trace has {len(backend) - c} intervals left, "
+                    f"asked to scan {tt}"
+                )
+            win = lambda lo, hi: Counters(
+                *(np.asarray(leaf)[lo:hi] for leaf in backend.trace)
+            )
+            obs = derive_obs(win(c, c + tt), win(c + 1, c + 1 + tt),
+                             self._rs, self._interval_s)
+            self._states, self._arms, arms = self.fleet.episode_trace(
+                self._states, self._arms, obs.reward, obs.progress,
+                obs.active,
+            )
+            backend.requested_arms.extend(np.asarray(arms))
+            backend._cursor = c + tt
+        else:
+            raise ValueError(
+                f"{type(backend).__name__} has no episode surface; "
+                "stream with run() instead"
+            )
+        # streaming step() burns one controller-key split per interval
+        # (the vmapped path's select key); burn the same splits so a
+        # scanned prefix leaves the key stream where streaming would
+        self._key = _burn_key(self._key, tt)
+        self.last_episode_arms = arms
+        self.last_arms = arms[-1]
+        self._last = backend.read_counters()
+        self._n_steps += tt
         return self.summary()
 
     # ------------------------------------------------------------------

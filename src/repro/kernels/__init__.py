@@ -1,3 +1,23 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the fleet-control hot paths (+ XLA fallbacks).
+
+The paper's control plane is tiny math on huge batches — (N, K)
+controller statistics for fleets of N GPUs over K frequency arms — so
+the hot-path cost is launches and memory traffic, not FLOPs. Three
+kernel families cover it:
+
+- ``fleet_ucb`` — the per-interval fused update-then-select step (one
+  launch per decision interval for the whole fleet, every EnergyUCB
+  variant — QoS, sliding-window, warm-up — as per-controller lanes).
+- ``episode_scan`` — the megakernel: T decision intervals per launch
+  with the controller state resident in VMEM, trace-fed or sim-fused
+  (the SimBackend environment stepped in-kernel). One launch per
+  EPISODE instead of per interval.
+- ``flash_attention`` / ``ssd_scan`` — the workload-side kernels the
+  energy model's roofline cells are calibrated against.
+
+``ops`` is the only entry point callers should use: it pads/broadcasts
+per-controller lanes, jits, and dispatches Pallas-on-TPU /
+interpret-mode-on-CPU (tests) / pure-XLA fallbacks (CPU production)
+per call. ``ref`` holds the pure-jnp oracles every kernel is
+bit-tested against (tests/test_kernels.py, tests/test_episode_scan.py).
+"""

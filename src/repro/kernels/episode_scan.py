@@ -1,0 +1,529 @@
+"""Multi-interval episode megakernel: T decision intervals per launch.
+
+The per-interval ``fleet_step`` kernel (kernels.fleet_ucb) already fuses
+update-then-select into one launch, but an episode still pays one launch
+(or one XLA scatter soup) per decision interval even though the (N, K)
+controller state is tiny. This module scans a WHOLE episode inside one
+``pallas_call``: grid = (N / BLOCK_N, T) with T as the innermost
+(sequential) axis, the controller state — mu/n/phat/pn/prev/t plus the
+carried next-arm — and every per-controller lane (alpha, lambda,
+qos_delta, default_arm, gamma, optimistic, prior_mu) resident in VMEM
+across the whole scan. State is carried in OUTPUT refs whose index map
+is constant along the T axis (the revisiting-block pattern: the block
+stays in VMEM while t advances and is flushed to HBM once per
+controller stripe), initialized from the input refs at t == 0.
+
+Two modes:
+
+- **trace-fed** (:func:`episode_scan_trace`): per-interval observation
+  columns (reward / progress / active, each (T, N)) stream in through
+  ``(1, BLOCK_N)`` grid blocks — the offline-evaluation path for
+  ``TraceReplayBackend`` recordings (obs columns are derived once,
+  vectorized, from the counter trace).
+- **sim-fused** (:func:`episode_scan_sim`): SimBackend's ``env_step``,
+  counter accumulation, reward normalization AND the drift-phase
+  schedule (keyed by GLOBAL interval index, computed in-kernel from
+  static ``t_start``/``drift_every``) run inside the kernel; only the
+  raw standard-normal draws stream in as (T, N) columns (they are the
+  one thing that cannot be computed in-kernel without replicating the
+  counter-based RNG — SimBackend precomputes them in one vectorized op,
+  bit-identical to its streaming draws). ``counter_obs=True`` derives
+  the observation from counter DELTAS exactly as the streaming
+  EnergyController does (scan == stream arm-for-arm);
+  ``counter_obs=False`` uses the env's direct observation, matching the
+  rollout engine (run_sweep / run_fleet_episode).
+
+Both modes call :func:`repro.kernels.fleet_ucb.fleet_step_math` — THE
+one copy of the fused-step arithmetic — so fused-vs-scanned bit-parity
+holds by construction, and both have an XLA ``lax.scan`` fallback over
+the same math (:func:`xla_episode_trace` / :func:`xla_episode_sim`) for
+CPU/GPU hosts and kernel-ineligible shapes; the fallback donates the
+scanned state buffers, and callers hoist lane broadcasting/padding to
+once per episode (kernels.ops).
+
+VMEM budget at BLOCK_N = 1024, K = 9, f32: five resident (BLOCK_N, K)
+mats (mu/n/phat/pn/prior) ~ 184 KiB, ~23 (BLOCK_N,) rows ~ 92 KiB, the
+double-buffered (1, BLOCK_N) stream blocks ~ 8 KiB each, and the (P, K)
+phase tables are noise — comfortably inside one core's ~16 MiB VMEM
+independent of T, which is the whole point: T scales for free.
+
+Validated in interpret mode against kernels.ref.ref_episode_scan on
+ragged N / ragged T with mixed stationary/SW/QoS/warm-up lanes
+(tests/test_episode_scan.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.calibration import (
+    DEFAULT_ARM,
+    SWITCH_ENERGY_J,
+    SWITCH_LATENCY_S,
+)
+from repro.kernels.fleet_ucb import _pad, fleet_step_math
+
+
+class ScanEnv(NamedTuple):
+    """Per-phase env tables in kernel-consumable form: (P, K) rows per
+    arm plus a (P, 6) scalar table [dt_s, noise_energy, noise_util,
+    early_noise, early_tau, reward_scale], P = number of drift phases
+    (1 when the workload is stationary). Build with
+    :func:`make_scan_env` (or ``SimBackend.episode_env``)."""
+
+    e_tab: jax.Array  # (P, K) e_interval_kj
+    p_tab: jax.Array  # (P, K) noise-free progress per interval
+    uc_tab: jax.Array  # (P, K) core-active fraction
+    uu_tab: jax.Array  # (P, K) copy-engine-active fraction
+    scal: jax.Array  # (P, 6) per-phase scalars (layout above)
+
+
+class EnvRows(NamedTuple):
+    """(N,) per-node env + counter carry: EnvState's fields plus the
+    SimBackend active-time accumulators, i.e. everything the streaming
+    backend's ``read_counters`` is derived from."""
+
+    remaining: jax.Array  # f32 job fraction left
+    prev_arm: jax.Array  # i32 last actuated arm (env's switch detector)
+    t: jax.Array  # i32 active-step counter
+    energy_kj: jax.Array  # f32 cumulative energy
+    time_s: jax.Array  # f32 cumulative wall time
+    switches: jax.Array  # i32 cumulative switch count
+    core_s: jax.Array  # f32 cumulative core-active seconds
+    uncore_s: jax.Array  # f32 cumulative copy-engine-active seconds
+
+
+def env_rows_init(n: int) -> EnvRows:
+    """Fresh-job env rows for an N-node fleet (mirrors ``env_init`` +
+    zeroed active-time accumulators)."""
+    z = jnp.zeros((n,), jnp.float32)
+    return EnvRows(
+        remaining=jnp.ones((n,), jnp.float32),
+        prev_arm=jnp.full((n,), DEFAULT_ARM, jnp.int32),
+        t=jnp.zeros((n,), jnp.int32),
+        energy_kj=z,
+        time_s=z,
+        switches=jnp.zeros((n,), jnp.int32),
+        core_s=z,
+        uncore_s=z,
+    )
+
+
+def make_scan_env(phases: Sequence) -> ScanEnv:
+    """Stack per-phase :class:`~repro.core.simulator.EnvParams` into the
+    kernel-consumable :class:`ScanEnv` tables. Raises on per-node
+    stacked params (those fleets keep the streaming path)."""
+    for p in phases:
+        if jnp.ndim(p.dt_s) != 0:
+            raise ValueError(
+                "episode scan needs EnvParams shared across the fleet; "
+                "per-node stacked params take the streaming path"
+            )
+    tab = lambda f: jnp.stack([jnp.asarray(getattr(p, f), jnp.float32)
+                               for p in phases])
+    scal = jnp.stack([
+        jnp.stack([jnp.asarray(v, jnp.float32) for v in (
+            p.dt_s, p.noise_energy, p.noise_util, p.early_noise,
+            p.early_tau, p.reward_scale)])
+        for p in phases
+    ])
+    return ScanEnv(e_tab=tab("e_interval_kj"), p_tab=tab("progress"),
+                   uc_tab=tab("uc"), uu_tab=tab("uu"), scal=scal)
+
+
+def phase_rows(env: ScanEnv, idx, t_start: int, drift_every: int):
+    """The active phase's (K,) table rows + (6,) scalar row for global
+    interval ``t_start + idx`` — a one-hot sum over the P phases (exact:
+    one term is the value, the rest are zero), so the drift schedule is
+    branch-free and identical in-kernel and in the XLA fallback."""
+    p = env.e_tab.shape[0]
+    if p > 1:
+        ph = ((t_start + idx) // drift_every) % p
+    else:
+        ph = 0
+    ph_f = (jax.lax.broadcasted_iota(jnp.int32, (p, 1), 0) == ph).astype(
+        jnp.float32
+    )
+    pick = lambda tab: jnp.sum(tab * ph_f, axis=0)
+    return (pick(env.e_tab), pick(env.p_tab), pick(env.uc_tab),
+            pick(env.uu_tab), pick(env.scal))
+
+
+def sim_env_obs(env: EnvRows, arm, z_e, z_uc, z_uu, z_p,
+                e_row, p_row, uc_row, uu_row, scal_row, rs0, *,
+                counter_obs: bool):
+    """One simulated decision interval on (BN,)-shaped rows: exactly the
+    expression trees of ``simulator.env_step`` + SimBackend's counter
+    accumulation, followed by the observation derivation. THE one copy
+    of the scanned env arithmetic — the Pallas kernel, the XLA fallback
+    and the ref oracle all call this, so the three stay bit-identical.
+
+    ``counter_obs=True`` mirrors the streaming EnergyController: the
+    observation comes from counter deltas (``derive_obs``'s expressions,
+    including its rounding — e.g. ``uc * d_t / d_t`` is NOT ``uc`` in
+    float) and the reward normalizer is the phase-0 ``rs0``, so a
+    scanned episode reproduces the streaming loop arm-for-arm.
+    ``counter_obs=False`` uses the env's direct observation (the rollout
+    engine's convention; the normalizer is the active phase's).
+
+    Returns ``(env2, reward, progress, active_f32)``.
+    """
+    dt_s = scal_row[0]
+    noise_e, noise_u = scal_row[1], scal_row[2]
+    early_n, early_tau, rs = scal_row[3], scal_row[4], scal_row[5]
+    k = e_row.shape[0]
+    arms = jax.lax.broadcasted_iota(jnp.int32, (arm.shape[0], k), 1)
+    onehot = (arms == arm[:, None]).astype(jnp.float32)
+    # one-hot gathers from the (K,) phase row: value-exact vs indexing
+    gath = lambda row: jnp.sum(row[None, :] * onehot, axis=1)
+
+    active = env.remaining > 0.0
+    switched = (arm != env.prev_arm) & active
+    early = 1.0 + early_n * jnp.exp(-env.t.astype(jnp.float32) / early_tau)
+    n_e = 1.0 + noise_e * early * z_e
+    n_uc = 1.0 + noise_u * early * z_uc
+    n_uu = 1.0 + noise_u * early * z_uu
+    n_p = 1.0 + noise_u * z_p
+
+    e_kj = gath(e_row) * jnp.maximum(n_e, 0.05)
+    e_kj = e_kj + switched * (SWITCH_ENERGY_J / 1e3)
+    uc = jnp.clip(gath(uc_row) * jnp.maximum(n_uc, 0.05), 1e-3, 1.0)
+    uu = jnp.clip(gath(uu_row) * jnp.maximum(n_uu, 0.05), 1e-3, 1.0)
+    eff = 1.0 - switched * (SWITCH_LATENCY_S / dt_s)
+    prog = gath(p_row) * jnp.maximum(n_p, 0.0) * eff
+
+    remaining2 = jnp.maximum(env.remaining - prog * active, 0.0)
+    prev2 = jnp.where(active, arm, env.prev_arm)
+    t2 = env.t + active.astype(jnp.int32)
+    energy2 = env.energy_kj + e_kj * active
+    time2 = env.time_s + (dt_s + switched * SWITCH_LATENCY_S) * active
+    switches2 = env.switches + switched.astype(jnp.int32)
+    # active-time counters integrate over the REALIZED wall delta (the
+    # post-hoc difference, with its float rounding — the streaming
+    # _sim_advance does exactly this)
+    d_t = time2 - env.time_s
+    core2 = env.core_s + uc * d_t
+    uncore2 = env.uncore_s + uu * d_t
+    env2 = EnvRows(remaining2, prev2, t2, energy2, time2, switches2,
+                   core2, uncore2)
+    if counter_obs:
+        # derive_obs on the carried counters, expression for expression
+        # (read_counters scales energy at READ time, so delta the scaled
+        # values; busy fractions divide the integrated seconds back out)
+        d_e = energy2 * 1e3 - env.energy_kj * 1e3
+        safe_t = jnp.maximum(d_t, 1e-9)
+        uc_o = jnp.clip((core2 - env.core_s) / safe_t, 1e-3, 1.0)
+        uu_o = jnp.clip((uncore2 - env.uncore_s) / safe_t, 1e-3, 1.0)
+        reward = -d_e * (uc_o / uu_o) / rs0
+        progress_o = (1.0 - remaining2) - (1.0 - env.remaining)
+        return env2, reward, progress_o, active.astype(jnp.float32)
+    reward = -(e_kj * 1e3) * (uc / uu) / rs
+    return env2, reward, prog, active.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# trace-fed megakernel
+# ---------------------------------------------------------------------------
+
+_STATE = ("mu", "n", "phat", "pn", "prev", "t", "arm")
+
+
+def _episode_trace_kernel(
+    mu0, n0, phat0, pn0, prev0, t0, arm0,
+    alpha, lam, qos, defr, gamma, opt, prior,
+    r_s, p_s, a_s,
+    mu_o, n_o, phat_o, pn_o, prev_o, t_o, arm_o, arms_o,
+    *, k,
+):
+    carry = (mu_o, n_o, phat_o, pn_o, prev_o, t_o, arm_o)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        for o, i in zip(carry, (mu0, n0, phat0, pn0, prev0, t0, arm0)):
+            o[...] = i[...]
+
+    arm = arm_o[...]
+    arms_o[...] = arm[None, :]  # the arm HELD ENTERING this interval
+    out = fleet_step_math(
+        mu_o[...], n_o[...], phat_o[...], pn_o[...], prev_o[...], t_o[...],
+        arm, r_s[0, :], p_s[0, :], a_s[0, :],
+        alpha[...], lam[...], qos[...], defr[...], gamma[...], opt[...],
+        prior[...], k=k,
+    )
+    for o, v in zip(carry, out):
+        o[...] = v
+
+
+def _pad_cols(a, pad, fill=0):
+    return jnp.concatenate(
+        [a, jnp.full((a.shape[0], pad), fill, a.dtype)], 1
+    )
+
+
+def episode_scan_trace(
+    mu, n, phat, pn, prev, t, arm,  # initial controller state + held arm
+    reward, progress, active,  # (T, N) observation columns
+    alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,  # lanes
+    *,
+    block_n: int = 1024,
+    interpret: bool = False,
+):
+    """T fused controller steps in ONE launch, observations streamed in.
+    Returns ``((mu, n, phat, pn, prev, t, next_arm), arms_run)`` where
+    ``arms_run[t]`` is the arm held entering interval t (so
+    ``arms_run[0] == arm`` and the final selection is ``next_arm``)."""
+    nn, k = mu.shape
+    tt = reward.shape[0]
+    block_n = min(block_n, nn)
+    pad = (-nn) % block_n
+    if pad:  # padded controllers are inactive: state rides through frozen
+        out, arms = episode_scan_trace(
+            _pad(mu, pad), _pad(n, pad, 1), _pad(phat, pad), _pad(pn, pad, 1),
+            _pad(prev, pad), _pad(t, pad, 2.0), _pad(arm, pad),
+            _pad_cols(reward, pad), _pad_cols(progress, pad),
+            _pad_cols(active, pad),
+            _pad(alpha, pad), _pad(lam, pad), _pad(qos, pad, -1.0),
+            _pad(def_arm, pad), _pad(gamma, pad, 1.0),
+            _pad(optimistic, pad, 1.0), _pad(prior_mu, pad),
+            block_n=block_n, interpret=interpret,
+        )
+        return tuple(o[:nn] for o in out), arms[:, :nn]
+    kernel = functools.partial(_episode_trace_kernel, k=k)
+    row = pl.BlockSpec((block_n,), lambda i, tb: (i,))
+    mat = pl.BlockSpec((block_n, k), lambda i, tb: (i, 0))
+    stream = pl.BlockSpec((1, block_n), lambda i, tb: (tb, i))
+    f32, i32 = jnp.float32, jnp.int32
+    *state, arms = pl.pallas_call(
+        kernel,
+        grid=(nn // block_n, tt),
+        in_specs=[mat, mat, mat, mat, row, row, row,
+                  row, row, row, row, row, row, mat,
+                  stream, stream, stream],
+        out_specs=(mat, mat, mat, mat, row, row, row, stream),
+        out_shape=(
+            jax.ShapeDtypeStruct((nn, k), f32),
+            jax.ShapeDtypeStruct((nn, k), f32),
+            jax.ShapeDtypeStruct((nn, k), f32),
+            jax.ShapeDtypeStruct((nn, k), f32),
+            jax.ShapeDtypeStruct((nn,), i32),
+            jax.ShapeDtypeStruct((nn,), f32),
+            jax.ShapeDtypeStruct((nn,), i32),
+            jax.ShapeDtypeStruct((tt, nn), i32),
+        ),
+        interpret=interpret,
+    )(mu, n, phat, pn, prev, t, arm,
+      alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,
+      reward, progress, active)
+    return tuple(state), arms
+
+
+# ---------------------------------------------------------------------------
+# sim-fused megakernel
+# ---------------------------------------------------------------------------
+
+
+def _episode_sim_kernel(
+    mu0, n0, phat0, pn0, prev0, t0, arm0,
+    alpha, lam, qos, defr, gamma, opt, prior,
+    rem0, eprev0, et0, en0, tm0, sw0, cs0, us0,
+    ze_s, zuc_s, zuu_s, zp_s,
+    e_tab, p_tab, uc_tab, uu_tab, scal,
+    mu_o, n_o, phat_o, pn_o, prev_o, t_o, arm_o,
+    rem_o, eprev_o, et_o, en_o, tm_o, sw_o, cs_o, us_o,
+    arms_o,
+    *, k, t_start, drift_every, counter_obs,
+):
+    carry = (mu_o, n_o, phat_o, pn_o, prev_o, t_o, arm_o)
+    env_carry = (rem_o, eprev_o, et_o, en_o, tm_o, sw_o, cs_o, us_o)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        ins = (mu0, n0, phat0, pn0, prev0, t0, arm0,
+               rem0, eprev0, et0, en0, tm0, sw0, cs0, us0)
+        for o, i in zip(carry + env_carry, ins):
+            o[...] = i[...]
+
+    arm = arm_o[...]
+    arms_o[...] = arm[None, :]
+    senv = ScanEnv(e_tab[...], p_tab[...], uc_tab[...], uu_tab[...],
+                   scal[...])
+    e_row, p_row, uc_row, uu_row, scal_row = phase_rows(
+        senv, pl.program_id(1), t_start, drift_every
+    )
+    env = EnvRows(*(o[...] for o in env_carry))
+    env2, reward, prog, act = sim_env_obs(
+        env, arm, ze_s[0, :], zuc_s[0, :], zuu_s[0, :], zp_s[0, :],
+        e_row, p_row, uc_row, uu_row, scal_row, senv.scal[0, 5],
+        counter_obs=counter_obs,
+    )
+    out = fleet_step_math(
+        mu_o[...], n_o[...], phat_o[...], pn_o[...], prev_o[...], t_o[...],
+        arm, reward, prog, act,
+        alpha[...], lam[...], qos[...], defr[...], gamma[...], opt[...],
+        prior[...], k=k,
+    )
+    for o, v in zip(carry + env_carry, out + tuple(env2)):
+        o[...] = v
+
+
+def _pad_env_rows(env: EnvRows, pad) -> EnvRows:
+    # remaining pads with 0 => padded nodes are inactive and frozen
+    return EnvRows(*(_pad(leaf, pad) for leaf in env))
+
+
+def episode_scan_sim(
+    mu, n, phat, pn, prev, t, arm,
+    env_rows: EnvRows,  # (N,) env + counter carry (see env_rows_init)
+    z: Tuple[jax.Array, jax.Array, jax.Array, jax.Array],  # 4x (T, N)
+    scan_env: ScanEnv,
+    alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,
+    *,
+    t_start: int = 0,
+    drift_every: int = 0,
+    counter_obs: bool = True,
+    block_n: int = 1024,
+    interpret: bool = False,
+):
+    """T fused env+controller intervals in ONE launch (sim-fused mode):
+    the environment, counters, observation derivation and drift-phase
+    schedule all run in-kernel; only the raw normals ``z`` stream in.
+    Returns ``((mu, n, phat, pn, prev, t, next_arm), env_rows, arms)``.
+    """
+    nn, k = mu.shape
+    z_e, z_uc, z_uu, z_p = z
+    tt = z_e.shape[0]
+    block_n = min(block_n, nn)
+    pad = (-nn) % block_n
+    if pad:
+        out, env2, arms = episode_scan_sim(
+            _pad(mu, pad), _pad(n, pad, 1), _pad(phat, pad), _pad(pn, pad, 1),
+            _pad(prev, pad), _pad(t, pad, 2.0), _pad(arm, pad),
+            _pad_env_rows(env_rows, pad),
+            tuple(_pad_cols(a, pad) for a in z),
+            scan_env,
+            _pad(alpha, pad), _pad(lam, pad), _pad(qos, pad, -1.0),
+            _pad(def_arm, pad), _pad(gamma, pad, 1.0),
+            _pad(optimistic, pad, 1.0), _pad(prior_mu, pad),
+            t_start=t_start, drift_every=drift_every,
+            counter_obs=counter_obs, block_n=block_n, interpret=interpret,
+        )
+        return (tuple(o[:nn] for o in out),
+                EnvRows(*(leaf[:nn] for leaf in env2)), arms[:, :nn])
+    kernel = functools.partial(
+        _episode_sim_kernel, k=k, t_start=int(t_start),
+        drift_every=int(drift_every), counter_obs=bool(counter_obs),
+    )
+    p = scan_env.e_tab.shape[0]
+    row = pl.BlockSpec((block_n,), lambda i, tb: (i,))
+    mat = pl.BlockSpec((block_n, k), lambda i, tb: (i, 0))
+    stream = pl.BlockSpec((1, block_n), lambda i, tb: (tb, i))
+    tabk = pl.BlockSpec((p, k), lambda i, tb: (0, 0))
+    tabs = pl.BlockSpec((p, 6), lambda i, tb: (0, 0))
+    f32, i32 = jnp.float32, jnp.int32
+    srow = lambda dt: jax.ShapeDtypeStruct((nn,), dt)
+    smat = jax.ShapeDtypeStruct((nn, k), f32)
+    *state, rem, eprev, et, en, tm, sw, cs, us, arms = pl.pallas_call(
+        kernel,
+        grid=(nn // block_n, tt),
+        in_specs=[mat, mat, mat, mat, row, row, row,
+                  row, row, row, row, row, row, mat,
+                  row, row, row, row, row, row, row, row,
+                  stream, stream, stream, stream,
+                  tabk, tabk, tabk, tabk, tabs],
+        out_specs=(mat, mat, mat, mat, row, row, row,
+                   row, row, row, row, row, row, row, row, stream),
+        out_shape=(
+            smat, smat, smat, smat, srow(i32), srow(f32), srow(i32),
+            srow(f32), srow(i32), srow(i32), srow(f32), srow(f32),
+            srow(i32), srow(f32), srow(f32),
+            jax.ShapeDtypeStruct((tt, nn), i32),
+        ),
+        interpret=interpret,
+    )(mu, n, phat, pn, prev, t, arm,
+      alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,
+      *env_rows, z_e, z_uc, z_uu, z_p, *scan_env)
+    return (tuple(state), EnvRows(rem, eprev, et, en, tm, sw, cs, us), arms)
+
+
+# ---------------------------------------------------------------------------
+# XLA lax.scan fallback — same math, no Pallas (CPU/GPU hosts)
+# ---------------------------------------------------------------------------
+
+# the scanned state is dead after the call: donate it so XLA reuses the
+# buffers instead of copying 17 arrays per episode (satellite: the
+# fallback pads/broadcasts nothing per interval either — lanes are
+# closed over once)
+_STATE_ARGS = tuple(range(7))
+
+
+@functools.partial(jax.jit, donate_argnums=_STATE_ARGS)
+def xla_episode_trace(mu, n, phat, pn, prev, t, arm,
+                      reward, progress, active,
+                      alpha, lam, qos, def_arm, gamma, optimistic, prior_mu):
+    """lax.scan over ``fleet_step_math`` — the trace-fed fallback.
+    Same return contract as :func:`episode_scan_trace`."""
+    k = mu.shape[1]
+
+    def step(carry, cols):
+        r, p, a = cols
+        out = fleet_step_math(
+            *carry, r, p, a, alpha, lam, qos, def_arm, gamma, optimistic,
+            prior_mu, k=k,
+        )
+        return out, carry[6]
+
+    # NOTE: no scan unroll — unrolling lets XLA fuse across iterations,
+    # which changes FMA contraction and costs the bitwise parity with
+    # ref_episode_scan / repeated fleet_step that the tests pin
+    final, arms = jax.lax.scan(
+        step, (mu, n, phat, pn, prev, t, arm), (reward, progress, active)
+    )
+    return final, arms
+
+
+# env_rows is NOT donated: SimBackend.env_rows() aliases the backend's
+# live counter arrays (read_counters shares them), which must survive
+# until absorb_episode swaps in the post-scan rows
+@functools.partial(
+    jax.jit,
+    static_argnames=("t_start", "drift_every", "counter_obs"),
+    donate_argnums=_STATE_ARGS,
+)
+def xla_episode_sim(mu, n, phat, pn, prev, t, arm,
+                    env_rows: EnvRows, z, scan_env: ScanEnv,
+                    alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,
+                    *, t_start: int = 0, drift_every: int = 0,
+                    counter_obs: bool = True):
+    """lax.scan over ``sim_env_obs`` + ``fleet_step_math`` — the
+    sim-fused fallback. Same return contract as
+    :func:`episode_scan_sim`."""
+    k = mu.shape[1]
+    z_e, z_uc, z_uu, z_p = z
+    tt = z_e.shape[0]
+
+    def step(carry, xs):
+        state, env = carry
+        idx, ze, zuc, zuu, zp = xs
+        e_row, p_row, uc_row, uu_row, scal_row = phase_rows(
+            scan_env, idx, t_start, drift_every
+        )
+        env2, r, p, a = sim_env_obs(
+            env, state[6], ze, zuc, zuu, zp,
+            e_row, p_row, uc_row, uu_row, scal_row, scan_env.scal[0, 5],
+            counter_obs=counter_obs,
+        )
+        out = fleet_step_math(
+            *state, r, p, a, alpha, lam, qos, def_arm, gamma, optimistic,
+            prior_mu, k=k,
+        )
+        return (out, env2), state[6]
+
+    (final, env2), arms = jax.lax.scan(
+        step, ((mu, n, phat, pn, prev, t, arm), env_rows),
+        (jnp.arange(tt, dtype=jnp.int32), z_e, z_uc, z_uu, z_p),
+    )
+    return final, env2, arms

@@ -105,17 +105,17 @@ def _fleet_select_kernel(mu_ref, n_ref, prev_ref, t_ref, alpha_ref, lam_ref,
     arm_ref[...] = _first_argmax(sa, k)
 
 
-def _fleet_step_kernel(
-    mu_ref, n_ref, phat_ref, pn_ref, prev_ref, t_ref,
-    arm_ref, r_ref, prog_ref, act_ref, alpha_ref, lam_ref, qos_ref, def_ref,
-    gamma_ref, opt_ref, prior_ref,
-    mu_o, n_o, phat_o, pn_o, prev_o, t_o, next_o, *, k,
+def fleet_step_math(
+    mu, cnt, phat, pn, prev, t, arm, reward, prog, act,
+    alpha, lam, qos, def_arm, g, opt, prior, *, k,
 ):
-    mu, cnt = mu_ref[...], n_ref[...]
-    phat, pn = phat_ref[...], pn_ref[...]
-    prev, t = prev_ref[...], t_ref[...]
-    arm, act = arm_ref[...], act_ref[...]  # act: (BN,) f32 0/1 mask
-    g = gamma_ref[...]
+    """The per-interval update-then-select dataflow on (BN, K)/(BN,)
+    values — THE one copy of the fused-step arithmetic. Both the
+    per-interval ``fleet_step`` kernel and the multi-interval episode
+    megakernel (kernels.episode_scan) call this, so fused-vs-scanned
+    bit-parity holds by construction: each scan iteration evaluates the
+    identical expression tree a standalone ``fleet_step`` launch would.
+    Returns (mu, n, phat, pn, prev, t, next_arm)."""
     arms = jax.lax.broadcasted_iota(jnp.int32, mu.shape, 1)
     # --- update: running means via a one-hot scatter (K stays in VMEM).
     # Sliding-window rows (gamma < 1) decay EVERY arm's effective count
@@ -128,12 +128,12 @@ def _fleet_step_kernel(
     # bit-exact with the undiscounted kernel.
     sw = (g < 1.0) & (act > 0.5)  # (BN,) discount applies this interval
     onehot = (arms == arm[:, None]).astype(mu.dtype) * act[:, None]
-    r_col = r_ref[...][:, None]
+    r_col = reward[:, None]
     n2 = jnp.where(sw[:, None], cnt * g[:, None], cnt) + onehot
     mu2 = mu + onehot * (r_col - mu) / jnp.maximum(n2, 1.0)
     # progress statistics discount under gamma < 1 too (stale slowdown
     # estimates must not pin the QoS feasible set after a phase change)
-    p_col = prog_ref[...][:, None]
+    p_col = prog[:, None]
     pn2 = jnp.where(sw[:, None], pn * g[:, None], pn) + onehot
     phat2 = phat + onehot * (p_col - phat) / jnp.maximum(pn2, 1.0)
     prev2 = jnp.where(act > 0.5, arm, prev).astype(jnp.int32)
@@ -145,22 +145,32 @@ def _fleet_step_kernel(
     # (optimistic < 0.5) sweep untried arms in arm order first; and the
     # QoS feasible set restricts the argmax per controller.
     w0 = 0.25
-    shrunk = (n2 * mu2 + w0 * prior_ref[...]) / (n2 + w0)
+    shrunk = (n2 * mu2 + w0 * prior) / (n2 + w0)
     mu_eff = jnp.where((g < 1.0)[:, None], shrunk, mu2)
-    sa = _sa_scores(mu_eff, n2, prev2, t2, alpha_ref[...], lam_ref[...])
+    sa = _sa_scores(mu_eff, n2, prev2, t2, alpha, lam)
     untried = n2 < 1.0
     warm = jnp.where(untried, 1e9 - arms.astype(mu.dtype), -1e9)
     any_untried = jnp.max(jnp.where(untried, 1.0, 0.0), axis=1) > 0.5
-    rr = (opt_ref[...] < 0.5) & any_untried
+    rr = (opt < 0.5) & any_untried
     sa = jnp.where(rr[:, None], warm, sa)
-    feasible = _qos_feasible(phat2, pn2, qos_ref[...], def_ref[...], arms)
-    mu_o[...] = mu2
-    n_o[...] = n2
-    phat_o[...] = phat2
-    pn_o[...] = pn2
-    prev_o[...] = prev2
-    t_o[...] = t2
-    next_o[...] = _feasible_argmax(sa, feasible, k)
+    feasible = _qos_feasible(phat2, pn2, qos, def_arm, arms)
+    return mu2, n2, phat2, pn2, prev2, t2, _feasible_argmax(sa, feasible, k)
+
+
+def _fleet_step_kernel(
+    mu_ref, n_ref, phat_ref, pn_ref, prev_ref, t_ref,
+    arm_ref, r_ref, prog_ref, act_ref, alpha_ref, lam_ref, qos_ref, def_ref,
+    gamma_ref, opt_ref, prior_ref,
+    mu_o, n_o, phat_o, pn_o, prev_o, t_o, next_o, *, k,
+):
+    out = fleet_step_math(
+        mu_ref[...], n_ref[...], phat_ref[...], pn_ref[...],
+        prev_ref[...], t_ref[...], arm_ref[...], r_ref[...], prog_ref[...],
+        act_ref[...], alpha_ref[...], lam_ref[...], qos_ref[...], def_ref[...],
+        gamma_ref[...], opt_ref[...], prior_ref[...], k=k,
+    )
+    for ref, val in zip((mu_o, n_o, phat_o, pn_o, prev_o, t_o, next_o), out):
+        ref[...] = val
 
 
 def _pad(a, pad, fill=0):

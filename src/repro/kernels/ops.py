@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.constants import DEFAULT_ALPHA, DEFAULT_LAM
+from repro.kernels import episode_scan as _ep
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.fleet_ucb import fleet_select as _fleet_select
@@ -92,4 +93,104 @@ def fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
         _per_controller(gamma, nn), _per_controller(optimistic, nn),
         jnp.broadcast_to(jnp.asarray(prior_mu, jnp.float32), (nn, k)),
         interpret=interp,
+    )
+
+
+# --------------------------------------------------------------------------
+# episode scan: T intervals per dispatch
+# --------------------------------------------------------------------------
+
+_pl_episode_trace = jax.jit(
+    _ep.episode_scan_trace, static_argnames=("block_n", "interpret")
+)
+_pl_episode_sim = jax.jit(
+    _ep.episode_scan_sim,
+    static_argnames=("t_start", "drift_every", "counter_obs", "block_n",
+                     "interpret"),
+)
+
+
+def _episode_lanes(nn, k, alpha, lam, qos_delta, default_arm, gamma,
+                   optimistic, prior_mu):
+    """Broadcast the per-controller lanes ONCE per episode (the per-step
+    ``fleet_step`` wrapper re-broadcasts them every interval; the scan
+    amortizes that and the ragged-N padding over the whole episode)."""
+    if default_arm is None:
+        default_arm = k - 1
+    if prior_mu is None:
+        prior_mu = 0.0
+    return (
+        _per_controller(alpha, nn), _per_controller(lam, nn),
+        _per_controller(qos_delta, nn),
+        jnp.broadcast_to(jnp.asarray(default_arm, jnp.int32), (nn,)),
+        _per_controller(gamma, nn), _per_controller(optimistic, nn),
+        jnp.broadcast_to(jnp.asarray(prior_mu, jnp.float32), (nn, k)),
+    )
+
+
+def episode_scan_trace(mu, n, phat, pn, prev, t, arm,
+                       reward, progress, active,
+                       alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, qos_delta=-1.0,
+                       default_arm=None, gamma=1.0, optimistic=1.0,
+                       prior_mu=None, *, interpret: bool = False,
+                       block_n: int = 1024):
+    """T fused controller steps in one dispatch, trace-fed: per-interval
+    observation columns ``reward/progress/active`` are (T, N). Routes to
+    the Pallas megakernel on TPU (or with ``interpret=True``), else to
+    the XLA lax.scan fallback over the same math. NOTE: the fallback
+    DONATES the six state arrays and ``arm`` — pass state you no longer
+    need (callers replace their state with the returned one). Returns
+    ``((mu, n, phat, pn, prev, t, next_arm), arms)`` with ``arms[t]``
+    the arm held entering interval t."""
+    nn, k = mu.shape
+    lanes = _episode_lanes(nn, k, alpha, lam, qos_delta, default_arm, gamma,
+                           optimistic, prior_mu)
+    obs = (jnp.asarray(reward, jnp.float32),
+           jnp.asarray(progress, jnp.float32),
+           jnp.asarray(active, jnp.float32))
+    arm = jnp.asarray(arm, jnp.int32)
+    if pallas_available() or interpret:
+        return _pl_episode_trace(
+            mu, n, phat, pn, prev, t, arm, *obs, *lanes,
+            block_n=block_n, interpret=interpret or not pallas_available(),
+        )
+    return _ep.xla_episode_trace(mu, n, phat, pn, prev, t, arm, *obs, *lanes)
+
+
+def episode_scan_sim(mu, n, phat, pn, prev, t, arm, env_rows, z, scan_env,
+                     alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, qos_delta=-1.0,
+                     default_arm=None, gamma=1.0, optimistic=1.0,
+                     prior_mu=None, *, t_start: int = 0,
+                     drift_every: int = 0, counter_obs: bool = True,
+                     interpret: bool = False, block_n: int = 1024):
+    """T fused env+controller intervals in one dispatch, sim-fused: the
+    SimBackend env step, counters, observation derivation and drift
+    schedule run inside the scan; ``z`` is the 4-tuple of (T, N) raw
+    normal streams (``SimBackend.episode_noise``), ``env_rows`` /
+    ``scan_env`` come from ``SimBackend.env_rows()`` /
+    ``episode_env()``. Dispatch mirrors :func:`episode_scan_trace`
+    (fallback donates the state; env rows are NOT donated — SimBackend
+    keeps reading its live counter arrays until absorb). Returns
+    ``((mu, n, phat, pn, prev, t, next_arm), env_rows, arms)``."""
+    nn, k = mu.shape
+    p = scan_env.e_tab.shape[0]
+    if p > 1 and drift_every <= 0:
+        raise ValueError("drifting ScanEnv needs drift_every > 0")
+    # the schedule is periodic: fold t_start so chunked runs re-use at
+    # most P*drift_every compiled variants (and stationary runs one)
+    t_start = int(t_start) % (drift_every * p) if p > 1 else 0
+    lanes = _episode_lanes(nn, k, alpha, lam, qos_delta, default_arm, gamma,
+                           optimistic, prior_mu)
+    arm = jnp.asarray(arm, jnp.int32)
+    if pallas_available() or interpret:
+        return _pl_episode_sim(
+            mu, n, phat, pn, prev, t, arm, env_rows, z, scan_env, *lanes,
+            t_start=t_start, drift_every=int(drift_every),
+            counter_obs=bool(counter_obs), block_n=block_n,
+            interpret=interpret or not pallas_available(),
+        )
+    return _ep.xla_episode_sim(
+        mu, n, phat, pn, prev, t, arm, env_rows, z, scan_env, *lanes,
+        t_start=t_start, drift_every=int(drift_every),
+        counter_obs=bool(counter_obs),
     )

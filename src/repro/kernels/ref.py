@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.constants import DEFAULT_ALPHA, DEFAULT_LAM
+from repro.kernels.episode_scan import EnvRows, ScanEnv, phase_rows, sim_env_obs
 
 
 def ref_attention(q, k, v, *, causal=True):
@@ -126,3 +127,71 @@ def ref_fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
         jnp.argmax(sa, axis=1),
     ).astype(jnp.int32)
     return mu2, n2, phat2, pn2, prev2, t2, nxt
+
+
+def ref_episode_scan(mu, n, phat, pn, prev, t, arm, reward, progress, active,
+                     alpha, lam, qos=None, default_arm=None, gamma=None,
+                     optimistic=None, prior_mu=None):
+    """Oracle for kernels.episode_scan's trace-fed mode: a lax.scan of
+    :func:`ref_fleet_step` over the T observation columns. Shares the
+    per-step arithmetic expressions with the single-step oracle (the
+    scan adds no new math), so the megakernel's episode output must be
+    bit-identical to T repeated fused steps. Returns
+    ``((mu, n, phat, pn, prev, t, next_arm), arms)`` with ``arms[t]``
+    the arm held entering interval t."""
+
+    def step(carry, cols):
+        r, p, a = cols
+        out = ref_fleet_step(
+            carry[0], carry[1], carry[2], carry[3], carry[4], carry[5],
+            carry[6], r, p, a, alpha, lam, qos=qos,
+            default_arm=default_arm, gamma=gamma, optimistic=optimistic,
+            prior_mu=prior_mu,
+        )
+        return out, carry[6]
+
+    final, arms = jax.lax.scan(
+        step, (mu, n, phat, pn, prev, t, arm), (reward, progress, active)
+    )
+    return final, arms
+
+
+def ref_episode_scan_sim(mu, n, phat, pn, prev, t, arm,
+                         env_rows: EnvRows, z, scan_env: ScanEnv,
+                         alpha, lam, qos=None, default_arm=None, gamma=None,
+                         optimistic=None, prior_mu=None, *, t_start=0,
+                         drift_every=0, counter_obs=True):
+    """Oracle for kernels.episode_scan's sim-fused mode: per interval,
+    derive the observation with the shared env helper
+    (:func:`~repro.kernels.episode_scan.sim_env_obs` — THE one copy of
+    the scanned env math; its independent cross-check is the
+    live-streaming-vs-scanned parity tests, not this oracle), then apply
+    :func:`ref_fleet_step`. Returns
+    ``((mu, n, phat, pn, prev, t, next_arm), env_rows, arms)``."""
+    z_e, z_uc, z_uu, z_p = z
+    tt = z_e.shape[0]
+
+    def step(carry, xs):
+        state, env = carry
+        idx, ze, zuc, zuu, zp = xs
+        e_row, p_row, uc_row, uu_row, scal_row = phase_rows(
+            scan_env, idx, t_start, drift_every
+        )
+        env2, r, p, a = sim_env_obs(
+            env, state[6], ze, zuc, zuu, zp,
+            e_row, p_row, uc_row, uu_row, scal_row, scan_env.scal[0, 5],
+            counter_obs=counter_obs,
+        )
+        out = ref_fleet_step(
+            state[0], state[1], state[2], state[3], state[4], state[5],
+            state[6], r, p, a, alpha, lam, qos=qos,
+            default_arm=default_arm, gamma=gamma, optimistic=optimistic,
+            prior_mu=prior_mu,
+        )
+        return (out, env2), state[6]
+
+    (final, env2), arms = jax.lax.scan(
+        step, ((mu, n, phat, pn, prev, t, arm), env_rows),
+        (jnp.arange(tt, dtype=jnp.int32), z_e, z_uc, z_uu, z_p),
+    )
+    return final, env2, arms

@@ -27,6 +27,12 @@ warm-up ablation, and ``--drift miniswp --drift-every 100`` makes the
 simulator cycle workload phases (keyed by global interval index, so
 every host stripe switches at the same boundary).
 
+``--episode-scan`` switches the per-interval streaming loop to the
+megakernel episode scan (repro.kernels.episode_scan): each reporting
+window becomes ONE launch with controller state resident across all of
+its intervals, arm-for-arm with the streaming loop (sim and trace
+backends both supported).
+
 Replay a recorded trace shard-per-host instead of the simulator with
 ``--trace trace.npz`` (see repro.energy.record_trace); ``--out arms.npz``
 makes host 0 gather and persist the full (T, N) arm trajectory — the
@@ -101,6 +107,11 @@ def parse_args(argv=None):
     ap.add_argument("--interpret", action="store_true",
                     help="force the fused Pallas kernel in interpret mode "
                          "(parity testing off-TPU)")
+    ap.add_argument("--episode-scan", action="store_true",
+                    help="megakernel episode scan: run each reporting "
+                         "window as ONE launch (kernels/episode_scan) "
+                         "instead of one fleet_step per interval; "
+                         "arm-for-arm with streaming")
     ap.add_argument("--out", default=None,
                     help="host 0 gathers the full (T, N) arm trajectory "
                          "and writes it (npz) here")
@@ -190,7 +201,8 @@ def run_host(args) -> dict:
                       + f", {fleet['switches']} switches", flush=True)
 
         fleet = ctl.run(intervals, report_every=args.report_every,
-                        on_report=on_report)
+                        on_report=on_report,
+                        episode_scan=args.episode_scan)
         if args.out is not None:
             arms = ctl.gather_arms()
             # final controller state rides along so parity tests can
@@ -248,6 +260,8 @@ def spawn_local(args) -> int:
                  str(args.drift_every)]
     if args.interpret:
         base += ["--interpret"]
+    if args.episode_scan:
+        base += ["--episode-scan"]
     if args.jax_distributed:
         base += ["--jax-distributed"]
     if args.out is not None:

@@ -284,11 +284,43 @@ class DistributedFleetController:
             work_fn: Optional[Callable[[], Any]] = None,
             report_every: int = 0,
             on_report: Optional[Callable[[int, Dict[str, Any]], None]] = None,
+            episode_scan: bool = False,
             ) -> Dict[str, Any]:
         """Drive the stripe for ``n_intervals``; every ``report_every``
         intervals (0 = never) gather the fleet aggregate and append it
         to ``self.reports`` (``on_report(interval, fleet_summary)`` fires
-        on every host). Returns the final fleet summary."""
+        on every host). Returns the final fleet summary.
+
+        ``episode_scan=True`` advances the stripe in fused episode-scan
+        chunks (``EnergyController.run_scanned`` — one dispatch per
+        chunk of ``report_every`` intervals, or the whole run when
+        reporting is off) instead of per-interval steps. Striping is
+        unaffected: the scan is host-local (noise is keyed by global
+        node id, the drift schedule by global interval index), and the
+        reporting/arm-log cadence is preserved. ``work_fn`` cannot run
+        inside a fused episode."""
+        if episode_scan:
+            if work_fn is not None:
+                raise ValueError(
+                    "episode_scan fuses whole intervals on-device; "
+                    "per-interval work_fn needs the streaming path"
+                )
+            done = 0
+            while done < n_intervals:
+                chunk = min(report_every or n_intervals, n_intervals - done)
+                self.controller.run_scanned(chunk)
+                if self.log_arms:
+                    self.arm_log.extend(
+                        np.asarray(self.controller.last_episode_arms)
+                        .reshape(chunk, self.n_local)
+                    )
+                done += chunk
+                if report_every and done % report_every == 0:
+                    fleet = self.fleet_summary(tag=f"report-{done}")
+                    self.reports.append(fleet)
+                    if on_report is not None:
+                        on_report(done, fleet)
+            return self.fleet_summary(tag="final")
         for i in range(n_intervals):
             self.step(work_fn)
             if report_every and (i + 1) % report_every == 0:

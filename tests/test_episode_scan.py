@@ -1,0 +1,509 @@
+"""Episode megakernel (kernels.episode_scan) parity suite.
+
+Three independent anchors pin the scanned paths:
+
+- the Pallas megakernel (interpret mode on CPU) vs the pure-jnp
+  ``ref_episode_scan`` oracle, on ragged N / ragged T with mixed
+  stationary / sliding-window / QoS / warm-up lanes — the acceptance
+  criterion for the one-launch-per-episode path;
+- the megakernel vs T repeated fused ``fleet_step`` launches — the
+  scan must be bitwise indistinguishable from the per-interval kernel
+  it replaces;
+- the live ``EnergyController`` streaming loop vs ``run_scanned`` —
+  env counters, RNG/key streams and arm trajectories bit-exact over a
+  ``SimBackend`` (including drift-phase boundaries crossed mid-scan
+  and chunked episodes that resume streaming), and trace replay
+  reproducing a live run arm-for-arm.
+
+All oracles are wrapped in ``jax.jit``: the un-jitted oracle evaluates
+op-by-op while the kernels run fused, and FMA contraction differences
+show up as ulp noise. Same expressions, same compiler, bit-identical.
+"""
+import importlib.util
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    energy_ts,
+    energy_ucb,
+    get_app,
+    make_env_params,
+    run_fleet_episode,
+    run_sweep,
+    sweep_policy_params,
+)
+from repro.energy import EnergyController, SimBackend
+from repro.energy.backend import TraceReplayBackend, record_trace
+from repro.kernels import ops, ref
+from repro.kernels.episode_scan import (
+    EnvRows,
+    env_rows_init,
+    make_scan_env,
+)
+
+
+def _fleet_state(n, k=9, seed=0):
+    key = jax.random.key(seed)
+    f = lambda i: jax.random.fold_in(key, i)
+    return dict(
+        mu=jax.random.normal(f(1), (n, k)) * -1.0,
+        n=jax.random.randint(f(2), (n, k), 1, 40).astype(jnp.float32),
+        phat=jax.random.uniform(f(3), (n, k), minval=1e-4, maxval=2e-4),
+        pn=jax.random.randint(f(4), (n, k), 0, 40).astype(jnp.float32),
+        prev=jax.random.randint(f(5), (n,), 0, k),
+        t=jax.random.randint(f(6), (n,), 1, 200).astype(jnp.float32),
+        arm=jax.random.randint(f(7), (n,), 0, k),
+    )
+
+
+def _mixed_lanes(n, k=9, seed=0):
+    """Per-controller lanes mixing every fused-step variant in one
+    fleet: spread alpha/lam, ~half QoS-constrained (incl. 0.0 budgets),
+    ~half sliding-window (incl. gamma = 0.0), a third on round-robin
+    warm-up, and a nonzero prior."""
+    key = jax.random.key(3000 + seed)
+    f = lambda i: jax.random.fold_in(key, i)
+    qos = jnp.where(jax.random.uniform(f(1), (n,)) < 0.5,
+                    jax.random.uniform(f(2), (n,), maxval=0.15), -1.0)
+    qos = qos.at[: min(4, n)].set(0.0)
+    da = jax.random.randint(f(3), (n,), 0, k)
+    gamma = jnp.where(jax.random.uniform(f(4), (n,)) < 0.5,
+                      jax.random.uniform(f(5), (n,), maxval=0.999), 1.0)
+    gamma = gamma.at[: min(3, n)].set(0.0)
+    optimistic = jnp.where(jnp.arange(n) % 3 == 0, 0.0, 1.0)
+    prior = jax.random.normal(f(6), (n, k)) * 0.1
+    alpha = jax.random.uniform(f(7), (n,), minval=0.05, maxval=0.3)
+    lam = jax.random.uniform(f(8), (n,), minval=0.0, maxval=0.05)
+    return dict(alpha=alpha, lam=lam, qos=qos, da=da, gamma=gamma,
+                optimistic=optimistic, prior=prior)
+
+
+def _obs_cols(tt, n, seed=0):
+    key = jax.random.key(4000 + seed)
+    f = lambda i: jax.random.fold_in(key, i)
+    return (
+        -jax.random.uniform(f(1), (tt, n), minval=0.5, maxval=1.5),
+        jax.random.uniform(f(2), (tt, n), minval=1e-4, maxval=2e-4),
+        (jax.random.uniform(f(3), (tt, n)) < 0.85).astype(jnp.float32),
+    )
+
+
+def _assert_state_equal(got, want, names, msg):
+    for nm, g, w in zip(names, got, want):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w), err_msg=f"{msg} {nm}")
+
+
+_STATE7 = ("mu", "n", "phat", "pn", "prev", "t", "next_arm")
+
+
+# ragged N (below one stripe / exactly one / pad-and-slice) x ragged T
+@pytest.mark.parametrize("n,tt", [(7, 13), (1024, 6), (2049, 9)])
+def test_trace_megakernel_matches_ref(n, tt):
+    """Pallas trace-fed episode scan (interpret mode) is bit-exact vs
+    the jitted lax.scan oracle on mixed lanes — the acceptance test."""
+    s = _fleet_state(n, seed=n + tt)
+    la = _mixed_lanes(n, seed=n)
+    reward, progress, active = _obs_cols(tt, n, seed=n)
+    got, arms = ops.episode_scan_trace(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        reward, progress, active, la["alpha"], la["lam"], la["qos"],
+        la["da"], la["gamma"], la["optimistic"], la["prior"],
+        interpret=True, block_n=1024,
+    )
+    want, warms = jax.jit(ref.ref_episode_scan)(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        reward, progress, active, la["alpha"], la["lam"], qos=la["qos"],
+        default_arm=la["da"], gamma=la["gamma"],
+        optimistic=la["optimistic"], prior_mu=la["prior"],
+    )
+    _assert_state_equal(got, want, _STATE7, f"trace scan n={n} T={tt}")
+    np.testing.assert_array_equal(np.asarray(arms), np.asarray(warms))
+    assert np.array_equal(np.asarray(arms[0]), np.asarray(s["arm"]))
+
+
+@pytest.mark.parametrize("n,tt", [(7, 13), (1024, 6), (2049, 9)])
+def test_trace_megakernel_matches_repeated_fleet_step(n, tt):
+    """One scanned launch == T repeated fused ``fleet_step`` launches,
+    bit for bit (the per-interval kernel the megakernel replaces)."""
+    s = _fleet_state(n, seed=n + tt)
+    la = _mixed_lanes(n, seed=n)
+    reward, progress, active = _obs_cols(tt, n, seed=n)
+    got, arms = ops.episode_scan_trace(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        reward, progress, active, la["alpha"], la["lam"], la["qos"],
+        la["da"], la["gamma"], la["optimistic"], la["prior"],
+        interpret=True,
+    )
+    state = (s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"],
+             s["arm"])
+    arms_run = []
+    for i in range(tt):
+        arms_run.append(state[6])  # the arm held ENTERING interval i
+        state = ops.fleet_step(
+            *state, reward[i], progress[i], active[i], la["alpha"],
+            la["lam"], la["qos"], la["da"], la["gamma"], la["optimistic"],
+            la["prior"], interpret=True,
+        )
+    _assert_state_equal(got, state, _STATE7,
+                        f"scan vs repeated step n={n} T={tt}")
+    np.testing.assert_array_equal(
+        np.asarray(arms), np.stack([np.asarray(a) for a in arms_run]))
+
+
+def _sim_inputs(n, tt, phases, seed=0):
+    """Random-but-plausible env rows (some nodes finished, some fresh)
+    plus (T, N) noise streams and the stacked phase tables."""
+    key = jax.random.key(5000 + seed)
+    f = lambda i: jax.random.fold_in(key, i)
+    rem = jax.random.uniform(f(1), (n,), minval=0.0, maxval=1.0)
+    rem = rem.at[:: max(n // 7, 1)].set(0.0)  # finished (frozen) nodes
+    env = EnvRows(
+        remaining=rem,
+        prev_arm=jax.random.randint(f(2), (n,), 0, 9),
+        t=jax.random.randint(f(3), (n,), 0, 300),
+        energy_kj=jax.random.uniform(f(4), (n,), maxval=5.0),
+        time_s=jax.random.uniform(f(5), (n,), maxval=30.0),
+        switches=jax.random.randint(f(6), (n,), 0, 40),
+        core_s=jax.random.uniform(f(7), (n,), maxval=20.0),
+        uncore_s=jax.random.uniform(f(8), (n,), maxval=20.0),
+    )
+    z = tuple(jax.random.normal(f(10 + i), (tt, n)) for i in range(4))
+    return env, z, make_scan_env(phases)
+
+
+@pytest.mark.parametrize("counter_obs", [True, False])
+@pytest.mark.parametrize(
+    "n,tt,t_start", [(193, 33, 5), (2049, 9, 11)],
+)
+def test_sim_megakernel_matches_ref(n, tt, t_start, counter_obs):
+    """Pallas sim-fused episode scan (interpret mode) is bit-exact vs
+    the jitted oracle with drift-phase boundaries crossed MID-SCAN
+    (P=3 phases, drift_every=7, episode starting mid-phase), in both
+    observation conventions (controller counter-deltas and the rollout
+    engine's direct obs)."""
+    phases = [make_env_params(get_app(a))
+              for a in ("tealeaf", "lbm", "clvleaf")]
+    s = _fleet_state(n, seed=n)
+    la = _mixed_lanes(n, seed=n + 1)
+    env, z, senv = _sim_inputs(n, tt, phases, seed=n)
+    got, genv, arms = ops.episode_scan_sim(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        env, z, senv, la["alpha"], la["lam"], la["qos"], la["da"],
+        la["gamma"], la["optimistic"], la["prior"],
+        t_start=t_start, drift_every=7, counter_obs=counter_obs,
+        interpret=True,
+    )
+    rfn = jax.jit(ref.ref_episode_scan_sim,
+                  static_argnames=("t_start", "drift_every", "counter_obs"))
+    want, wenv, warms = rfn(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        env, z, senv, la["alpha"], la["lam"], qos=la["qos"],
+        default_arm=la["da"], gamma=la["gamma"],
+        optimistic=la["optimistic"], prior_mu=la["prior"],
+        # ops folds t_start modulo the P * drift_every schedule period
+        t_start=t_start % (7 * len(phases)), drift_every=7,
+        counter_obs=counter_obs,
+    )
+    msg = f"sim scan n={n} T={tt} counter_obs={counter_obs}"
+    _assert_state_equal(got, want, _STATE7, msg)
+    _assert_state_equal(genv, wenv, EnvRows._fields, msg + " env")
+    np.testing.assert_array_equal(np.asarray(arms), np.asarray(warms))
+
+
+def test_xla_fallback_matches_ref():
+    """The interpret=False CPU route (the XLA lax.scan fallback that
+    production hits on this container) is bit-exact vs the jitted
+    oracle in both modes. The fallback DONATES the scanned state, so
+    oracle results are computed first and inputs rebuilt."""
+    n, tt = 161, 21
+    phases = [make_env_params(get_app(a)) for a in ("tealeaf", "lbm")]
+    la = _mixed_lanes(n, seed=7)
+    reward, progress, active = _obs_cols(tt, n, seed=7)
+    env, z, senv = _sim_inputs(n, tt, phases, seed=7)
+
+    s = _fleet_state(n, seed=7)
+    want, warms = jax.jit(ref.ref_episode_scan)(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        reward, progress, active, la["alpha"], la["lam"], qos=la["qos"],
+        default_arm=la["da"], gamma=la["gamma"],
+        optimistic=la["optimistic"], prior_mu=la["prior"],
+    )
+    s = _fleet_state(n, seed=7)  # fresh buffers: the fallback donates
+    got, arms = ops.episode_scan_trace(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        reward, progress, active, la["alpha"], la["lam"], la["qos"],
+        la["da"], la["gamma"], la["optimistic"], la["prior"],
+    )
+    _assert_state_equal(got, want, _STATE7, "xla trace fallback")
+    np.testing.assert_array_equal(np.asarray(arms), np.asarray(warms))
+
+    s = _fleet_state(n, seed=7)
+    rfn = jax.jit(ref.ref_episode_scan_sim,
+                  static_argnames=("t_start", "drift_every", "counter_obs"))
+    want, wenv, warms = rfn(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        env, z, senv, la["alpha"], la["lam"], qos=la["qos"],
+        default_arm=la["da"], gamma=la["gamma"],
+        optimistic=la["optimistic"], prior_mu=la["prior"],
+        t_start=3, drift_every=4, counter_obs=True,
+    )
+    s = _fleet_state(n, seed=7)
+    got, genv, arms = ops.episode_scan_sim(
+        s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"], s["arm"],
+        env, z, senv, la["alpha"], la["lam"], la["qos"], la["da"],
+        la["gamma"], la["optimistic"], la["prior"],
+        t_start=3, drift_every=4, counter_obs=True,
+    )
+    _assert_state_equal(got, want, _STATE7, "xla sim fallback")
+    _assert_state_equal(genv, wenv, EnvRows._fields, "xla sim fallback env")
+    np.testing.assert_array_equal(np.asarray(arms), np.asarray(warms))
+
+
+# ---------------------------------------------------------------------------
+# live controller: streaming vs scanned
+# ---------------------------------------------------------------------------
+
+
+def _mk_pair(n=48, seed=3, drifting=False):
+    pa = make_env_params(get_app("tealeaf"))
+    kw = {}
+    if drifting:
+        kw = dict(drift_params=[make_env_params(get_app("lbm"))],
+                  drift_every=4)
+    pol = energy_ucb(qos_delta=0.08, window_discount=0.97)
+    mk = lambda: EnergyController(
+        pol, SimBackend(pa, n=n, seed=9, **kw), seed=2,
+        record_history=False)
+    return mk(), mk()
+
+
+def _counters_equal(a, b, msg):
+    for la, lb, nm in zip(a, b, type(a)._fields):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=f"{msg} counter {nm}")
+
+
+@pytest.mark.parametrize("drifting", [False, True])
+def test_run_scanned_matches_streaming(drifting):
+    """One scanned episode == the streamed loop over a live SimBackend:
+    arms in lockstep, env counters and RNG key streams bit-exact, and
+    streaming resumes seamlessly after the scan (the drifting case
+    crosses phase boundaries mid-scan AND resumes mid-phase)."""
+    tt = 11
+    live, scan = _mk_pair(drifting=drifting)
+    arms_live = []
+    for _ in range(tt):
+        live.step()
+        arms_live.append(np.asarray(live.last_arms))
+    scan.run_scanned(tt)
+    np.testing.assert_array_equal(
+        np.stack(arms_live), np.asarray(scan.last_episode_arms),
+        err_msg="scanned arm trace diverged from streaming")
+    _counters_equal(live._last, scan._last, "post-episode")
+    np.testing.assert_array_equal(
+        jax.random.key_data(live._key), jax.random.key_data(scan._key),
+        err_msg="controller key stream diverged")
+    assert live.backend.interval_index == scan.backend.interval_index
+    # controller means agree to float round-off (streaming derives obs
+    # eagerly, the scan fuses the same expressions: FMA ulps only) and
+    # the integer/count state is bit-exact
+    for nm in ("n", "pn", "prev", "t"):
+        np.testing.assert_array_equal(
+            np.asarray(live.states[nm]), np.asarray(scan.states[nm]),
+            err_msg=f"states[{nm}]")
+    for nm in ("mu", "phat"):
+        np.testing.assert_allclose(
+            np.asarray(live.states[nm]), np.asarray(scan.states[nm]),
+            rtol=1e-5, atol=1e-6, err_msg=f"states[{nm}]")
+    # resume both STREAMING: identical arms for 5 more intervals
+    for i in range(5):
+        live.step()
+        scan.step()
+        np.testing.assert_array_equal(
+            np.asarray(live.last_arms), np.asarray(scan.last_arms),
+            err_msg=f"post-episode streaming step {i} diverged")
+
+
+def test_run_scanned_chunks_compose():
+    """Two scanned chunks (7 then 10, phase boundaries mid-chunk) land
+    exactly where one 17-interval scan does — t_start threading and
+    ``absorb_episode`` keep the schedule and counters seamless."""
+    one, two = _mk_pair(drifting=True)
+    one.run_scanned(17)
+    two.run_scanned(7)
+    two.run_scanned(10)
+    _counters_equal(one._last, two._last, "chunked episode")
+    np.testing.assert_array_equal(
+        jax.random.key_data(one._key), jax.random.key_data(two._key))
+    np.testing.assert_array_equal(np.asarray(one._arms),
+                                  np.asarray(two._arms))
+    for nm in ("n", "pn", "prev", "t"):
+        np.testing.assert_array_equal(
+            np.asarray(one.states[nm]), np.asarray(two.states[nm]),
+            err_msg=f"chunked states[{nm}]")
+
+
+def test_trace_replay_scan_matches_live():
+    """Record a live streamed run, replay it as ONE scanned episode:
+    the replayed controller requests the same arm at every interval."""
+    tt, n = 9, 32
+    live, _ = _mk_pair(n=n)
+    arms_live = []
+    for _ in range(tt):
+        live.step()
+        arms_live.append(np.asarray(live.last_arms))
+    pa = make_env_params(get_app("tealeaf"))
+    trace = record_trace(SimBackend(pa, n=n, seed=9), np.stack(arms_live))
+    assert isinstance(trace, TraceReplayBackend) and len(trace) == tt
+    pol = energy_ucb(qos_delta=0.08, window_discount=0.97)
+    rep = EnergyController(pol, trace, seed=2, record_history=False)
+    rep.run_scanned(tt)
+    np.testing.assert_array_equal(
+        np.stack(trace.requested_arms[-tt:]), np.stack(arms_live),
+        err_msg="trace replay diverged from the live run arm-for-arm")
+    with pytest.raises(RuntimeError, match="intervals left"):
+        rep.run_scanned(1)  # trace exhausted
+
+
+# ---------------------------------------------------------------------------
+# engine lanes (run_sweep / run_fleet_episode) + error paths
+# ---------------------------------------------------------------------------
+
+
+def test_run_sweep_episode_scan_matches_legacy():
+    """The one-launch sweep lane reproduces the per-step engine on all
+    output keys (mixed QoS/sliding-window configs)."""
+    params = make_env_params(get_app("tealeaf"))
+    stacked = sweep_policy_params([0.1, 0.2], [0.0, 0.02],
+                                  qos_delta=0.1, window_discount=0.98)
+    key = jax.random.key(5)
+    legacy = run_sweep(energy_ucb(), stacked, params, key, n_repeats=2,
+                       max_steps=40)
+    scanned = run_sweep(energy_ucb(), stacked, params, key, n_repeats=2,
+                        max_steps=40, episode_scan=True)
+    assert set(legacy) == set(scanned)
+    for k in ("switches", "steps", "completed"):
+        np.testing.assert_array_equal(legacy[k], scanned[k],
+                                      err_msg=f"sweep {k}")
+    for k in ("energy_kj", "time_s", "cum_regret"):
+        np.testing.assert_allclose(legacy[k], scanned[k], rtol=1e-5,
+                                   atol=1e-5, err_msg=f"sweep {k}")
+
+
+def test_run_fleet_episode_scan_matches_legacy():
+    params = make_env_params(get_app("tealeaf"))
+    key = jax.random.key(6)
+    legacy = run_fleet_episode(energy_ucb(), params, key, n_nodes=6,
+                               max_steps=50)
+    scanned = run_fleet_episode(energy_ucb(), params, key, n_nodes=6,
+                                max_steps=50, episode_scan=True)
+    np.testing.assert_array_equal(np.asarray(legacy["switches"]),
+                                  np.asarray(scanned["switches"]))
+    for k in ("energy_kj", "gang_time_s"):
+        np.testing.assert_allclose(np.asarray(legacy[k]),
+                                   np.asarray(scanned[k]),
+                                   rtol=1e-5, atol=1e-5, err_msg=k)
+
+
+def test_episode_scan_error_paths():
+    params = make_env_params(get_app("tealeaf"))
+    stacked = sweep_policy_params([0.1], [0.0])
+    key = jax.random.key(0)
+    with pytest.raises(ValueError, match="not kernel-exact"):
+        run_sweep(energy_ts(), stacked, params, key, episode_scan=True)
+    with pytest.raises(NotImplementedError, match="reward_fn"):
+        run_sweep(energy_ucb(), stacked, params, key,
+                  reward_fn=lambda obs: obs.reward, episode_scan=True)
+    with pytest.raises(NotImplementedError, match="coordinated"):
+        run_fleet_episode(energy_ucb(), params, key, n_nodes=4,
+                          max_steps=10, coordinated=True,
+                          episode_scan=True)
+    # drifting phase tables demand an explicit schedule period
+    pb = make_env_params(get_app("lbm"))
+    senv = make_scan_env([params, pb])
+    s = _fleet_state(4)
+    env, z, _ = _sim_inputs(4, 3, [params], seed=1)
+    with pytest.raises(ValueError, match="drift_every"):
+        ops.episode_scan_sim(
+            s["mu"], s["n"], s["phat"], s["pn"], s["prev"], s["t"],
+            s["arm"], env, z, senv)
+    # per-node stacked EnvParams keep the streaming path
+    stacked_env = jax.tree.map(lambda a, b: jnp.stack([a, b]), params, pb)
+    with pytest.raises(ValueError, match="stacked"):
+        make_scan_env([stacked_env])
+    # non-kernel-exact policies can't enter the controller's scan lane
+    ctl = EnergyController(energy_ts(), SimBackend(params, n=4),
+                           record_history=False)
+    with pytest.raises(ValueError, match="fused-UCB"):
+        ctl.run_scanned(3)
+    # a reward-scale override would silently diverge from streaming
+    ctl = EnergyController(energy_ucb(), SimBackend(params, n=4),
+                           reward_scale=2.0, record_history=False)
+    with pytest.raises(ValueError, match="reward_scale"):
+        ctl.run_scanned(3)
+
+
+# ---------------------------------------------------------------------------
+# bench regression guard (scripts/bench_check.py)
+# ---------------------------------------------------------------------------
+
+
+def _bench_check():
+    path = pathlib.Path(__file__).resolve().parents[1] / "scripts" / \
+        "bench_check.py"
+    spec = importlib.util.spec_from_file_location("bench_check", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _rows_json(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps({"rows": rows}))
+    return str(p)
+
+
+def test_bench_check_guard(tmp_path):
+    bc = _bench_check()
+    base = [
+        {"name": "a", "us_per_call": 100.0},
+        {"name": "b", "us_per_call": 50.0},
+        {"name": "c", "us_per_call": 10.0},
+        {"name": "old_only", "us_per_call": 1.0},
+        {"name": "emu", "us_per_call": 5.0,
+         "derived": "interpret mode on CPU"},
+    ]
+    bp = _rows_json(tmp_path, "base.json", base)
+    ok = [
+        {"name": "a", "us_per_call": 110.0},
+        {"name": "b", "us_per_call": 45.0},
+        {"name": "c", "us_per_call": 12.0},
+        {"name": "new_only", "us_per_call": 2.0},
+        # interpret rows may swing arbitrarily without tripping the guard
+        {"name": "emu", "us_per_call": 500.0,
+         "derived": "interpret mode on CPU"},
+    ]
+    assert bc.main([_rows_json(tmp_path, "ok.json", ok),
+                    "--baseline", bp]) == 0
+    bad = [
+        {"name": "a", "us_per_call": 100.0},
+        {"name": "b", "us_per_call": 50.0},
+        {"name": "c", "us_per_call": 45.0},  # 4.5x on one row
+    ]
+    assert bc.main([_rows_json(tmp_path, "bad.json", bad),
+                    "--baseline", bp]) == 1
+    # a uniformly slower machine is NOT a regression (median rescale)
+    slow = [{"name": r["name"], "us_per_call": r["us_per_call"] * 3}
+            for r in base if "derived" not in r]
+    assert bc.main([_rows_json(tmp_path, "slow.json", slow),
+                    "--baseline", bp]) == 0
+    broken = [{"name": "a", "us_per_call": "120 us"}]
+    with pytest.raises(SystemExit, match="non-numeric"):
+        bc.main([_rows_json(tmp_path, "broken.json", broken),
+                 "--baseline", bp])
