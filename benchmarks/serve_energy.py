@@ -1,0 +1,175 @@
+"""End-to-end serving-energy benchmark: joules-per-served-token vs
+p99-latency SLO violation rate on a bursty diurnal trace.
+
+The paper's headline claim transplanted to the serving setting
+(ISSUE 7 acceptance criteria), six configs over the same seeded
+traffic (`bursty_diurnal_traffic`) against the roofline-parameterized
+`ServingBackend`:
+
+- ``fmax`` / ``lowest``: static ladder endpoints. f_max is the QoS
+  reference (meets the SLO with headroom, pays peak power); the lowest
+  frequency saturates prefill during peak bursts and blows the p99.
+- ``ucb``: one shared unconstrained EnergyUCB lane per node — lowest
+  joules/token, but free to violate the SLO.
+- ``ucb_qos``: shared lane with the slowdown budget (QoS feasible set)
+  — SLO-compliant, but one arm must serve both phases.
+- ``phase``: per-phase lanes (prefill row / decode row per node),
+  both unconstrained.
+- ``phase_qos``: the physics-informed config from
+  ``repro.core.phase_policy`` — compute-bound prefill keeps the tight
+  slowdown budget, bandwidth-bound decode (whose step time is flat in
+  frequency) runs unconstrained. Beats the shared QoS config on
+  joules/token at equal SLO compliance: the decode lane's savings are
+  latency-free.
+
+Timing rows (numeric ``us_per_call`` = wall microseconds per decision
+interval, end to end through the streaming controller + discrete-event
+serve loop) feed ``scripts/bench_check.py`` in the CI bench-smoke
+lane; the energy/QoS claims land in the JSON payload under ``serve``
+and are asserted by tests/test_workload.py at smaller scale.
+
+CLI (the CI benchmark-smoke job runs --quick and uploads the JSON):
+
+  PYTHONPATH=src:. python benchmarks/serve_energy.py \\
+      [--quick] [--json BENCH_serve_energy.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+
+import jax
+
+from repro.core import energy_ucb, make_policy_params, phase_policy, static_policy
+from repro.core.calibration import FREQS_GHZ
+from repro.energy import EnergyController
+from repro.kernels import ops
+from repro.workload import ServingBackend, bursty_diurnal_traffic
+
+K = len(FREQS_GHZ)
+MODEL = "qwen2.5-3b"
+QOS_DELTA = 0.01  # slowdown budget of the constrained configs
+VIOL_BUDGET = 0.05  # acceptance bar on the post-warmup violation rate
+
+
+def configs(n_nodes: int):
+    """name -> (policy, phase_split)."""
+    return {
+        "fmax": (static_policy(K - 1), False),
+        "lowest": (static_policy(0), False),
+        "ucb": (energy_ucb(), False),
+        "ucb_qos": (energy_ucb(qos_delta=QOS_DELTA), False),
+        "phase": (energy_ucb(), True),
+        "phase_qos": (
+            phase_policy(
+                n_nodes,
+                prefill=make_policy_params(qos_delta=QOS_DELTA),
+                decode=make_policy_params(qos_delta=None),
+            ),
+            True,
+        ),
+    }
+
+
+def run_config(name, policy, phase_split, *, n_nodes, t_intervals, warmup):
+    traf = bursty_diurnal_traffic()
+    be = ServingBackend(traf, MODEL, n_nodes=n_nodes, phase_split=phase_split)
+    ctl = EnergyController(policy, be, use_kernel=False, record_history=False)
+    t0 = time.perf_counter()
+    ctl.run(t_intervals)
+    wall = time.perf_counter() - t0
+    c = be.read_counters()
+    energy = float(c.energy_j.sum())
+    tok = be.served_tokens
+    rep = be.slo_report(warmup_s=warmup * traf.interval_s)
+    return {
+        "name": name,
+        "j_per_token": round(energy / max(tok, 1), 4),
+        "energy_j": round(energy, 1),
+        "served_tokens": int(tok),
+        "violation_rate": round(rep["violation_rate"], 4),
+        "p99_s": round(rep["p99_s"], 4),
+        "slo_s": round(rep["slo_s"], 4),
+        "completed": rep["completed"],
+        "us_per_interval": wall / t_intervals * 1e6,
+    }
+
+
+def run(out_json=None, quick: bool = False):
+    if quick:
+        n_nodes, t_intervals, warmup = 1, 240, 80
+    else:
+        n_nodes, t_intervals, warmup = 2, 800, 200
+
+    results = {}
+    rows = []
+    for name, (pol, split) in configs(n_nodes).items():
+        r = run_config(name, pol, split, n_nodes=n_nodes,
+                       t_intervals=t_intervals, warmup=warmup)
+        results[name] = r
+        rows.append({
+            "name": f"serve_interval_{name}",
+            "us_per_call": round(r["us_per_interval"], 2),
+            "derived": (f"{r['j_per_token']} J/tok, "
+                        f"viol {r['violation_rate']}, "
+                        f"p99 {r['p99_s']}s (slo {r['slo_s']}s)"),
+        })
+        print(f"{name:10s} J/tok={r['j_per_token']:.4f} "
+              f"viol={r['violation_rate']:.3f} p99={r['p99_s']:.3f}s "
+              f"({r['us_per_interval']:.0f} us/interval)")
+
+    # the four acceptance-criteria booleans, recomputed on every run
+    claims = {
+        "ucb_saves_vs_fmax":
+            results["ucb"]["j_per_token"] < results["fmax"]["j_per_token"],
+        "qos_compliant":
+            results["ucb_qos"]["violation_rate"] <= VIOL_BUDGET,
+        "fmax_compliant_lowest_not":
+            results["fmax"]["violation_rate"] <= VIOL_BUDGET
+            < results["lowest"]["violation_rate"],
+        "phase_beats_shared_at_compliance":
+            results["phase_qos"]["j_per_token"]
+            < results["ucb_qos"]["j_per_token"]
+            and results["phase_qos"]["violation_rate"] <= VIOL_BUDGET,
+    }
+    for k, v in claims.items():
+        print(f"claim {k}: {'PASS' if v else 'FAIL'}")
+
+    if out_json is not None:
+        payload = {
+            "benchmark": "serve_energy",
+            "mode": "quick" if quick else "full",
+            "model": MODEL,
+            "n_nodes": n_nodes,
+            "t_intervals": t_intervals,
+            "qos_delta": QOS_DELTA,
+            "backend": jax.default_backend(),
+            "pallas": ops.pallas_available(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "serve": results,
+            "claims": claims,
+            "rows": rows,
+        }
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {len(rows)} rows -> {out_json}")
+    return results, claims
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (1 node, 240 intervals)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + claims + env metadata as JSON")
+    args = ap.parse_args(argv)
+    _, claims = run(out_json=args.json, quick=args.quick)
+    return 0 if all(claims.values()) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

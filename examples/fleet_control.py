@@ -17,6 +17,19 @@ fork all H hosts locally in one command:
 
   PYTHONPATH=src python -m repro.launch.fleet_serve --spawn \\
       --num-hosts 2 --nodes 64 --intervals 100 --report-every 25
+
+``--workload serve`` swaps the calibrated simulator for the
+request-driven serving workload (repro.workload): every node runs the
+continuous-batching serve loop against its own seeded bursty-diurnal
+traffic stream, QoS becomes a p99-latency SLO against the f_max
+reference, and ``--phase-split`` gives each node separate prefill and
+decode controller lanes (compute-bound prefill keeps the ``--qos``
+slowdown budget; bandwidth-bound decode downclocks unconstrained —
+the per-phase sweet spots). Same fused fleet step, same striping:
+
+  PYTHONPATH=src python -m repro.launch.fleet_serve --spawn \\
+      --num-hosts 2 --nodes 8 --intervals 200 --workload serve \\
+      --phase-split --qos 0.01 --report-every 50
 """
 import time
 

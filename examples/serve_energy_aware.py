@@ -1,46 +1,39 @@
-"""Batched serving with a QoS-constrained EnergyUCB controller.
+"""Energy-aware serving, two layers deep.
 
-Serving (decode) is memory-bound on the roofline, so downclocking saves
-real energy at bounded latency cost — the framework analogue of the
-paper's memory-bound HPC apps. The engine runs real jitted prefill/
-decode steps for a reduced starcoder2; the per-step energy model uses
-the decode_32k cell's dry-run roofline terms.
+Part 1 — the real jitted engine: batched prefill + greedy decode for a
+reduced starcoder2 under a QoS-constrained EnergyUCB controller (each
+prefill/decode call is one decision interval), reading the upgraded
+``ServeEngine.stats`` telemetry (decode tokens, per-wave wall time,
+queue depth).
+
+Part 2 — the workload path (``repro.workload``): a bursty diurnal
+request trace drives the roofline-parameterized ``ServingBackend``
+with phase-conditioned control — compute-bound prefill keeps a tight
+p99 slowdown budget while bandwidth-bound decode downclocks freely
+(``phase_policy``) — and reports joules-per-served-token against the
+f_max baseline plus the p99-latency SLO violation rate. This is the
+small-scale version of ``benchmarks/serve_energy.py``.
 
   PYTHONPATH=src python examples/serve_energy_aware.py
 """
-import json
-import os
-
 import jax
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.policies import energy_ucb
+from repro.core.policies import energy_ucb, make_policy_params, phase_policy
 from repro.energy import EnergyController, StepEnergyModel, make_backend
 from repro.models import build_model
 from repro.serve.engine import Request, ServeEngine
+from repro.workload import ServingBackend, bursty_diurnal_traffic
 
 
-def cell_terms():
-    path = "results/dryrun/starcoder2-15b__decode_32k__pod.json"
-    if os.path.exists(path):
-        from benchmarks.roofline_table import cell_row
-
-        r = cell_row("results/dryrun", "starcoder2-15b", "decode_32k")
-        if r:
-            return r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
-    return 2e-4, 5e-3, 2e-3  # fallback: memory/collective-bound decode
-
-
-def main():
+def engine_demo():
     cfg = get_reduced("starcoder2-15b")
     bundle = build_model(cfg)
     params = bundle.init(jax.random.key(0))
-
-    tc, tm, tcoll = cell_terms()
-    # decision interval = 64 decode steps (~one token micro-batch wave)
-    model = StepEnergyModel(t_compute_s=64 * tc, t_memory_s=64 * tm,
-                            t_collective_s=64 * tcoll, steps_total=400)
+    # decision interval = one engine step; memory/collective-bound decode
+    model = StepEnergyModel(t_compute_s=2e-4 * 64, t_memory_s=5e-3 * 64,
+                            t_collective_s=2e-3 * 64, steps_total=400)
     controller = EnergyController(energy_ucb(qos_delta=0.10),
                                   make_backend(model))
     engine = ServeEngine(bundle, params, n_slots=4, max_len=96,
@@ -53,15 +46,41 @@ def main():
         for i in range(12)
     ]
     done = engine.generate(reqs)
-    print(f"served {len(done)} requests, "
-          f"{sum(len(r.out) for r in done)} tokens, stats={engine.stats}")
+    st = engine.stats
+    print(f"served {len(done)} requests: {st['decode_tokens']} decode tokens "
+          f"over {st['decode_steps']} steps, "
+          f"{st['wave_time_s']:.2f} s of wave time "
+          f"(last wave {st['last_wave_s']:.2f} s)")
     s = controller.summary()
-    print("\nenergy telemetry (QoS delta=10%):")
-    print(f"  energy: {s['energy_j']:.1f} J vs f_max baseline {s['baseline_energy_j']:.1f} J "
-          f"=> saved {s['saved_energy_pct']:.1f}%")
-    print(f"  slowdown: {s['slowdown_pct']:.2f}%  switches: {s['switches']}")
-    arms = [h["freq_ghz"] for h in controller.history]
-    print(f"  frequency trajectory: start {arms[:5]} ... settled at {arms[-1]:.1f} GHz")
+    print(f"  energy {s['energy_j']:.1f} J vs f_max {s['baseline_energy_j']:.1f} J "
+          f"=> saved {s['saved_energy_pct']:.1f}%  "
+          f"slowdown {s['slowdown_pct']:.2f}%  switches {s['switches']}")
+
+
+def workload_demo(t_intervals: int = 300):
+    traf = bursty_diurnal_traffic()
+    be = ServingBackend(traf, "qwen2.5-3b", n_nodes=1, phase_split=True)
+    pol = phase_policy(1, prefill=make_policy_params(qos_delta=0.01),
+                       decode=make_policy_params(qos_delta=None))
+    ctl = EnergyController(pol, be, use_kernel=False)
+    ctl.run(t_intervals)
+    c = be.read_counters()
+    energy = float(c.energy_j.sum())
+    rep = be.slo_report(warmup_s=60 * traf.interval_s)
+    base = float(np.sum(be.baseline_interval())) * t_intervals
+    print(f"served {rep['completed']} requests / {be.served_tokens} tokens "
+          f"over {t_intervals} intervals")
+    print(f"  {energy / max(be.served_tokens, 1):.3f} J/token "
+          f"({energy:.0f} J vs ~{base:.0f} J at f_max)")
+    print(f"  p99 {rep['p99_s']:.3f} s vs SLO {rep['slo_s']:.3f} s "
+          f"=> violation rate {rep['violation_rate']:.3f}")
+
+
+def main():
+    print("== engine demo: real jitted prefill/decode under EnergyUCB ==")
+    engine_demo()
+    print("\n== workload demo: bursty diurnal traffic, phase-split lanes ==")
+    workload_demo()
 
 
 if __name__ == "__main__":

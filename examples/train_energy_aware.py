@@ -66,7 +66,7 @@ def main():
         bundle, shape,
         tcfg=TrainerConfig(total_steps=args.steps, ckpt_every=50,
                            ckpt_dir=args.ckpt, log_every=25),
-        energy_runtime=controller,
+        controller=controller,
     )
     res = trainer.run()
     print("\nstep   loss     grad_norm")

@@ -15,7 +15,9 @@ from repro.core.policies import (
     energy_ts,
     energy_ucb,
     eps_greedy,
+    interleave_policy_params,
     make_policy_params,
+    phase_policy,
     rr_freq,
     stack_policy_params,
     static_policy,
@@ -56,7 +58,8 @@ __all__ = [
     "DEFAULT_ARM", "FREQS_GHZ", "TABLE1_KJ", "AppModel", "app_names", "get_app",
     "Policy", "PolicyFns", "PolicyParams", "UCB_FNS",
     "energy_ucb", "energy_ts", "eps_greedy", "rr_freq", "static_policy",
-    "make_policy_params", "stack_policy_params", "sweep_policy_params",
+    "interleave_policy_params", "make_policy_params", "phase_policy",
+    "stack_policy_params", "sweep_policy_params",
     "drlcap", "rl_power", "make_reward_fn", "REWARD_VARIANTS",
     "RolloutSpec", "run_episode", "run_repeats", "run_sweep",
     "run_fleet_episode", "run_drlcap_protocol", "run_drlcap_cross",

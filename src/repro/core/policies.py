@@ -166,6 +166,47 @@ def sweep_policy_params(alphas, lams, **common) -> PolicyParams:
     )
 
 
+def interleave_policy_params(
+    prefill: PolicyParams, decode: PolicyParams, n_pairs: int
+) -> PolicyParams:
+    """Per-phase hyperparameters on the lane layout of a phase-split
+    serving fleet: lane ``2m`` carries the prefill config and lane
+    ``2m + 1`` the decode config of node ``m``, for ``n_pairs`` nodes —
+    a (2*n_pairs,)-lane PolicyParams ((2*n_pairs, K) for prior_mu) that
+    rides the existing hyperparams-as-data machinery, so mixed
+    per-phase alpha/lambda/qos_delta fleets still dispatch through the
+    one fused ``fleet_step`` and slice cleanly under
+    ``slice_policy_lanes`` (even-aligned slices, matching
+    ``ServingBackend.local_slice``)."""
+
+    def leaf(a, b):
+        pair = jnp.stack([jnp.asarray(a), jnp.asarray(b)])  # (2, ...)
+        return jnp.tile(pair, (n_pairs,) + (1,) * (pair.ndim - 1))
+
+    return jax.tree.map(leaf, prefill, decode)
+
+
+def phase_policy(
+    n_pairs: int,
+    prefill: Optional[PolicyParams] = None,
+    decode: Optional[PolicyParams] = None,
+    name: Optional[str] = None,
+) -> Policy:
+    """EnergyUCB with independent prefill/decode hyperparameter lanes
+    for a ``phase_split=True`` :class:`~repro.workload.serving_backend
+    .ServingBackend` of ``n_pairs`` nodes. Defaults both phases to the
+    stock config; pass e.g. ``decode=make_policy_params(qos_delta=None)``
+    to leave the bandwidth-bound phase unconstrained while the
+    compute-bound prefill lane keeps a tight slowdown budget."""
+    pp = prefill if prefill is not None else make_policy_params()
+    dp = decode if decode is not None else make_policy_params()
+    return Policy(
+        name or "EnergyUCB-phase",
+        UCB_FNS,
+        interleave_policy_params(pp, dp, n_pairs),
+    )
+
+
 def ucb_init(params: PolicyParams, key) -> PyTree:
     del key
     k = params.prior_mu.shape[-1]

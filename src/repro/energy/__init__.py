@@ -17,10 +17,6 @@ Which backend to use where:
 - :class:`TraceReplayBackend` — replays recorded counter logs
   (:func:`record_trace`, ``save``/``load``). Use for offline policy
   evaluation and controller regression tests.
-
-:class:`EnergyAwareRuntime` is a deprecated one-release shim mapping the
-old ``(policy, model)`` constructor onto
-``EnergyController(policy, SimulatedGEOPM(model))``.
 """
 from repro.energy.backend import (
     Counters,
@@ -39,7 +35,6 @@ from repro.energy.controller import (
 )
 from repro.energy.geopm import FrequencyActuator, SimulatedGEOPM, Telemetry
 from repro.energy.model import StepEnergyModel, env_params_from_roofline
-from repro.energy.runtime import EnergyAwareRuntime
 
 
 def make_backend(model: StepEnergyModel, kind: str = "geopm", n: int = 1,
@@ -63,7 +58,6 @@ __all__ = [
     "Counters",
     "EnergyBackend",
     "EnergyController",
-    "EnergyAwareRuntime",
     "FrequencyActuator",
     "SimBackend",
     "SimulatedGEOPM",

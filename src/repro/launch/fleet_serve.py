@@ -33,6 +33,17 @@ window becomes ONE launch with controller state resident across all of
 its intervals, arm-for-arm with the streaming loop (sim and trace
 backends both supported).
 
+``--workload serve`` swaps the simulator for the request-driven
+serving workload (repro.workload): each node runs the continuous-
+batching serve loop against its own seeded bursty-diurnal traffic
+stream (``--rate``, ``--serve-model``, ``--slots``), and QoS becomes a
+p99-latency SLO against the f_max reference. ``--phase-split`` gives
+every node a prefill lane and a decode lane (fleet width 2N); with
+``--qos`` the compute-bound prefill lane keeps the slowdown budget
+while the bandwidth-bound decode lane runs unconstrained
+(``repro.core.phase_policy``). Streaming only: ``--episode-scan`` and
+``--drift`` stay simulator-side.
+
 Replay a recorded trace shard-per-host instead of the simulator with
 ``--trace trace.npz`` (see repro.energy.record_trace); ``--out arms.npz``
 makes host 0 gather and persist the full (T, N) arm trajectory — the
@@ -55,7 +66,7 @@ import numpy as np
 
 from repro.core import get_app, make_env_params
 from repro.core.fleet import slice_policy_lanes
-from repro.core.policies import energy_ucb
+from repro.core.policies import energy_ucb, make_policy_params, phase_policy
 from repro.energy import SimBackend, TraceReplayBackend
 from repro.energy.backend import trace_n_nodes
 from repro.parallel.distributed import (
@@ -76,6 +87,24 @@ def parse_args(argv=None):
     ap.add_argument("--app", default="tealeaf")
     ap.add_argument("--trace", default=None,
                     help="replay this recorded .npz trace instead of the sim")
+    ap.add_argument("--workload", choices=("sim", "serve"), default="sim",
+                    help="sim: the calibrated bandit environment; serve: "
+                         "the traffic-driven serving backend "
+                         "(repro.workload); ignored with --trace")
+    ap.add_argument("--serve-model", default="qwen2.5-3b",
+                    help="arch config behind the serving roofline physics")
+    ap.add_argument("--rate", type=float, default=5.0,
+                    help="base request rate per node (requests/s); the "
+                         "bursty diurnal modulation rides on top")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="continuous-batching slots per serving node")
+    ap.add_argument("--phase-split", action="store_true",
+                    help="per-phase lanes: prefill row + decode row per "
+                         "node (fleet width 2N); with --qos the budget "
+                         "binds the prefill lane only")
+    ap.add_argument("--slo-factor", type=float, default=4.0,
+                    help="p99 SLO = slo_factor x the analytic f_max "
+                         "no-queueing latency")
     ap.add_argument("--num-hosts", type=int, default=1)
     ap.add_argument("--host-id", type=int, default=0)
     ap.add_argument("--coordinator", default="127.0.0.1:7733",
@@ -131,6 +160,15 @@ def build_policy(args):
         kw["window_discount"] = args.window_discount
     if args.warmup:
         kw["optimistic_init"] = False
+    if args.workload == "serve" and args.phase_split and args.trace is None:
+        # the physics-informed per-phase config: the slowdown budget
+        # binds the compute-bound prefill lane; the bandwidth-bound
+        # decode lane (step time flat in frequency) stays unconstrained
+        return phase_policy(
+            args.nodes,
+            prefill=make_policy_params(**kw),
+            decode=make_policy_params(**{**kw, "qos_delta": None}),
+        )
     return energy_ucb(**kw)
 
 
@@ -146,6 +184,23 @@ def build_local_backend(args, lo: int, hi: int):
             raise ValueError("--drift drives the simulator; it cannot "
                              "apply to a recorded --trace replay")
         return TraceReplayBackend.load(args.trace, nodes=(lo, hi))
+    if args.workload == "serve":
+        if args.drift:
+            raise ValueError("--drift drives the simulator; the serving "
+                             "workload's nonstationarity is its traffic")
+        if args.episode_scan:
+            raise ValueError("--episode-scan needs an episode surface; "
+                             "the serving workload streams (run without "
+                             "--episode-scan)")
+        from repro.workload import ServingBackend, bursty_diurnal_traffic
+
+        f = 2 if args.phase_split else 1
+        return ServingBackend(
+            bursty_diurnal_traffic(args.rate), args.serve_model,
+            n_nodes=(hi - lo) // f, n_slots=args.slots,
+            phase_split=args.phase_split, node_offset=lo // f,
+            slo_factor=args.slo_factor,
+        )
     drift = ([make_env_params(get_app(a.strip()))
               for a in args.drift.split(",") if a.strip()]
              if args.drift else None)
@@ -174,9 +229,16 @@ def run_host(args) -> dict:
         # can live on host 0
         init_jax_distributed(args.coordinator, args.num_hosts, args.host_id)
         rendezvous = (rendezvous[0], rendezvous[1] + 1)
-    n_total = (trace_n_nodes(args.trace) if args.trace is not None
-               else args.nodes)
-    lo, hi = host_stripe(n_total, args.num_hosts, args.host_id)
+    if args.trace is not None:
+        n_total = trace_n_nodes(args.trace)
+        lo, hi = host_stripe(n_total, args.num_hosts, args.host_id)
+    else:
+        # serve + --phase-split doubles the lane count; stripe over
+        # SERVE nodes first so every host's lane slice stays
+        # even-aligned (a node's prefill/decode pair never splits)
+        f = (2 if args.workload == "serve" and args.phase_split else 1)
+        lo, hi = host_stripe(args.nodes, args.num_hosts, args.host_id)
+        n_total, lo, hi = args.nodes * f, lo * f, hi * f
     backend = build_local_backend(args, lo, hi)
     intervals = args.intervals
     if isinstance(backend, TraceReplayBackend):
@@ -219,6 +281,15 @@ def run_host(args) -> dict:
                          stripe_lo=np.asarray([s[0] for s in stripes]),
                          stripe_hi=np.asarray([s[1] for s in stripes]),
                          **merged)
+        if args.workload == "serve" and args.trace is None:
+            # QoS accounting is per completed request, so each host
+            # reports its own stripe's tail latency
+            rep = backend.slo_report(warmup_s=0.1 * intervals
+                                     * backend.interval_s)
+            print(f"host {comm.host_id} stripe SLO: p99 {rep['p99_s']:.3f} s "
+                  f"vs {rep['slo_s']:.3f} s, violation rate "
+                  f"{rep['violation_rate']:.3f} over {rep['completed']} "
+                  f"requests, {backend.served_tokens} tokens", flush=True)
         if lead:
             kernel = "fused kernel" if ctl.use_kernel else "vmapped"
             print(f"host 0/{comm.num_hosts}: stripe {ctl.stripe} of "
@@ -245,6 +316,13 @@ def spawn_local(args) -> int:
             "--report-every", str(args.report_every)]
     if args.trace is not None:
         base += ["--trace", args.trace]
+    if args.workload != "sim":
+        base += ["--workload", args.workload,
+                 "--serve-model", args.serve_model,
+                 "--rate", str(args.rate), "--slots", str(args.slots),
+                 "--slo-factor", str(args.slo_factor)]
+        if args.phase_split:
+            base += ["--phase-split"]
     if args.alpha is not None:
         base += ["--alpha", str(args.alpha)]
     if args.lam is not None:

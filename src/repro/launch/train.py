@@ -67,7 +67,7 @@ def main():
         bundle, shape,
         tcfg=TrainerConfig(total_steps=args.steps, ckpt_every=max(10, args.steps // 4),
                            ckpt_dir=args.ckpt, log_every=max(1, args.steps // 10)),
-        energy_runtime=controller,
+        controller=controller,
     )
     start = tr.init_or_restore()
     print(f"arch={cfg.name} family={cfg.family} start_step={start}")

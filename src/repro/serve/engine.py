@@ -9,7 +9,7 @@ whole batch.
 """
 from __future__ import annotations
 
-import warnings
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -36,14 +36,7 @@ class ServeEngine:
     moe/vlm path supports per-slot refill via cache splicing."""
 
     def __init__(self, bundle: ModelBundle, params, n_slots: int, max_len: int,
-                 controller=None, energy_runtime=None):
-        if energy_runtime is not None:
-            warnings.warn(
-                "ServeEngine(energy_runtime=...) is deprecated; pass "
-                "controller= (an EnergyController)", DeprecationWarning,
-                stacklevel=2,
-            )
-            controller = controller or energy_runtime
+                 controller=None):
         self.bundle = bundle
         self.params = params
         self.n_slots = n_slots
@@ -51,11 +44,27 @@ class ServeEngine:
         self.energy = controller
         self._decode = jax.jit(bundle.decode)
         self._prefill = jax.jit(bundle.prefill)
-        self.stats: Dict[str, float] = {"prefills": 0, "decode_steps": 0}
+        # greedy head jitted once, closing over the vocab size — the
+        # logits buffer may be padded past vocab_size, and re-slicing
+        # it in numpy every step re-materialized the whole row
+        v = bundle.cfg.vocab_size
+        self._argmax = jax.jit(
+            lambda logits: jnp.argmax(logits[:, :v], axis=-1).astype(jnp.int32)
+        )
+        # telemetry the workload layer and benchmarks read from one
+        # place: counts, emitted decode tokens, per-wave wall time,
+        # and the request-queue depth behind the current wave
+        self.stats: Dict[str, float] = {
+            "prefills": 0,
+            "decode_steps": 0,
+            "decode_tokens": 0,
+            "wave_time_s": 0.0,
+            "last_wave_s": 0.0,
+            "queue_depth": 0,
+        }
 
     def _greedy(self, logits) -> np.ndarray:
-        v = self.bundle.cfg.vocab_size
-        return np.asarray(jnp.argmax(logits[:, :v], axis=-1), np.int32)
+        return np.asarray(self._argmax(logits))
 
     def generate(self, requests: List[Request]) -> List[Request]:
         """Run a batch of requests to completion (batched prefill, then
@@ -63,7 +72,15 @@ class ServeEngine:
         requests than slots, waves of n_slots are processed)."""
         out: List[Request] = []
         for i in range(0, len(requests), self.n_slots):
+            self.stats["queue_depth"] = len(requests) - i - min(
+                self.n_slots, len(requests) - i
+            )
+            t0 = time.perf_counter()
             out.extend(self._wave(requests[i : i + self.n_slots]))
+            dt = time.perf_counter() - t0
+            self.stats["last_wave_s"] = dt
+            self.stats["wave_time_s"] += dt
+        self.stats["queue_depth"] = 0
         return out
 
     def _wave(self, reqs: List[Request]) -> List[Request]:
@@ -97,6 +114,7 @@ class ServeEngine:
             for i, r in enumerate(reqs):
                 if not r.done:
                     r.out.append(int(next_tok[i]))
+                    self.stats["decode_tokens"] += 1
                     if next_tok[i] == r.eos_id or len(r.out) >= r.max_new:
                         r.done = True
             if all(r.done for r in reqs) or index >= self.max_len - 1:

@@ -47,7 +47,7 @@ class Trainer:
         shape: ShapeConfig,
         opt_cfg: Optional[AdamWConfig] = None,
         tcfg: Optional[TrainerConfig] = None,
-        energy_runtime=None,
+        controller=None,
         data: Optional[SyntheticTokens] = None,
     ):
         self.bundle = bundle
@@ -58,7 +58,7 @@ class Trainer:
             total_steps=self.tcfg.total_steps,
             warmup_steps=max(1, self.tcfg.total_steps // 20),
         )
-        self.energy = energy_runtime
+        self.energy = controller
         self.data = data or make_pipeline(bundle.cfg, shape, seed=self.tcfg.seed)
         self._step_fn = jax.jit(
             make_train_step(bundle, self.opt_cfg, bundle.layout), donate_argnums=(0, 1)

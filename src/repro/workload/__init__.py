@@ -1,0 +1,48 @@
+"""Request-driven serving workloads for the energy control plane.
+
+This package is where TRAFFIC, not a fixed app schedule, drives the
+load the bandit sees:
+
+- :mod:`repro.workload.traffic` — deterministic seeded request
+  processes (Poisson / diurnal / bursty MMPP), keyed per (seed,
+  node, interval) so chunked, one-shot, and striped generation are
+  bit-identical.
+- :mod:`repro.workload.serving_backend` — the continuous-batching
+  serve loop (slot refill from the arrival queue, unbatched prefill,
+  lockstep decode waves) as an :class:`~repro.energy.backend
+  .EnergyBackend`, with per-phase roofline physics: compute-bound
+  prefill stretches 1/x under DVFS, bandwidth-bound decode barely
+  moves — so ``phase_split=True`` lanes (prefill row / decode row per
+  node) let per-phase EnergyUCB controllers capture both sweet spots
+  through the one fused ``fleet_step``. QoS is a p99-latency SLO
+  against the f_max reference (``slo_report``); the bandit enforces it
+  through the existing progress feasible set.
+
+Entry points: ``benchmarks/serve_energy.py`` (joules-per-served-token
+vs SLO-violation-rate on a bursty diurnal trace) and
+``repro.launch.fleet_serve --workload serve``.
+"""
+from repro.workload.serving_backend import ServePhysics, ServingBackend
+from repro.workload.traffic import (
+    IntervalTraffic,
+    TrafficConfig,
+    TrafficGen,
+    bursty_diurnal_traffic,
+    bursty_traffic,
+    concat_intervals,
+    diurnal_traffic,
+    poisson_traffic,
+)
+
+__all__ = [
+    "IntervalTraffic",
+    "ServePhysics",
+    "ServingBackend",
+    "TrafficConfig",
+    "TrafficGen",
+    "bursty_diurnal_traffic",
+    "bursty_traffic",
+    "concat_intervals",
+    "diurnal_traffic",
+    "poisson_traffic",
+]

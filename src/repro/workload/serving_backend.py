@@ -1,0 +1,485 @@
+"""ServingBackend: LLM serving under request traffic as an EnergyBackend.
+
+Each decision interval runs one continuous-batching serve loop per node
+— slot refill from the arrival queue, one unbatched prefill per admitted
+request, lockstep decode waves over the occupied slots — against the
+roofline-parameterized per-phase physics of a real model config
+(:class:`ServePhysics`, terms from ``repro.roofline.analysis``):
+
+- **prefill** is compute-dominated (per-token matmul flops vs a fixed
+  weight-streaming pass), so its step time stretches as 1/x at reduced
+  relative frequency x = f/f_max — low frequency costs latency;
+- **decode** is bandwidth-dominated (weights + KV cache streamed per
+  wave), so its step time is nearly flat in x — low frequency is almost
+  free energy savings.
+
+That asymmetry is the whole point of phase-conditioned control:
+``phase_split=True`` exposes every node as TWO controller lanes (row ``2m``
+= prefill lane, row ``2m+1`` = decode lane of node ``m``), each with its
+own counters and its own actuated arm, so per-phase EnergyUCB
+controllers ride the existing (N,) hyperparameter-lane machinery and
+the fused ``fleet_step`` unchanged. ``phase_split=False`` sums both
+phases into one lane per node (the shared-controller baseline).
+
+QoS is a p99-latency SLO against the f_max reference: request latency
+(completion minus arrival, queueing included) is logged per node, and
+``slo_report`` scores the violation rate against ``slo_s`` =
+``slo_factor`` x the analytic no-queueing f_max latency. The bandit-side
+coupling is the existing progress feasible set — progress per interval
+is the SERVICE RATIO (tokens served / tokens f_max could have served
+of the demandable work), which sits at 1.0 for any unsaturated arm and
+drops exactly when a too-slow arm saturates the node — the precursor
+of the queueing that blows the tail latency.
+
+Counter semantics follow the calibrated simulator: ``core_active_s``
+integrates actual engine-busy seconds and ``uncore_active_s`` the
+f_max-equivalent service seconds of the work completed, so the
+controller's R = UC/UU is the realized per-work slowdown vs f_max
+(R == 1 at f_max, load noise divides out) and reward = -E*R/scale is
+the energy-delay proxy.
+
+Determinism: all randomness lives in the per-interval-keyed
+:class:`~repro.workload.traffic.TrafficGen` streams (one per node,
+keyed by GLOBAL node id), the slot loop itself is a deterministic
+discrete-event simulation, and arms are observation-determined — so
+striped fleets (``local_slice``) and `record_trace` replays are
+bit-exact, interval counters included.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.calibration import (
+    FREQS_GHZ,
+    F_MAX,
+    SWITCH_ENERGY_J,
+    SWITCH_LATENCY_S,
+)
+from repro.energy.backend import Counters, EnergyBackend
+from repro.energy.model import GAMMA, P_DYN_W, P_IDLE_W
+from repro.roofline.analysis import HW, Hardware, exec_flops, hbm_bytes
+from repro.workload.traffic import IntervalTraffic, TrafficConfig, TrafficGen
+
+K = len(FREQS_GHZ)
+
+# serving-class power envelope: deeper idle states than the training
+# envelope in repro.energy.model, and a correspondingly larger dynamic
+# range — the split that makes bandwidth-bound decode worth downclocking
+SERVE_P_IDLE_W = 50.0
+SERVE_P_DYN_W = 150.0
+
+
+@dataclass(frozen=True)
+class ServePhysics:
+    """Per-phase roofline terms of one serving node (seconds at f_max)
+    plus the DVFS power envelope — the same max-overlap step-time and
+    P(x) = P_idle + P_dyn * x^gamma * activity decomposition as
+    :class:`repro.energy.model.StepEnergyModel`, specialized to the two
+    serving phases."""
+
+    # prefill: one unbatched (B=1) pass over a prompt
+    t_pre_comp_tok: float  # compute seconds per prompt token
+    t_pre_mem_fix: float  # fixed weight-stream seconds per prefill call
+    t_pre_mem_tok: float  # memory seconds per prompt token (acts + KV)
+    # decode: one lockstep wave over the full slot batch
+    t_dec_comp: float
+    t_dec_mem: float
+    p_idle_w: float = P_IDLE_W
+    p_dyn_w: float = P_DYN_W
+    gamma: float = GAMMA
+
+    @classmethod
+    def from_arch(cls, cfg: ArchConfig, n_slots: int, ctx_len: int,
+                  hw: Hardware = HW, **kw) -> "ServePhysics":
+        """Derive the five terms from the analytic roofline of ``cfg``
+        at serving shapes: prefill at B=1 over ``ctx_len`` tokens (the
+        per-call weight stream is the B-independent part), decode at the
+        full ``n_slots`` batch with ``ctx_len`` context."""
+        ref = max(int(ctx_len), 8)
+        shp_p = ShapeConfig("serve_prefill", ref, 1, "prefill")
+        shp_d = ShapeConfig("serve_decode", ref, n_slots, "decode")
+        lay = cfg.layout
+        fl_p = exec_flops(cfg, shp_p, lay)
+        hb_p = hbm_bytes(cfg, shp_p, lay, 1, 1)
+        pbytes = cfg.param_count() * 2.0  # the per-call weight stream
+        fl_d = exec_flops(cfg, shp_d, lay)
+        hb_d = hbm_bytes(cfg, shp_d, lay, 1, 1)
+        return cls(
+            t_pre_comp_tok=fl_p / hw.peak_flops / ref,
+            t_pre_mem_fix=pbytes / hw.hbm_bw,
+            t_pre_mem_tok=max(hb_p - pbytes, 0.0) / hw.hbm_bw / ref,
+            t_dec_comp=fl_d / hw.peak_flops,
+            t_dec_mem=hb_d / hw.hbm_bw,
+            **kw,
+        )
+
+    def _op(self, t_comp: float, t_mem: float,
+            x: float) -> Tuple[float, float, float, float]:
+        """(wall_s, energy_j, uc, uu) of one op at relative frequency x
+        — max-overlap step time, core stretched by 1/x."""
+        tc = t_comp / x
+        t = max(tc, t_mem, 1e-12)
+        uc = tc / t
+        uu = max(t_mem / t, 1e-3)
+        act = (tc + t_mem) / (2.0 * t)
+        p = self.p_idle_w + self.p_dyn_w * (x ** self.gamma) * act
+        return t, p * t, uc, uu
+
+    def prefill(self, plen: int, arm: int):
+        x = float(FREQS_GHZ[arm]) / F_MAX
+        return self._op(plen * self.t_pre_comp_tok,
+                        self.t_pre_mem_fix + plen * self.t_pre_mem_tok, x)
+
+    def decode_wave(self, arm: int):
+        x = float(FREQS_GHZ[arm]) / F_MAX
+        return self._op(self.t_dec_comp, self.t_dec_mem, x)
+
+    def fmax_latency_s(self, plen: float, olen: float) -> float:
+        """Analytic no-queueing request latency at f_max: one prefill
+        plus olen decode waves."""
+        return (self.prefill(int(round(plen)), K - 1)[0]
+                + olen * self.decode_wave(K - 1)[0])
+
+
+class _Node:
+    """Mutable serve-loop state of one node (slots + queue + clock)."""
+
+    __slots__ = ("queue", "slots", "carry_s", "lat", "done_t")
+
+    def __init__(self, n_slots: int):
+        self.queue: List[Tuple[float, int, int]] = []  # (arrival_s, plen, olen)
+        # slot = None | [phase, plen, olen, produced, arrival_s]
+        self.slots: List[Optional[list]] = [None] * n_slots
+        self.carry_s = 0.0  # op overrun carried past the interval edge
+        self.lat: List[float] = []  # completed-request latencies (s)
+        self.done_t: List[float] = []  # absolute completion times (s)
+
+
+class ServingBackend(EnergyBackend):
+    """The serving workload as a streaming :class:`EnergyBackend`.
+
+    ``n_serve_nodes`` independent nodes each run the slot loop against
+    their own keyed traffic stream; ``n_nodes`` (the controller-facing
+    fleet width) is ``2 * n_serve_nodes`` when ``phase_split`` else
+    ``n_serve_nodes``. ``apply_arms`` consumes one arm per LANE.
+    """
+
+    def __init__(self, traffic: TrafficConfig, model,
+                 n_nodes: int = 1, n_slots: int = 8,
+                 phase_split: bool = False, node_offset: int = 0,
+                 ctx_len: Optional[int] = None, slo_factor: float = 4.0,
+                 hw: Hardware = HW, p_idle_w: float = SERVE_P_IDLE_W,
+                 p_dyn_w: float = SERVE_P_DYN_W):
+        from repro.configs import get_arch
+
+        self.traffic = traffic
+        self.cfg: ArchConfig = (model if isinstance(model, ArchConfig)
+                                else get_arch(model))
+        self._m = int(n_nodes)
+        self.n_slots = int(n_slots)
+        self.phase_split = bool(phase_split)
+        self._offset = int(node_offset)
+        self.slo_factor = float(slo_factor)
+        self._hw = hw
+        self._pw = (float(p_idle_w), float(p_dyn_w))
+        self.ctx_len = int(ctx_len if ctx_len is not None
+                           else traffic.prompt_mean + traffic.output_mean)
+        self.phys = ServePhysics.from_arch(self.cfg, self.n_slots,
+                                           self.ctx_len, hw=hw,
+                                           p_idle_w=p_idle_w,
+                                           p_dyn_w=p_dyn_w)
+        # decode tables are plen-independent: precompute all K arms
+        self._dec = [self.phys.decode_wave(a) for a in range(K)]
+
+        self._gens = [TrafficGen(traffic, node_id=self._offset + m)
+                      for m in range(self._m)]
+        self._nodes = [_Node(self.n_slots) for _ in range(self._m)]
+        self._interval = 0
+        n = self.n_nodes
+        self._arms = np.full((n,), K - 1, np.int32)
+        self._prev_arms = self._arms.copy()
+        self._energy = np.zeros(n, np.float64)
+        self._core = np.zeros(n, np.float64)
+        self._uncore = np.zeros(n, np.float64)
+        self._time = np.zeros(n, np.float64)
+        self._progress = np.zeros(n, np.float64)
+        self._switches = np.zeros(n, np.int64)
+        self._served_prompt_tok = 0
+        self._served_decode_tok = 0
+
+        # reward normalization + f_max reference, from the OFFERED load
+        # (long-run mean rate). Counter semantics follow the calibrated
+        # simulator: UC integrates ACTUAL engine-busy seconds, UU
+        # integrates the f_max-EQUIVALENT service seconds of the work
+        # completed (the throughput-tracking copy-engine counter), so
+        # the derived R = UC/UU is the realized per-work slowdown vs
+        # f_max — R == 1 at f_max by construction, load noise divides
+        # out of R, and reward = -E*R/scale is the energy-delay proxy
+        # with scale = the expected f_max interval energy per lane
+        r = traffic.mean_rate_rps
+        dt = traffic.interval_s
+        mp, mo = traffic.prompt_mean, traffic.output_mean
+        tp, ep = self.phys.prefill(int(round(mp)), K - 1)[:2]
+        td, ed = self._dec[K - 1][:2]
+        busy_p = r * dt * tp  # expected prefill-busy seconds / interval
+        waves = r * dt * mo / self.n_slots  # full-batch wave estimate
+        busy_d = waves * td
+        idle = max(dt - busy_p - busy_d, 0.0) * self.phys.p_idle_w
+        e_p, e_d = r * dt * ep, waves * ed
+        if self.phase_split:
+            scale = np.empty(n, np.float64)
+            scale[0::2] = max(e_p + idle / 2, 1e-9)
+            scale[1::2] = max(e_d + idle / 2, 1e-9)
+            base_e = np.empty(n, np.float64)
+            base_e[0::2] = e_p + idle / 2
+            base_e[1::2] = e_d + idle / 2
+        else:
+            scale = np.full(n, max(e_p + e_d + idle, 1e-9))
+            base_e = np.full(n, e_p + e_d + idle)
+        self._scale = scale
+        self._base_e = base_e
+        self.slo_s = self.slo_factor * self.phys.fmax_latency_s(mp, mo)
+
+    # -- EnergyBackend surface -----------------------------------------
+    @property
+    def n_serve_nodes(self) -> int:
+        return self._m
+
+    @property
+    def n_nodes(self) -> int:
+        return self._m * (2 if self.phase_split else 1)
+
+    @property
+    def ladder_ghz(self) -> Sequence[float]:
+        return tuple(FREQS_GHZ)
+
+    @property
+    def interval_s(self) -> float:
+        return self.traffic.interval_s
+
+    @property
+    def reward_scale(self):
+        return self._scale
+
+    def baseline_interval(self):
+        """Analytic EXPECTED per-interval f_max energy under the offered
+        load (the benchmark's headline baseline is a real static-f_max
+        run; this feeds ``summary()``'s saved-energy estimate)."""
+        return self._base_e.copy(), np.full(self.n_nodes,
+                                            self.traffic.interval_s)
+
+    def apply_arms(self, arms) -> None:
+        a = np.asarray(arms, np.int32)
+        self._arms = np.broadcast_to(
+            a.reshape(-1) if a.ndim > 1 else a, (self.n_nodes,)).copy()
+
+    def _lanes(self, m: int) -> Tuple[int, int]:
+        """(prefill lane, decode lane) row indices of node m."""
+        return (2 * m, 2 * m + 1) if self.phase_split else (m, m)
+
+    @property
+    def interval_index(self) -> int:
+        return self._interval
+
+    def advance(self, work_fn: Optional[Callable[[], Any]] = None) -> Any:
+        out = work_fn() if work_fn is not None else None
+        dt = self.traffic.interval_s
+        for m in range(self._m):
+            self._advance_node(m, self._gens[m].next_interval(), dt)
+        self._time += dt
+        self._prev_arms = self._arms.copy()
+        self._interval += 1
+        return out
+
+    def _advance_node(self, m: int, iv: IntervalTraffic, dt: float) -> None:
+        lp, ld = self._lanes(m)
+        arm_p, arm_d = int(self._arms[lp]), int(self._arms[ld])
+        st = self._nodes[m]
+        t0 = self._interval * dt
+        for off, pl, ol in zip(iv.offsets_s, iv.prompt_len, iv.output_len):
+            st.queue.append((t0 + float(off), int(pl), int(ol)))
+
+        cursor = st.carry_s
+        # frequency switches cost energy and a settle latency up front
+        for lane, arm in ((lp, arm_p), (ld, arm_d)) if lp != ld \
+                else ((lp, arm_p),):
+            if arm != int(self._prev_arms[lane]):
+                self._switches[lane] += 1
+                self._energy[lane] += SWITCH_ENERGY_J
+                cursor += SWITCH_LATENCY_S
+        # demandable work this interval at the f_max reference rate —
+        # the denominator of the service-ratio progress counter. Load
+        # noise (how much happened to arrive) divides out; what remains
+        # is the arm-dependent part: a too-slow arm saturates the node
+        # and serves a FRACTION of what f_max would have, which is
+        # exactly the slowdown the QoS feasible set prices — and the
+        # precursor of the queueing that blows the p99 tail
+        t_wd_ref = self._dec[K - 1][0]
+        cap_d = dt / t_wd_ref  # decode tokens one slot can demand
+        rem_p = rem_d = 0.0
+        for sl in st.slots:
+            if sl is not None:
+                if sl[0] == "prefill":
+                    rem_p += sl[1]
+                    rem_d += min(sl[2], cap_d)
+                else:
+                    rem_d += min(sl[2] - sl[3], cap_d)
+        t_end = t0 + dt
+        for a, pl, ol in st.queue:
+            w = min(max(t_end - a, 0.0), dt) / dt
+            rem_p += pl * w
+            rem_d += min(ol, cap_d * w)
+
+        e_idle = [0.0, 0.0]  # [prefill share, decode share]
+        tok_p = tok_d = 0
+        td, ed = self._dec[arm_d][:2]
+        while cursor < dt:
+            now = t0 + cursor
+            # slot refill from the arrival queue (FIFO, arrived only)
+            qi = 0
+            for s in range(self.n_slots):
+                if st.slots[s] is None and qi < len(st.queue) \
+                        and st.queue[qi][0] <= now:
+                    a, pl, ol = st.queue[qi]
+                    st.slots[s] = ["prefill", pl, ol, 0, a]
+                    qi += 1
+            if qi:
+                del st.queue[:qi]
+            pre = next((sl for sl in st.slots if sl is not None
+                        and sl[0] == "prefill"), None)
+            if pre is not None:
+                t, e = self.phys.prefill(pre[1], arm_p)[:2]
+                self._energy[lp] += e
+                self._core[lp] += t  # actual busy
+                # f_max-equivalent service time of this prompt
+                self._uncore[lp] += self.phys.prefill(pre[1], K - 1)[0]
+                cursor += t
+                tok_p += pre[1]
+                pre[0] = "decode"
+                continue
+            dec = [sl for sl in st.slots if sl is not None]
+            if dec:
+                self._energy[ld] += ed
+                self._core[ld] += td
+                self._uncore[ld] += t_wd_ref  # same wave at f_max
+                cursor += td
+                done_at = t0 + cursor
+                tok_d += len(dec)
+                for sl in dec:
+                    sl[3] += 1
+                    if sl[3] >= sl[2]:
+                        st.lat.append(done_at - sl[4])
+                        st.done_t.append(done_at)
+                        st.slots[st.slots.index(sl)] = None
+                continue
+            # idle: jump to the next arrival (or the interval edge)
+            nxt = min(st.queue[0][0] - t0, dt) if st.queue else dt
+            nxt = max(nxt, cursor + 1e-9)
+            share = (nxt - min(cursor, dt)) if cursor < dt else 0.0
+            half = 0.5 if self.phase_split else 1.0
+            e_idle[0] += share * self.phys.p_idle_w * half
+            if self.phase_split:
+                e_idle[1] += share * self.phys.p_idle_w * 0.5
+            cursor = nxt
+        st.carry_s = max(cursor - dt, 0.0)
+        self._energy[lp] += e_idle[0]
+        if self.phase_split:
+            self._energy[ld] += e_idle[1]
+        ratio_p = min(tok_p / rem_p, 1.0) if rem_p >= 1.0 else 1.0
+        ratio_d = min(tok_d / rem_d, 1.0) if rem_d >= 1.0 else 1.0
+        if self.phase_split:
+            self._progress[lp] += ratio_p
+            self._progress[ld] += ratio_d
+        else:
+            self._progress[lp] += 0.5 * (ratio_p + ratio_d)
+        self._served_prompt_tok += tok_p
+        self._served_decode_tok += tok_d
+
+    def read_counters(self) -> Counters:
+        n = self.n_nodes
+        return Counters(
+            energy_j=self._energy.copy(),
+            core_active_s=self._core.copy(),
+            uncore_active_s=self._uncore.copy(),
+            timestamp_s=self._time.copy(),
+            progress=self._progress.copy(),
+            switches=self._switches.astype(np.int32),
+            active=np.ones(n, bool),
+        )
+
+    def local_slice(self, lo: int, hi: int) -> "ServingBackend":
+        """The lane stripe [lo, hi) as a fresh backend. With
+        ``phase_split`` the stripe must align to node boundaries (both
+        lanes of a node live on one host)."""
+        f = 2 if self.phase_split else 1
+        if not 0 <= lo < hi <= self.n_nodes:
+            raise ValueError(
+                f"slice [{lo}, {hi}) out of range for N={self.n_nodes}")
+        if lo % f or hi % f:
+            raise ValueError(
+                f"phase-split lanes pair per node: slice [{lo}, {hi}) "
+                "must be even-aligned")
+        return ServingBackend(
+            self.traffic, self.cfg, n_nodes=(hi - lo) // f,
+            n_slots=self.n_slots, phase_split=self.phase_split,
+            node_offset=self._offset + lo // f, ctx_len=self.ctx_len,
+            slo_factor=self.slo_factor, hw=self._hw)
+
+    # -- serving telemetry ---------------------------------------------
+    @property
+    def served_tokens(self) -> int:
+        """Generated (decode) tokens across the fleet — the denominator
+        of joules-per-served-token."""
+        return self._served_decode_tok
+
+    @property
+    def queue_depths(self) -> np.ndarray:
+        return np.asarray([len(nd.queue) for nd in self._nodes])
+
+    def latencies(self, since_s: float = 0.0) -> np.ndarray:
+        """Completed-request latencies (s) across all nodes, restricted
+        to completions at absolute time >= ``since_s``."""
+        out = [l for nd in self._nodes
+               for t, l in zip(nd.done_t, nd.lat) if t >= since_s]
+        return np.asarray(out, np.float64)
+
+    def slo_report(self, warmup_s: float = 0.0,
+                   slo_s: Optional[float] = None) -> Dict[str, float]:
+        """p50/p99 latency and the SLO violation rate over completions
+        after ``warmup_s`` (the paper's post-warmup QoS accounting)."""
+        slo = self.slo_s if slo_s is None else float(slo_s)
+        lat = self.latencies(since_s=warmup_s)
+        if lat.size == 0:
+            return {"completed": 0, "p50_s": float("nan"),
+                    "p99_s": float("nan"), "slo_s": slo,
+                    "violation_rate": float("nan")}
+        return {
+            "completed": int(lat.size),
+            "p50_s": float(np.percentile(lat, 50)),
+            "p99_s": float(np.percentile(lat, 99)),
+            "slo_s": slo,
+            "violation_rate": float(np.mean(lat > slo)),
+        }
+
+    def busy_fractions(self, rate_rps: Optional[float] = None,
+                       arm_p: int = K - 1, arm_d: int = K - 1
+                       ) -> Dict[str, float]:
+        """Analytic per-interval busy-time shares at a given load and
+        arm pair — the scenario-sizing diagnostic (keep the f_max total
+        under 1.0 and the low-f total near/over 1.0 for a QoS-binding
+        burst)."""
+        r = self.traffic.mean_rate_rps if rate_rps is None else rate_rps
+        dt = self.traffic.interval_s
+        tp = self.phys.prefill(int(round(self.traffic.prompt_mean)), arm_p)[0]
+        td = self._dec[arm_d][0]
+        waves = r * dt * self.traffic.output_mean / self.n_slots
+        return {
+            "prefill": r * dt * tp / dt,
+            "decode": waves * td / dt,
+            "total": (r * dt * tp + waves * td) / dt,
+        }

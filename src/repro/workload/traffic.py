@@ -1,0 +1,206 @@
+"""Deterministic request-traffic generator for the serving workload.
+
+Three arrival processes, composable in one config (DESIGN: a bursty
+diurnal trace is just ``diurnal_depth > 0`` plus ``burst_mult > 1``):
+
+- **poisson**: homogeneous Poisson arrivals at ``rate_rps``.
+- **diurnal**: the rate is modulated by a sinusoid with period
+  ``diurnal_period`` intervals and relative depth ``diurnal_depth``
+  (the day/night load swing every serving fleet sees).
+- **bursty**: an MMPP-style two-state (on/off) modulator; in the ON
+  state the rate is multiplied by ``burst_mult``, and the state flips
+  with per-interval probability 1/mean-duration (geometric episode
+  lengths — the discrete-time Markov-modulated Poisson process).
+
+Prompt and output lengths are lognormal (arithmetic mean pinned to
+``prompt_mean``/``output_mean``), clipped to [1, max].
+
+Determinism contract (tests/test_workload.py): every draw for global
+interval ``t`` of node ``node_id`` comes from a fresh
+``np.random.Generator`` seeded by the tuple ``(seed, node_id, t)`` —
+NOT from one long stream — so chunked generation (any chunking),
+one-shot generation, and per-host striped generation all produce
+bit-identical arrival/length streams. Only the MMPP on/off state is
+sequential, and it is a deterministic function of the per-interval
+draws from t=0, so every replay walks the same state path.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import List, NamedTuple
+
+import numpy as np
+
+
+class IntervalTraffic(NamedTuple):
+    """The requests arriving in one decision interval (one node).
+
+    ``offsets_s`` are sorted arrival times within the interval (seconds
+    from the interval start); lengths are per-request token counts."""
+
+    offsets_s: np.ndarray  # (n,) float64, sorted, in [0, interval_s)
+    prompt_len: np.ndarray  # (n,) int32, >= 1
+    output_len: np.ndarray  # (n,) int32, >= 1
+
+
+@dataclass(frozen=True)
+class TrafficConfig:
+    """One node's request process. All knobs compose; the presets below
+    name the three canonical scenarios."""
+
+    rate_rps: float = 5.0  # base mean arrival rate (requests / s)
+    interval_s: float = 0.25  # decision-interval wall time
+    # request shape: lognormal with pinned arithmetic mean. The default
+    # prompt/output split is prefill-heavy on purpose: prefill is the
+    # phase whose latency stretches under DVFS, so it must carry enough
+    # of the load for the frequency choice to move the p99
+    prompt_mean: float = 768.0
+    prompt_sigma: float = 0.4  # log-space sigma
+    prompt_max: int = 2048
+    output_mean: float = 16.0
+    output_sigma: float = 0.4
+    output_max: int = 96
+    # diurnal modulation: rate *= 1 + depth * sin(2*pi*t / period)
+    diurnal_period: int = 0  # intervals per cycle; 0 disables
+    diurnal_depth: float = 0.0
+    # MMPP on/off bursts: rate *= burst_mult while ON
+    burst_mult: float = 1.0  # 1.0 disables
+    burst_on_mean: float = 16.0  # mean ON duration (intervals)
+    burst_off_mean: float = 48.0  # mean OFF duration (intervals)
+    seed: int = 0
+
+    @property
+    def mean_rate_rps(self) -> float:
+        """Long-run mean arrival rate (diurnal averages out; the burst
+        duty cycle does not)."""
+        duty = (self.burst_on_mean / (self.burst_on_mean + self.burst_off_mean)
+                if self.burst_mult != 1.0 else 0.0)
+        return self.rate_rps * (1.0 + duty * (self.burst_mult - 1.0))
+
+
+def poisson_traffic(rate_rps: float = 5.0, **kw) -> TrafficConfig:
+    return TrafficConfig(rate_rps=rate_rps, **kw)
+
+
+def diurnal_traffic(rate_rps: float = 5.0, period: int = 240,
+                    depth: float = 0.3, **kw) -> TrafficConfig:
+    return TrafficConfig(rate_rps=rate_rps, diurnal_period=period,
+                         diurnal_depth=depth, **kw)
+
+
+def bursty_traffic(rate_rps: float = 5.0, mult: float = 3.0,
+                   on_mean: float = 16.0, off_mean: float = 48.0,
+                   **kw) -> TrafficConfig:
+    return TrafficConfig(rate_rps=rate_rps, burst_mult=mult,
+                         burst_on_mean=on_mean, burst_off_mean=off_mean, **kw)
+
+
+def bursty_diurnal_traffic(rate_rps: float = 5.0, **kw) -> TrafficConfig:
+    """The benchmark's headline scenario: day/night swing plus on/off
+    load bursts riding on top of it. Sized so static f_max keeps the
+    p99 SLO with headroom while the lowest frequency overloads prefill
+    during peak bursts — the region where QoS control earns its keep."""
+    base = dict(diurnal_period=240, diurnal_depth=0.3, burst_mult=3.0,
+                burst_on_mean=16.0, burst_off_mean=48.0)
+    base.update(kw)
+    return TrafficConfig(rate_rps=rate_rps, **base)
+
+
+class TrafficGen:
+    """Streaming per-node generator over a :class:`TrafficConfig`.
+
+    ``take(T)`` yields the next T :class:`IntervalTraffic` rows and
+    advances the cursor; any chunking of calls produces the same rows
+    (the per-interval keyed-RNG contract above)."""
+
+    def __init__(self, cfg: TrafficConfig, node_id: int = 0,
+                 start_interval: int = 0):
+        self.cfg = cfg
+        self.node_id = int(node_id)
+        self._t = 0
+        self._on = False  # MMPP state entering interval 0: OFF
+        if start_interval:
+            self.skip(start_interval)
+
+    @property
+    def interval_index(self) -> int:
+        """Global index of the next interval to generate."""
+        return self._t
+
+    def _rng(self, t: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.cfg.seed, self.node_id, t]))
+
+    def _step_state(self, u: float) -> bool:
+        """Advance the MMPP state for one interval; returns the state in
+        effect DURING that interval (pre-transition draw u)."""
+        c = self.cfg
+        if c.burst_mult == 1.0:
+            return False
+        if self._on:
+            if u < 1.0 / max(c.burst_on_mean, 1.0):
+                self._on = False
+        else:
+            if u < 1.0 / max(c.burst_off_mean, 1.0):
+                self._on = True
+        return self._on
+
+    def _rate(self, t: int, on: bool) -> float:
+        c = self.cfg
+        r = c.rate_rps
+        if c.diurnal_period > 0:
+            r *= 1.0 + c.diurnal_depth * math.sin(
+                2.0 * math.pi * t / c.diurnal_period)
+        if on:
+            r *= c.burst_mult
+        return max(r, 0.0)
+
+    def _lengths(self, rng, n: int, mean: float, sigma: float,
+                 cap: int) -> np.ndarray:
+        draw = rng.lognormal(math.log(mean) - 0.5 * sigma * sigma, sigma,
+                             size=n)
+        return np.clip(np.round(draw), 1, cap).astype(np.int32)
+
+    def next_interval(self) -> IntervalTraffic:
+        c = self.cfg
+        t = self._t
+        rng = self._rng(t)
+        # fixed draw order per interval: burst transition, count,
+        # offsets, prompt lengths, output lengths — the order IS the
+        # determinism contract, never reorder
+        on = self._step_state(rng.random())
+        n = int(rng.poisson(self._rate(t, on) * c.interval_s))
+        offsets = np.sort(rng.random(n)) * c.interval_s
+        plen = self._lengths(rng, n, c.prompt_mean, c.prompt_sigma,
+                             c.prompt_max)
+        olen = self._lengths(rng, n, c.output_mean, c.output_sigma,
+                             c.output_max)
+        self._t += 1
+        return IntervalTraffic(offsets, plen, olen)
+
+    def take(self, n_intervals: int) -> List[IntervalTraffic]:
+        return [self.next_interval() for _ in range(n_intervals)]
+
+    def skip(self, n_intervals: int) -> None:
+        """Advance the cursor without materializing requests (the MMPP
+        state still has to walk every interval)."""
+        for _ in range(n_intervals):
+            t = self._t
+            self._step_state(self._rng(t).random())
+            self._t += 1
+
+
+def concat_intervals(rows: List[IntervalTraffic],
+                     interval_s: float) -> IntervalTraffic:
+    """Flatten T interval rows into one absolute-time stream (offsets
+    become seconds from the FIRST interval's start) — the one-shot view
+    the chunking tests compare against."""
+    offs = [r.offsets_s + i * interval_s for i, r in enumerate(rows)]
+    cat = lambda xs, d: (np.concatenate(xs) if xs
+                         else np.zeros(0, d))
+    return IntervalTraffic(
+        cat(offs, np.float64),
+        cat([r.prompt_len for r in rows], np.int32),
+        cat([r.output_len for r in rows], np.int32),
+    )

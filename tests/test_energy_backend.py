@@ -17,7 +17,6 @@ from repro.core import (
     static_policy,
 )
 from repro.energy import (
-    EnergyAwareRuntime,
     EnergyController,
     SimBackend,
     SimulatedGEOPM,
@@ -365,14 +364,14 @@ def test_record_trace_static_schedule_matches_expected():
 # ---------------------------------------------------------------------------
 
 
-def test_runtime_shim_deprecated_but_working():
-    with pytest.warns(DeprecationWarning):
-        rt = EnergyAwareRuntime(energy_ucb(), MODEL)
-    assert isinstance(rt.node, SimulatedGEOPM)
-    out = rt.step()
-    for key in ("arm", "freq_ghz", "energy_j", "step_time_s", "reward"):
-        assert key in out
-    assert rt.summary()["steps"] == 1
+def test_runtime_shim_removed():
+    """The one-release EnergyAwareRuntime shim is gone: the module and
+    the re-export no longer exist."""
+    import repro.energy as en
+
+    assert not hasattr(en, "EnergyAwareRuntime")
+    with pytest.raises(ImportError):
+        from repro.energy.runtime import EnergyAwareRuntime  # noqa: F401
 
 
 def test_make_backend_factory():

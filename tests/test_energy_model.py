@@ -48,11 +48,11 @@ def test_bandit_saves_energy_on_memory_bound_cell():
 
 def test_runtime_summary_fields():
     from repro.core.policies import energy_ucb as mk
-    from repro.energy.runtime import EnergyAwareRuntime
+    from repro.energy import EnergyController, SimulatedGEOPM
 
     m = StepEnergyModel(t_compute_s=0.1, t_memory_s=0.3, t_collective_s=0.1,
                         n_chips=2, steps_total=50)
-    rt = EnergyAwareRuntime(mk(), m)
+    rt = EnergyController(mk(), SimulatedGEOPM(model=m))
     for _ in range(50):
         rt.step()
     s = rt.summary()

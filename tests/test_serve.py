@@ -53,21 +53,22 @@ def test_engine_with_energy_controller():
     assert len(ctl.history) >= 5
 
 
-def test_engine_deprecated_energy_runtime_kwarg():
-    """One release of compatibility: the old kwarg still routes through
-    the controller hook (with a DeprecationWarning)."""
+def test_engine_stats_telemetry():
+    """The upgraded stats surface: decode tokens, per-wave wall time,
+    and queue depth — and the removed energy_runtime kwarg is gone."""
     import pytest
-
-    from repro.core.policies import energy_ucb
-    from repro.energy import EnergyController, StepEnergyModel, make_backend
 
     cfg = get_reduced("qwen2.5-3b")
     bundle = build_model(cfg)
     params = bundle.init(jax.random.key(0))
-    m = StepEnergyModel(t_compute_s=0.02, t_memory_s=0.08, t_collective_s=0.01,
-                        n_chips=1, steps_total=100)
-    ctl = EnergyController(energy_ucb(), make_backend(m))
-    with pytest.warns(DeprecationWarning):
-        eng = ServeEngine(bundle, params, n_slots=2, max_len=32,
-                          energy_runtime=ctl)
-    assert eng.energy is ctl
+    eng = ServeEngine(bundle, params, n_slots=2, max_len=32)
+    done = eng.generate(
+        [Request(i, np.arange(4, dtype=np.int32), max_new=5) for i in range(3)]
+    )
+    st = eng.stats
+    assert st["decode_tokens"] == sum(len(r.out) for r in done) > 0
+    assert st["wave_time_s"] >= st["last_wave_s"] > 0
+    assert st["queue_depth"] == 0  # drained
+    with pytest.raises(TypeError):
+        ServeEngine(bundle, params, n_slots=2, max_len=32,
+                    energy_runtime=None)

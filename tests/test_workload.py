@@ -1,0 +1,246 @@
+"""Tests for the workload subsystem: traffic determinism, the
+ServingBackend's EnergyBackend contract, phase-split lanes, trace
+round-trips, and the serving headline claims at small scale."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    energy_ucb,
+    interleave_policy_params,
+    make_policy_params,
+    phase_policy,
+    static_policy,
+)
+from repro.core.calibration import FREQS_GHZ
+from repro.core.fleet import kernel_compatible, slice_policy_lanes
+from repro.energy import EnergyController, TraceReplayBackend
+from repro.energy.backend import record_trace
+from repro.workload import (
+    ServingBackend,
+    TrafficGen,
+    bursty_diurnal_traffic,
+    bursty_traffic,
+    concat_intervals,
+    poisson_traffic,
+)
+
+K = len(FREQS_GHZ)
+MODEL = "qwen2.5-3b"
+
+
+# ---------------------------------------------------------------------------
+# traffic determinism
+# ---------------------------------------------------------------------------
+
+
+def _rows_equal(a, b):
+    assert len(a) == len(b)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.offsets_s, rb.offsets_s)
+        np.testing.assert_array_equal(ra.prompt_len, rb.prompt_len)
+        np.testing.assert_array_equal(ra.output_len, rb.output_len)
+
+
+@pytest.mark.parametrize("cfg", [poisson_traffic(8.0),
+                                 bursty_diurnal_traffic(5.0, seed=3)])
+def test_traffic_chunked_vs_oneshot_bit_identical(cfg):
+    one = TrafficGen(cfg, node_id=1).take(50)
+    for chunks in ([7, 13, 1, 29], [50], [25, 25]):
+        gen = TrafficGen(cfg, node_id=1)
+        rows = []
+        for c in chunks:
+            rows.extend(gen.take(c))
+        _rows_equal(rows, one)
+
+
+def test_traffic_skip_matches_generate():
+    cfg = bursty_traffic(6.0, seed=7)
+    full = TrafficGen(cfg, node_id=0).take(40)
+    gen = TrafficGen(cfg, node_id=0, start_interval=25)
+    assert gen.interval_index == 25
+    _rows_equal(gen.take(15), full[25:])
+
+
+def test_traffic_nodes_are_distinct_streams():
+    cfg = poisson_traffic(20.0, seed=1)
+    a = concat_intervals(TrafficGen(cfg, node_id=0).take(20), cfg.interval_s)
+    b = concat_intervals(TrafficGen(cfg, node_id=1).take(20), cfg.interval_s)
+    assert a.offsets_s.shape != b.offsets_s.shape or not np.array_equal(
+        a.offsets_s, b.offsets_s)
+
+
+def test_traffic_mean_rate_counts_burst_duty():
+    cfg = bursty_traffic(4.0, mult=3.0, on_mean=16.0, off_mean=48.0)
+    assert cfg.mean_rate_rps == pytest.approx(4.0 * 1.5)
+    rows = TrafficGen(cfg, node_id=0).take(4000)
+    emp = sum(len(r.offsets_s) for r in rows) / (4000 * cfg.interval_s)
+    assert emp == pytest.approx(cfg.mean_rate_rps, rel=0.1)
+
+
+# ---------------------------------------------------------------------------
+# ServingBackend: EnergyBackend contract + determinism
+# ---------------------------------------------------------------------------
+
+
+def _drive(be, schedule):
+    """Apply a (T, N) arm schedule, returning stacked counters."""
+    outs = []
+    for arms in schedule:
+        be.apply_arms(np.asarray(arms, np.int32))
+        be.advance()
+        outs.append(be.read_counters())
+    return outs
+
+
+def test_serving_backend_counters_monotone_and_deterministic():
+    traf = bursty_diurnal_traffic(seed=2)
+    rng = np.random.default_rng(0)
+    sched = rng.integers(0, K, size=(30, 2))
+    a = _drive(ServingBackend(traf, MODEL, n_nodes=2), sched)
+    b = _drive(ServingBackend(traf, MODEL, n_nodes=2), sched)
+    for ca, cb in zip(a, b):
+        for f in ("energy_j", "core_active_s", "uncore_active_s",
+                  "timestamp_s", "progress", "switches"):
+            np.testing.assert_array_equal(getattr(ca, f), getattr(cb, f))
+    for prev, cur in zip(a, a[1:]):
+        assert np.all(cur.energy_j >= prev.energy_j)
+        assert np.all(cur.progress >= prev.progress)
+        assert np.all(cur.timestamp_s > prev.timestamp_s)
+
+
+def test_serving_backend_local_slice_matches_full():
+    traf = poisson_traffic(10.0, seed=5)
+    sched = np.random.default_rng(1).integers(0, K, size=(20, 4))
+    full = _drive(ServingBackend(traf, MODEL, n_nodes=4), sched)[-1]
+    lo_be = ServingBackend(traf, MODEL, n_nodes=4).local_slice(0, 2)
+    hi_be = ServingBackend(traf, MODEL, n_nodes=4).local_slice(2, 4)
+    lo = _drive(lo_be, sched[:, :2])[-1]
+    hi = _drive(hi_be, sched[:, 2:])[-1]
+    for f in ("energy_j", "core_active_s", "uncore_active_s", "progress"):
+        np.testing.assert_allclose(
+            np.concatenate([getattr(lo, f), getattr(hi, f)]),
+            getattr(full, f), rtol=0, atol=0)
+
+
+def test_serving_backend_phase_split_lanes():
+    traf = bursty_diurnal_traffic(seed=4)
+    be = ServingBackend(traf, MODEL, n_nodes=2, phase_split=True)
+    assert be.n_nodes == 4 and be.n_serve_nodes == 2
+    # prefill lanes fixed at f_max, decode lanes at the lowest arm:
+    # decode stays cheap (bandwidth-bound) and progress stays ~1
+    sched = np.tile(np.array([K - 1, 0, K - 1, 0]), (60, 1))
+    c = _drive(be, sched)[-1]
+    e = c.energy_j
+    assert e.shape == (4,)
+    # decode-lane slowdown vs f_max is small: R = core/uncore ~ 1
+    r_dec = c.core_active_s[1::2] / np.maximum(c.uncore_active_s[1::2], 1e-9)
+    assert np.all(r_dec < 1.1)
+    # prefill lanes at f_max have R == 1 by construction
+    r_pre = c.core_active_s[0::2] / np.maximum(c.uncore_active_s[0::2], 1e-9)
+    np.testing.assert_allclose(r_pre, 1.0, rtol=1e-6)
+    # split lanes must require even-aligned slices
+    with pytest.raises(ValueError):
+        be.local_slice(1, 3)
+
+
+def test_serving_trace_roundtrip_replays_arm_for_arm(tmp_path):
+    """Live controller run -> record_trace on a fresh backend with the
+    SAME arm schedule -> save/load npz -> TraceReplayBackend replay
+    selects the same arms (observation-determined policy)."""
+    traf = bursty_diurnal_traffic(seed=6)
+    pol = energy_ucb()
+    live = EnergyController(pol, ServingBackend(traf, MODEL, n_nodes=2),
+                            use_kernel=False)
+    arms = []
+    for _ in range(40):
+        live.step()
+        arms.append(np.asarray(live.last_arms))
+    arms = np.stack(arms)
+
+    trace = record_trace(ServingBackend(traf, MODEL, n_nodes=2), arms)
+    path = str(tmp_path / "serve_trace.npz")
+    trace.save(path)
+    replay = TraceReplayBackend.load(path)
+    ctl = EnergyController(pol, replay, use_kernel=False)
+    replayed = []
+    for _ in range(40):
+        ctl.step()
+        replayed.append(np.asarray(ctl.last_arms))
+    np.testing.assert_array_equal(np.stack(replayed), arms)
+
+
+def test_serving_backend_fused_vs_vmapped_parity():
+    """The fused-vs-reference bit-parity contract extends to the
+    serving backend: interpret-mode fused fleet_step and the vmapped
+    path pick identical arms on a phase-split fleet."""
+    traf = bursty_diurnal_traffic(seed=8)
+    pol = phase_policy(2, prefill=make_policy_params(qos_delta=0.01),
+                       decode=make_policy_params(qos_delta=None))
+    assert kernel_compatible(pol)
+
+    def arms_with(use_kernel, interpret):
+        be = ServingBackend(traf, MODEL, n_nodes=2, phase_split=True)
+        ctl = EnergyController(pol, be, use_kernel=use_kernel,
+                               interpret=interpret)
+        out = []
+        for _ in range(25):
+            ctl.step()
+            out.append(np.asarray(ctl.last_arms))
+        return np.stack(out)
+
+    np.testing.assert_array_equal(arms_with(False, False),
+                                  arms_with(True, True))
+
+
+# ---------------------------------------------------------------------------
+# phase-lane helper
+# ---------------------------------------------------------------------------
+
+
+def test_interleave_policy_params_layout():
+    pre = make_policy_params(qos_delta=0.01, alpha=0.2)
+    dec = make_policy_params(qos_delta=None, alpha=0.05)
+    p = interleave_policy_params(pre, dec, 3)
+    np.testing.assert_allclose(p.qos_delta,
+                               [0.01, -1.0, 0.01, -1.0, 0.01, -1.0])
+    np.testing.assert_allclose(p.alpha, [0.2, 0.05] * 3)
+    assert p.prior_mu.shape == (6, K)
+    pol = phase_policy(3, prefill=pre, decode=dec)
+    sl = slice_policy_lanes(pol, 2, 6, 6)
+    np.testing.assert_allclose(sl.params.qos_delta, [0.01, -1.0, 0.01, -1.0])
+
+
+# ---------------------------------------------------------------------------
+# headline claims, small scale (the full-size run lives in
+# benchmarks/serve_energy.py)
+# ---------------------------------------------------------------------------
+
+
+def test_serving_headline_claims_small():
+    traf = bursty_diurnal_traffic()
+    t_run, warm = 240, 80
+
+    def run(policy, phase_split):
+        be = ServingBackend(traf, MODEL, n_nodes=1, phase_split=phase_split)
+        ctl = EnergyController(policy, be, use_kernel=False,
+                               record_history=False)
+        ctl.run(t_run)
+        e = float(be.read_counters().energy_j.sum())
+        rep = be.slo_report(warmup_s=warm * traf.interval_s)
+        return e / max(be.served_tokens, 1), rep["violation_rate"]
+
+    jpt_fmax, viol_fmax = run(static_policy(K - 1), False)
+    jpt_low, viol_low = run(static_policy(0), False)
+    jpt_ucb, _ = run(energy_ucb(), False)
+    jpt_pq, viol_pq = run(
+        phase_policy(1, prefill=make_policy_params(qos_delta=0.01),
+                     decode=make_policy_params(qos_delta=None)), True)
+
+    # static endpoints frame the trade: f_max compliant, lowest is not
+    assert viol_fmax <= 0.05 < viol_low
+    # unconstrained EnergyUCB saves energy vs the f_max baseline
+    assert jpt_ucb < jpt_fmax
+    # the phase-conditioned QoS config saves energy AND stays compliant
+    assert jpt_pq < jpt_fmax and viol_pq <= 0.05
