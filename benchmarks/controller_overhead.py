@@ -23,7 +23,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_us
-from repro.core import energy_ucb, get_app, make_env_params
+from repro.core import (
+    ActionSpace,
+    energy_ucb,
+    factored_energy_ucb,
+    get_app,
+    make_env_params,
+    make_factored_env_params,
+)
 from repro.core.fleet import Fleet
 from repro.core.simulator import Obs, env_init, env_step
 from repro.energy import EnergyController, SimBackend
@@ -111,12 +118,28 @@ def run(fast: bool = True, out_json=None, quick: bool = False):
                                         else " (interpret mode on CPU)")})
     print(f"fleet kernel step n={nk}: {us_kernel:.1f} us")
 
+    # the same fused step over a factored 9x3 ladder (flat K = 27):
+    # marginal-bonus reshapes plus 3x the per-arm state
+    kff = Fleet(factored_energy_ucb(ActionSpace(9, 3)), nk,
+                use_kernel=True, interpret=not ops.pallas_available())
+    kfstates = kff.init(jax.random.key(7))
+    kfarms = kff.select(kfstates, jax.random.key(8))
+    us_fk = time_us(
+        lambda: jax.block_until_ready(kff.step(kfstates, kfarms, kobs)[1]),
+        n=5,
+    )
+    rows.append({"name": f"fleet_step_kernel_factored_n{nk}",
+                 "us_per_call": round(us_fk, 2),
+                 "derived": "pallas 9x3" + ("" if ops.pallas_available()
+                                            else " (interpret mode on CPU)")})
+    print(f"fleet kernel step (factored 9x3) n={nk}: {us_fk:.1f} us")
+
     # end-to-end per-interval latency through the streaming control
     # plane (EnergyController over SimBackend): telemetry advance +
     # counter read + Obs derivation + policy step per decision interval
-    def ctrl_us(nn, use_kernel, label, reps, policy=pol):
+    def ctrl_us(nn, use_kernel, label, reps, policy=pol, env=p):
         ctl = EnergyController(
-            policy, SimBackend(p, n=nn), use_kernel=use_kernel,
+            policy, SimBackend(env, n=nn), use_kernel=use_kernel,
             interpret=use_kernel and not ops.pallas_available(),
             record_history=nn == 1,  # fleet streams skip the host sync
         )
@@ -154,6 +177,13 @@ def run(fast: bool = True, out_json=None, quick: bool = False):
         optimistic=jnp.where(jnp.arange(nf) % 5 == 0, 0.0, 1.0),
     ))
     ctrl_us(nf, True, "fused_mixed", kreps, policy=mixed)
+    # factored (core x uncore) lanes: the flat K = 9 * 3 = 27 product
+    # ladder with per-dimension bonuses/penalties, same fused launch —
+    # the VMEM story is linear in K, so this row tracks the 3x-K cost
+    space = ActionSpace(9, 3)
+    ctrl_us(nf, True, "fused_factored", kreps,
+            policy=factored_energy_ucb(space, uncore_penalty=0.01),
+            env=make_factored_env_params(get_app("tealeaf")))
 
     # megakernel episode scan (kernels/episode_scan) vs the per-interval
     # streaming loop on the same control plane: streaming pays T python

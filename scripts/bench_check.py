@@ -13,15 +13,25 @@ median of (current / baseline) across comparable rows, clamped to
 hide behind the factor (the median is robust), and a uniformly slower
 runner doesn't trip the guard.
 
-Skipped rows: names present in only one file (benchmarks grow), and
-rows whose ``derived`` mentions "interpret" — Pallas interpret mode on
-CPU is an emulation path whose latency is noise, not a product number.
+Coverage is part of the contract: a baseline row the fresh run failed
+to produce is a FAIL (a benchmark that silently stops emitting a row
+would otherwise never regress). The committed baseline spans several
+benchmark JSONs, so each CI invocation passes ``--scope PREFIX``
+(repeatable) naming the row families it is responsible for; baseline
+rows outside every scope are someone else's job and are skipped. With
+no ``--scope``, every baseline row is required (single-JSON layouts).
+Rows only in the CURRENT run stay informational (benchmarks grow).
+
+Also skipped: rows whose ``derived`` mentions "interpret" — Pallas
+interpret mode on CPU is an emulation path whose latency is noise, not
+a product number.
 
 Non-numeric ``us_per_call`` is an ERROR, not a skip: the benchmark
 contract (and this guard) depends on numeric rows.
 
   python scripts/bench_check.py BENCH_controller_overhead.json \\
-      --baseline BENCH_baseline.json [--factor 2.0]
+      --baseline BENCH_baseline.json [--factor 2.0] \\
+      [--scope controller_ --scope fleet_ ...]
 """
 from __future__ import annotations
 
@@ -46,13 +56,25 @@ def load_rows(path: str) -> dict:
     return rows
 
 
-def check(cur_path: str, base_path: str, factor: float) -> int:
+def check(cur_path: str, base_path: str, factor: float,
+          scopes=None) -> int:
     cur = load_rows(cur_path)
     base = load_rows(base_path)
     shared = sorted(set(cur) & set(base))
-    for name in sorted(set(cur) ^ set(base)):
-        where = "baseline" if name in base else "current"
-        print(f"skip {name}: only in {where}")
+
+    def in_scope(name: str) -> bool:
+        return scopes is None or any(name.startswith(s) for s in scopes)
+
+    for name in sorted(set(cur) - set(base)):
+        print(f"skip {name}: only in current (benchmarks grow)")
+    missing = []
+    for name in sorted(set(base) - set(cur)):
+        if in_scope(name):
+            print(f"MISSING {name}: in baseline but not produced by "
+                  f"this run")
+            missing.append(name)
+        else:
+            print(f"skip {name}: baseline row outside this run's scope")
 
     comparable = []
     for name in shared:
@@ -63,6 +85,10 @@ def check(cur_path: str, base_path: str, factor: float) -> int:
             continue
         comparable.append(name)
     if not comparable:
+        if missing:
+            print(f"FAIL: {len(missing)} baseline row(s) missing from "
+                  f"the fresh run: {', '.join(missing)}")
+            return 1
         print("no comparable rows; nothing to check")
         return 0
 
@@ -81,12 +107,16 @@ def check(cur_path: str, base_path: str, factor: float) -> int:
         if verdict == "REGRESSED":
             failures.append(name)
 
-    if failures:
-        print(f"FAIL: {len(failures)} row(s) regressed beyond "
-              f"{factor:.1f}x: {', '.join(failures)}")
+    if failures or missing:
+        if failures:
+            print(f"FAIL: {len(failures)} row(s) regressed beyond "
+                  f"{factor:.1f}x: {', '.join(failures)}")
+        if missing:
+            print(f"FAIL: {len(missing)} baseline row(s) missing from "
+                  f"the fresh run: {', '.join(missing)}")
         return 1
     print(f"PASS: {len(comparable)} row(s) within {factor:.1f}x of the "
-          f"speed-adjusted baseline")
+          f"speed-adjusted baseline; all in-scope baseline rows present")
     return 0
 
 
@@ -97,8 +127,15 @@ def main(argv=None) -> int:
                     help="committed baseline JSON to compare against")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max allowed slowdown after speed adjustment")
+    ap.add_argument("--scope", action="append", default=None,
+                    metavar="PREFIX",
+                    help="row-name prefix this run is responsible for "
+                         "(repeatable): matching baseline rows MUST be "
+                         "present in the current JSON. Default: every "
+                         "baseline row is required")
     args = ap.parse_args(argv)
-    return check(args.current, args.baseline, args.factor)
+    return check(args.current, args.baseline, args.factor,
+                 scopes=args.scope)
 
 
 if __name__ == "__main__":

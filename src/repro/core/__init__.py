@@ -8,6 +8,7 @@ from repro.core.calibration import (
     get_app,
 )
 from repro.core.policies import (
+    ActionSpace,
     Policy,
     PolicyFns,
     PolicyParams,
@@ -15,6 +16,8 @@ from repro.core.policies import (
     energy_ts,
     energy_ucb,
     eps_greedy,
+    factored_energy_ucb,
+    factored_ucb_fns,
     interleave_policy_params,
     make_policy_params,
     phase_policy,
@@ -22,6 +25,7 @@ from repro.core.policies import (
     stack_policy_params,
     static_policy,
     sweep_policy_params,
+    ucb_family_k_unc,
 )
 from repro.core.regret import (
     energy_regret_kj,
@@ -50,14 +54,16 @@ from repro.core.simulator import (
     env_step,
     expected_rewards,
     make_env_params,
+    make_factored_env_params,
     max_steps_hint,
     static_energy_kj,
 )
 
 __all__ = [
     "DEFAULT_ARM", "FREQS_GHZ", "TABLE1_KJ", "AppModel", "app_names", "get_app",
-    "Policy", "PolicyFns", "PolicyParams", "UCB_FNS",
+    "ActionSpace", "Policy", "PolicyFns", "PolicyParams", "UCB_FNS",
     "energy_ucb", "energy_ts", "eps_greedy", "rr_freq", "static_policy",
+    "factored_energy_ucb", "factored_ucb_fns", "ucb_family_k_unc",
     "interleave_policy_params", "make_policy_params", "phase_policy",
     "stack_policy_params", "sweep_policy_params",
     "drlcap", "rl_power", "make_reward_fn", "REWARD_VARIANTS",
@@ -65,6 +71,7 @@ __all__ = [
     "run_fleet_episode", "run_drlcap_protocol", "run_drlcap_cross",
     "engine_trace_count", "reset_engine_trace_count",
     "K_ARMS", "EnvParams", "Obs", "env_init", "env_step", "expected_rewards",
-    "make_env_params", "max_steps_hint", "static_energy_kj",
+    "make_env_params", "make_factored_env_params", "max_steps_hint",
+    "static_energy_kj",
     "saved_energy_kj", "energy_regret_kj", "summarize", "summarize_sweep",
 ]

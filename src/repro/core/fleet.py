@@ -22,8 +22,13 @@ data-parallel job) live in the unified rollout engine
   back to vmapped policy fns for non-UCB families. Hyperparameters are
   per-controller data, so a fleet can sweep alpha x lambda (and mix QoS
   budgets, window discounts, and warm-up variants) across its own
-  nodes in one launch. Fleets beyond one chip's VMEM pass ``mesh=`` to
-  shard the (N, K) state over the mesh's data axis
+  nodes in one launch. Factored (core x uncore) ladders
+  (policies.factored_energy_ucb) are part of the family: the policy's
+  static ``k_unc`` rides kernel dispatch (``Fleet.k_unc``) and the
+  ``lam_unc`` per-controller lane prices uncore moves (sentinel < 0 =
+  one shared penalty), over the SAME flat (N, K) state at
+  ``K = k_core * k_unc``. Fleets beyond one chip's VMEM pass ``mesh=``
+  to shard the (N, K) state over the mesh's data axis
   (repro.parallel.fleet.make_sharded_fleet_step).
 """
 from __future__ import annotations
@@ -34,7 +39,12 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies import UCB_FNS, Policy, PolicyParams
+from repro.core.policies import (
+    UCB_FNS,
+    Policy,
+    PolicyParams,
+    ucb_family_k_unc,
+)
 from repro.core.rollout import _row_where, run_fleet_episode  # noqa: F401
 from repro.core.simulator import Obs
 from repro.kernels import ops
@@ -54,8 +64,10 @@ def kernel_compatible(policy: Policy) -> bool:
     may be scalar or a per-controller (N,) lane (``prior_mu`` is (K,)
     per arm, or (N, K) per node); only non-UCB function sets — and
     config-stacked params with extra batch axes — take the vmapped
-    path."""
-    if policy.fns is not UCB_FNS:
+    path. Factored ladders (policies.factored_ucb_fns) are in the
+    family too: their static ``k_unc`` becomes a kernel shape static
+    and ``lam_unc`` rides as one more per-controller lane."""
+    if ucb_family_k_unc(policy.fns) is None:
         return False
     p: PolicyParams = policy.params
     return all(
@@ -97,6 +109,7 @@ def _params_axes(policy: Policy, n: int):
         gamma=ax(p.gamma), optimistic=ax(p.optimistic),
         prior_mu=0 if jnp.ndim(p.prior_mu) == 2 else None,
         prior_n=ax(p.prior_n), default_arm=ax(p.default_arm),
+        lam_unc=ax(p.lam_unc),
     )
 
 
@@ -128,6 +141,7 @@ class Fleet:
         self.policy = policy
         self.n = n
         self.interpret = interpret
+        self.k_unc = ucb_family_k_unc(policy.fns) or 1
         self._init, self._select, self._update = _vmapped_fns(
             policy.fns, _params_axes(policy, n)
         )
@@ -160,7 +174,7 @@ class Fleet:
             from repro.parallel.fleet import make_sharded_fleet_step
 
             self._sharded_step = make_sharded_fleet_step(
-                mesh, axis=mesh_axis, interpret=interpret
+                mesh, axis=mesh_axis, interpret=interpret, k_unc=self.k_unc
             )
 
     @property
@@ -187,12 +201,13 @@ class Fleet:
             p: PolicyParams = self.params
             step_fn = (self._sharded_step if self._sharded_step is not None
                        else functools.partial(ops.fleet_step,
+                                              k_unc=self.k_unc,
                                               interpret=self.interpret))
             mu, n, phat, pn, prev, t, nxt = step_fn(
                 states["mu"], states["n"], states["phat"], states["pn"],
                 states["prev"], states["t"], arms, obs.reward, obs.progress,
                 obs.active, p.alpha, p.lam, p.qos_delta, p.default_arm,
-                p.gamma, p.optimistic, p.prior_mu,
+                p.gamma, p.optimistic, p.prior_mu, p.lam_unc,
             )
             return (
                 {"mu": mu, "n": n, "phat": phat, "pn": pn, "prev": prev, "t": t},
@@ -238,7 +253,8 @@ class Fleet:
             states["mu"], states["n"], states["phat"], states["pn"],
             states["prev"], states["t"], arm, reward, progress, active,
             p.alpha, p.lam, p.qos_delta, p.default_arm, p.gamma,
-            p.optimistic, p.prior_mu, interpret=self.interpret,
+            p.optimistic, p.prior_mu, p.lam_unc, k_unc=self.k_unc,
+            interpret=self.interpret,
         )
         return (
             {"mu": mu, "n": n, "phat": phat, "pn": pn, "prev": prev, "t": t},
@@ -259,7 +275,8 @@ class Fleet:
             states["mu"], states["n"], states["phat"], states["pn"],
             states["prev"], states["t"], arm, env_rows, z, scan_env,
             p.alpha, p.lam, p.qos_delta, p.default_arm, p.gamma,
-            p.optimistic, p.prior_mu, t_start=t_start,
+            p.optimistic, p.prior_mu, p.lam_unc, k_unc=self.k_unc,
+            t_start=t_start,
             drift_every=drift_every, counter_obs=counter_obs,
             interpret=self.interpret,
         )

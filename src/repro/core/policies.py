@@ -36,8 +36,9 @@ by >3x (see tests/test_bandit.py).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, replace
-from typing import Any, Callable, NamedTuple, Optional, Sequence
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +83,32 @@ class Policy:
         return replace(self, params=params)
 
 
+class ActionSpace(NamedTuple):
+    """Static descriptor of the arm ladder: ``k_core`` core-frequency
+    steps x ``k_unc`` uncore/memory-frequency steps, flattened to one
+    arm index ``i = core * k_unc + unc`` so every (N, K) state array,
+    kernel, and trace format works unchanged at ``K = k_core * k_unc``.
+    ``k_unc == 1`` IS the scalar ladder (the degenerate case is the
+    common case, and it is bit-exact with the pre-factored code). Both
+    fields are Python ints — the descriptor is hashable and rides jit
+    static arguments."""
+
+    k_core: int
+    k_unc: int = 1
+
+    @property
+    def k(self) -> int:
+        return self.k_core * self.k_unc
+
+    def flat(self, core, unc):
+        """Flat arm index of a (core, unc) pair (array-friendly)."""
+        return core * self.k_unc + unc
+
+    def split(self, arm) -> Tuple[Any, Any]:
+        """(core, unc) decomposition of a flat arm (array-friendly)."""
+        return arm // self.k_unc, arm % self.k_unc
+
+
 def _masked_argmax(scores: jax.Array, feasible: jax.Array) -> jax.Array:
     neg = jnp.finfo(scores.dtype).min
     has_feasible = jnp.any(feasible)
@@ -109,16 +136,23 @@ class PolicyParams(NamedTuple):
                             warm-up (the 'w/o Opt. Ini.' ablation)
     - ``prior_mu/prior_n`` -> RooflineUCB warm start; prior_n == 0 with
                             prior_mu == mu_init reproduces the flat init
+    - ``lam_unc < 0``    -> one shared switching penalty on any move
+                            (factored ladders only consult this lane;
+                            ``lam_unc >= 0`` splits the cost into
+                            lam*1[core moved] + lam_unc*1[unc moved])
     """
 
     alpha: jax.Array  # () exploration coefficient
-    lam: jax.Array  # () switching penalty
+    lam: jax.Array  # () switching penalty (core dimension when factored)
     qos_delta: jax.Array  # () slowdown budget; negative disables
     gamma: jax.Array  # () sliding-window discount; >=1 disables
     optimistic: jax.Array  # () 0/1 flag
     prior_mu: jax.Array  # (K,) initial mean-reward estimates
     prior_n: jax.Array  # () prior pseudo-count
     default_arm: jax.Array  # () int32 reference arm (f_max)
+    # appended LAST so positional PolicyParams(*leaves) reconstructions
+    # of pre-factored 8-leaf checkpoints keep working via the default
+    lam_unc: jax.Array = -1.0  # () uncore penalty; < 0 = shared
 
 
 def make_policy_params(
@@ -132,6 +166,7 @@ def make_policy_params(
     window_discount: Optional[float] = None,
     prior_mu: Optional[jax.Array] = None,
     prior_n: float = 0.0,
+    lam_unc: Optional[float] = None,
 ) -> PolicyParams:
     pm = (
         jnp.full((k,), mu_init, jnp.float32)
@@ -147,6 +182,7 @@ def make_policy_params(
         prior_mu=pm,
         prior_n=jnp.float32(prior_n),
         default_arm=jnp.int32(default_arm),
+        lam_unc=jnp.float32(-1.0 if lam_unc is None else lam_unc),
     )
 
 
@@ -191,18 +227,25 @@ def phase_policy(
     prefill: Optional[PolicyParams] = None,
     decode: Optional[PolicyParams] = None,
     name: Optional[str] = None,
+    space: Optional["ActionSpace"] = None,
 ) -> Policy:
     """EnergyUCB with independent prefill/decode hyperparameter lanes
     for a ``phase_split=True`` :class:`~repro.workload.serving_backend
     .ServingBackend` of ``n_pairs`` nodes. Defaults both phases to the
     stock config; pass e.g. ``decode=make_policy_params(qos_delta=None)``
     to leave the bandwidth-bound phase unconstrained while the
-    compute-bound prefill lane keeps a tight slowdown budget."""
-    pp = prefill if prefill is not None else make_policy_params()
-    dp = decode if decode is not None else make_policy_params()
+    compute-bound prefill lane keeps a tight slowdown budget. A factored
+    ``space`` swaps in the (core x uncore) select rule — pass params
+    built at ``k=space.k`` (e.g. from ``factored_energy_ucb(...).params``)
+    so the lanes match the flat product ladder."""
+    dk = {} if space is None else {"k": space.k, "default_arm": space.k - 1}
+    pp = prefill if prefill is not None else make_policy_params(**dk)
+    dp = decode if decode is not None else make_policy_params(**dk)
+    fns = (UCB_FNS if space is None
+           else factored_ucb_fns(space.k_core, space.k_unc))
     return Policy(
         name or "EnergyUCB-phase",
-        UCB_FNS,
+        fns,
         interleave_policy_params(pp, dp, n_pairs),
     )
 
@@ -220,14 +263,41 @@ def ucb_init(params: PolicyParams, key) -> PyTree:
     }
 
 
-def ucb_select(params: PolicyParams, state: PyTree, key) -> jax.Array:
-    """SA-UCB_i = mu_i + alpha*sqrt(ln t / max(1, n_i)) - lam*1{i != prev},
-    restricted to the QoS-feasible set when qos_delta >= 0."""
-    del key
+def _select_bonus_penalty(params: PolicyParams, state: PyTree, arms, t,
+                          k_unc: int):
+    """Exploration bonus and switching penalty of the select rule, with
+    the factored/scalar split on the STATIC ``k_unc`` (the scalar branch
+    keeps the pre-factored expressions verbatim, so ``k_unc == 1`` is
+    bit-exact with the seed policy). Factored ladders mirror the fused
+    kernel: per-dimension bonuses over the marginal pull counts
+    (integer-valued float32 sums — exact), and switching cost
+    ``lam*1[core moved] + lam_unc*1[unc moved]`` with the sentinel
+    ``lam_unc < 0`` = one shared penalty on any move."""
+    if k_unc == 1:
+        bonus = params.alpha * jnp.sqrt(
+            jnp.log(t) / jnp.maximum(state["n"], 1.0)
+        )
+        return bonus, params.lam * (arms != state["prev"])
+    k = state["n"].shape[-1]
+    m = state["n"].reshape(k // k_unc, k_unc)
+    lt = jnp.log(t)
+    b_core = params.alpha * jnp.sqrt(lt / jnp.maximum(m.sum(1), 1.0))
+    b_unc = params.alpha * jnp.sqrt(lt / jnp.maximum(m.sum(0), 1.0))
+    bonus = (b_core[:, None] + b_unc[None, :]).reshape(k)
+    prev = state["prev"]
+    shared = params.lam * (arms != prev)
+    core_moved = (arms // k_unc) != (prev // k_unc)
+    unc_moved = (arms % k_unc) != (prev % k_unc)
+    split = params.lam * core_moved + params.lam_unc * unc_moved
+    return bonus, jnp.where(params.lam_unc < 0.0, shared, split)
+
+
+def _ucb_select_impl(params: PolicyParams, state: PyTree, *,
+                     k_unc: int = 1) -> jax.Array:
     k = state["mu"].shape[-1]
     arms = jnp.arange(k)
     t = jnp.maximum(state["t"] + 1.0, 2.0)
-    bonus = params.alpha * jnp.sqrt(jnp.log(t) / jnp.maximum(state["n"], 1.0))
+    bonus, penalty = _select_bonus_penalty(params, state, arms, t, k_unc)
     # sliding-window optimism: under a discount, an arm's effective count
     # decays toward 0 between pulls, but the bonus is floored at n=1 — a
     # noise-corrupted stale estimate would never be revisited. Shrink the
@@ -238,7 +308,7 @@ def ucb_select(params: PolicyParams, state: PyTree, key) -> jax.Array:
     w0 = 0.25
     shrunk = (state["n"] * state["mu"] + w0 * params.prior_mu) / (state["n"] + w0)
     mu_eff = jnp.where(params.gamma < 1.0, shrunk, state["mu"])
-    sa = mu_eff + bonus - params.lam * (arms != state["prev"])
+    sa = mu_eff + bonus - penalty
     # round-robin warm-up over all K arms (the naive-UCB1 ablation)
     untried = state["n"] < 1.0
     warm = jnp.where(untried, 1e9 - arms * 1.0, -1e9)
@@ -258,6 +328,13 @@ def ucb_select(params: PolicyParams, state: PyTree, key) -> jax.Array:
         | (slowdown <= params.qos_delta)
     )
     return _masked_argmax(sa, feasible)
+
+
+def ucb_select(params: PolicyParams, state: PyTree, key) -> jax.Array:
+    """SA-UCB_i = mu_i + alpha*sqrt(ln t / max(1, n_i)) - lam*1{i != prev},
+    restricted to the QoS-feasible set when qos_delta >= 0."""
+    del key
+    return _ucb_select_impl(params, state, k_unc=1)
 
 
 def ucb_update(params: PolicyParams, state: PyTree, arm, obs: Obs) -> PyTree:
@@ -300,6 +377,86 @@ def ucb_update(params: PolicyParams, state: PyTree, arm, obs: Obs) -> PyTree:
 
 
 UCB_FNS = PolicyFns(ucb_init, ucb_select, ucb_update)
+
+
+@functools.lru_cache(maxsize=None)
+def factored_ucb_fns(k_core: int, k_unc: int) -> PolicyFns:
+    """The EnergyUCB function set over a factored ``k_core x k_unc``
+    ladder. ``k_unc`` is STATIC (it changes expression shapes), so each
+    factorization gets its own cached PolicyFns singleton — jit keys on
+    function identity, and every policy sharing a factorization shares
+    one trace. ``k_unc == 1`` returns UCB_FNS itself: the scalar ladder
+    is the degenerate factorization, bit-exactly. ``update`` and
+    ``init`` are the scalar functions unchanged (the flat (K,) state is
+    factorization-blind; only select decomposes the index)."""
+    if k_core < 1 or k_unc < 1:
+        raise ValueError(f"need k_core, k_unc >= 1, got {k_core}x{k_unc}")
+    if k_unc == 1:
+        return UCB_FNS
+
+    def select(params: PolicyParams, state: PyTree, key) -> jax.Array:
+        del key
+        return _ucb_select_impl(params, state, k_unc=k_unc)
+
+    select.__name__ = select.__qualname__ = f"ucb_select_f{k_core}x{k_unc}"
+    select.k_unc = k_unc
+    return PolicyFns(ucb_init, select, ucb_update)
+
+
+def ucb_family_k_unc(fns: PolicyFns) -> Optional[int]:
+    """``k_unc`` when ``fns`` is the fused-kernel-exact EnergyUCB family
+    (1 for the scalar UCB_FNS, the factory's static otherwise); None for
+    every other policy family — the one place kernel dispatch learns a
+    policy's factorization."""
+    if fns is UCB_FNS:
+        return 1
+    if (fns.init is ucb_init and fns.update is ucb_update
+            and getattr(fns.select, "k_unc", 0) > 1):
+        return int(fns.select.k_unc)
+    return None
+
+
+def factored_energy_ucb(
+    space: ActionSpace,
+    alpha: float = DEFAULT_ALPHA,
+    switching_penalty: float = DEFAULT_LAM,
+    uncore_penalty: Optional[float] = None,
+    mu_init: float = 0.0,
+    optimistic_init: bool = True,
+    qos_delta: Optional[float] = None,
+    default_arm: Optional[int] = None,
+    window_discount: Optional[float] = None,
+    prior_mu: Optional[jax.Array] = None,
+    prior_n: float = 0.0,
+    name: Optional[str] = None,
+) -> Policy:
+    """EnergyUCB over a factored (core, uncore) product ladder: the flat
+    ``K = k_core * k_unc`` state rides every existing code path, select
+    decomposes the index for per-dimension bonuses and switching costs.
+    ``uncore_penalty=None`` keeps the sentinel (one shared penalty on
+    any move — how a scalar config behaves on a product ladder);
+    ``default_arm`` defaults to the (f_max core, f_max uncore) corner
+    ``K - 1``, matching the scalar f_max convention."""
+    k = space.k
+    params = make_policy_params(
+        k=k,
+        alpha=alpha,
+        switching_penalty=switching_penalty,
+        mu_init=mu_init,
+        optimistic_init=optimistic_init,
+        qos_delta=qos_delta,
+        default_arm=k - 1 if default_arm is None else default_arm,
+        window_discount=window_discount,
+        prior_mu=prior_mu,
+        prior_n=prior_n,
+        lam_unc=uncore_penalty,
+    )
+    nm = name or (
+        f"EnergyUCB-{space.k_core}x{space.k_unc}"
+        + (f"-QoS{qos_delta}" if qos_delta is not None else "")
+        + (f"-SW{window_discount}" if window_discount else "")
+    )
+    return Policy(nm, factored_ucb_fns(space.k_core, space.k_unc), params)
 
 
 def energy_ucb(

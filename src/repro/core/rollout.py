@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies import UCB_FNS, Policy, PolicyFns
+from repro.core.policies import UCB_FNS, Policy, PolicyFns, ucb_family_k_unc
 from repro.core.simulator import (
     EnvParams,
     EnvState,
@@ -311,13 +311,14 @@ def _fleet_noise(k_run, max_steps, n_nodes):
     return jax.vmap(per_step)(ks)
 
 
-@functools.partial(jax.jit, static_argnames=("n",))
-def _flat_ucb_start(flat, n):
-    """Vmapped init + first select over per-node UCB params (keys are
-    dummies: the UCB fns are deterministic)."""
+@functools.partial(jax.jit, static_argnames=("fns", "n"))
+def _flat_ucb_start(fns, flat, n):
+    """Vmapped init + first select over per-node UCB-family params (keys
+    are dummies: the UCB fns are deterministic; ``fns`` is static so the
+    scalar and each factored function set get their own trace)."""
     ks = jax.random.split(jax.random.key(0), n)
-    states = jax.vmap(UCB_FNS.init)(flat, ks)
-    return states, jax.vmap(UCB_FNS.select)(flat, states, ks)
+    states = jax.vmap(fns.init)(flat, ks)
+    return states, jax.vmap(fns.select)(flat, states, ks)
 
 
 @functools.partial(jax.jit, static_argnames=("n_configs", "n_repeats"))
@@ -348,7 +349,8 @@ def _run_sweep_episode(policy, stacked, params, key, n_repeats, max_steps):
     from repro.kernels import ops
     from repro.kernels.episode_scan import env_rows_init, make_scan_env
 
-    if policy.fns is not UCB_FNS:
+    ku = ucb_family_k_unc(policy.fns)
+    if ku is None:
         raise ValueError(
             f"policy {policy.name!r} is not kernel-exact; episode_scan "
             "sweeps cover the fused-UCB family only"
@@ -362,14 +364,14 @@ def _run_sweep_episode(policy, stacked, params, key, n_repeats, max_steps):
     ms = int(max_steps)
     z4 = _engine_noise(jax.random.split(key, r), ms)  # (R, ms, 4)
     zz = jnp.tile(jnp.transpose(z4, (1, 0, 2)), (1, c, 1))  # (ms, N, 4)
-    states, arm0 = _flat_ucb_start(flat, n)
+    states, arm0 = _flat_ucb_start(policy.fns, flat, n)
     (_, env_f, arms) = ops.episode_scan_sim(
         states["mu"], states["n"], states["phat"], states["pn"],
         states["prev"], states["t"], arm0, env_rows_init(n),
         tuple(zz[..., i] for i in range(4)), make_scan_env([params]),
         flat.alpha, flat.lam, flat.qos_delta, flat.default_arm,
-        flat.gamma, flat.optimistic, flat.prior_mu,
-        counter_obs=False,
+        flat.gamma, flat.optimistic, flat.prior_mu, flat.lam_unc,
+        k_unc=ku, counter_obs=False,
     )
     out = _sweep_episode_metrics(env_f, arms, params, c, r)
     return {k: np.asarray(v) for k, v in out.items()}
@@ -454,7 +456,8 @@ def _run_fleet_episode_scan(policy, params, key, n_nodes, max_steps):
     from repro.kernels import ops
     from repro.kernels.episode_scan import env_rows_init, make_scan_env
 
-    if policy.fns is not UCB_FNS:
+    ku = ucb_family_k_unc(policy.fns)
+    if ku is None:
         raise ValueError(
             f"policy {policy.name!r} is not kernel-exact; episode_scan "
             "fleets cover the fused-UCB family only"
@@ -468,14 +471,14 @@ def _run_fleet_episode_scan(policy, params, key, n_nodes, max_steps):
         ),
         p,
     )
-    states, arm0 = _flat_ucb_start(flat, n)
+    states, arm0 = _flat_ucb_start(policy.fns, flat, n)
     zz = _fleet_noise(kr, ms, n)  # (ms, N, 4)
     (_, env_f, arms) = ops.episode_scan_sim(
         states["mu"], states["n"], states["phat"], states["pn"],
         states["prev"], states["t"], arm0, env_rows_init(n),
         tuple(zz[..., i] for i in range(4)), make_scan_env([params]),
         p.alpha, p.lam, p.qos_delta, p.default_arm, p.gamma, p.optimistic,
-        p.prior_mu, counter_obs=False,
+        p.prior_mu, p.lam_unc, k_unc=ku, counter_obs=False,
     )
     return _fleet_episode_metrics(env_f, arms, params)
 

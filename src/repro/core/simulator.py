@@ -30,7 +30,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.calibration import (
-    DEFAULT_ARM,
     F_MAX,
     FREQS_GHZ,
     SWITCH_ENERGY_J,
@@ -107,10 +106,99 @@ def make_env_params(app: AppModel, dt_s: float = 0.010) -> EnvParams:
     )
 
 
+# Default relative uncore (HBM/interconnect) ladder, ascending with the
+# max setting LAST so the flat arm K-1 = (f_max core, max uncore) keeps
+# the scalar f_max / QoS-reference convention.
+UNC_FREQS = (0.6, 0.8, 1.0)
+# Uncore share of an app's pinned power budget: a floor for the fabric
+# everything pays plus a term growing with memory intensity (1 - c) —
+# the roofline-style calibration: bandwidth-bound apps spend more of
+# their power moving bytes.
+UNC_POWER_BASE = 0.12
+UNC_POWER_MEM = 0.45
+GAMMA_UNC = 2.0
+
+
+def make_factored_env_params(
+    app: AppModel,
+    dt_s: float = 0.010,
+    unc_freqs=UNC_FREQS,
+    unc_power_frac=None,
+) -> EnvParams:
+    """Product-ladder environment: ``K = K_core * K_unc`` flat arms with
+    the uncore axis MINOR (arm ``i`` = core ``i // K_unc``, uncore
+    ``i % K_unc``, matching the policies/kernels decomposition), so
+    every (K,)-table consumer — env_step, SimBackend, the sim-fused
+    episode scan — runs unchanged on a factored ladder.
+
+    Physics relative to :func:`make_env_params` (its tables ARE the
+    ``y = 1`` column, exactly):
+
+    - time: ``t_rel(f, y) = c * F_MAX/f + (1 - c)/y`` — the bandwidth
+      term stretches as the uncore clock drops, the compute term does
+      not (compute-bound apps are ~flat in uncore).
+    - power: ``P(f, y) = P_used(f) * (1 - u_frac * (1 - y^GAMMA_UNC))``
+      where ``P_used`` is the energy-table-pinned scalar power and
+      ``u_frac`` is the uncore power share, calibrated from the app's
+      memory intensity (``UNC_POWER_BASE + UNC_POWER_MEM * (1 - c)``)
+      unless given. At ``y = 1`` the correction term is exactly zero.
+    - counters: UU tracks copy-engine busy time ``(1 - c)/y`` over the
+      stretched interval — dropping uncore on a bandwidth-bound app
+      drives UU up, which the reward R = UC/UU penalizes, exactly the
+      paper's proxy generalized to two knobs.
+
+    ``unc_freqs`` must ascend to 1.0 so arm ``K - 1`` is the
+    (f_max, max-uncore) corner (the scalar default-arm convention).
+    """
+    y = np.asarray(unc_freqs, np.float64)
+    if y[-1] != 1.0 or np.any(np.diff(y) <= 0) or np.any(y <= 0):
+        raise ValueError(
+            f"unc_freqs must ascend to 1.0, got {tuple(unc_freqs)}"
+        )
+    if unc_power_frac is None:
+        unc_power_frac = UNC_POWER_BASE + UNC_POWER_MEM * (1.0 - app.c)
+    u = float(np.clip(unc_power_frac, 0.0, 0.6))
+    f = np.asarray(FREQS_GHZ)
+    # flat (K_core * K_unc,) tables, uncore minor
+    ff = np.repeat(f, len(y))
+    yy = np.tile(y, len(f))
+    t_rel = app.c * F_MAX / ff + (1 - app.c) / yy
+    t_abs = app.t_ref_s * t_rel
+    p_used_scalar = np.asarray(app.e_table_kj) / (
+        app.t_ref_s * (app.c * F_MAX / f + (1 - app.c))
+    )  # kW, the y = 1 pinned power per core step
+    p_used = np.repeat(p_used_scalar, len(y)) * (
+        1.0 - u * (1.0 - yy ** GAMMA_UNC)
+    )
+    uc = np.full(ff.shape, app.uc_base)
+    uu = np.clip((1 - app.c) / yy / t_rel * app.uc_base, 1e-3, 1.0)
+    progress = dt_s / t_abs
+    e_interval = p_used * dt_s  # kJ
+    r_scale = float(e_interval[-1] * uc[-1] / uu[-1] * 1e3)
+    return EnvParams(
+        freqs=jnp.asarray(ff, jnp.float32),
+        p_used_kw=jnp.asarray(p_used, jnp.float32),
+        t_rel=jnp.asarray(t_rel, jnp.float32),
+        progress=jnp.asarray(progress, jnp.float32),
+        uc=jnp.asarray(uc, jnp.float32),
+        uu=jnp.asarray(uu, jnp.float32),
+        t_ref_s=jnp.float32(app.t_ref_s),
+        dt_s=jnp.float32(dt_s),
+        noise_energy=jnp.float32(app.noise_energy),
+        noise_util=jnp.float32(app.noise_util),
+        early_noise=jnp.float32(app.early_noise),
+        early_tau=jnp.float32(app.early_tau),
+        reward_scale=jnp.float32(r_scale),
+        e_interval_kj=jnp.asarray(e_interval, jnp.float32),
+    )
+
+
 def env_init(params: EnvParams) -> EnvState:
+    # the top-of-ladder corner: arm K-1 == DEFAULT_ARM on the scalar
+    # ladder, and the (f_max, max-uncore) corner on factored ladders
     return EnvState(
         remaining=jnp.float32(1.0),
-        prev_arm=jnp.int32(DEFAULT_ARM),
+        prev_arm=jnp.int32(params.freqs.shape[0] - 1),
         t=jnp.int32(0),
         energy_kj=jnp.float32(0.0),
         time_s=jnp.float32(0.0),
@@ -176,4 +264,4 @@ def static_energy_kj(params: EnvParams, arm: int) -> float:
 
 def max_steps_hint(params: EnvParams, slack: float = 1.35) -> int:
     worst = float(jnp.max(1.0 / params.progress))
-    return int(worst * slack) + K_ARMS
+    return int(worst * slack) + int(params.progress.shape[0])

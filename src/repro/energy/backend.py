@@ -39,6 +39,18 @@ from repro.core.simulator import EnvParams, EnvState, env_init, env_step
 
 PyTree = Any
 
+# On-disk trace format (TraceReplayBackend.save/load):
+#   1 — the pre-factored format: scalar ladder, no version field. Loaders
+#       treat a version-less npz as v1.
+#   2 — adds `trace_version` and `uncore_ladder` (the factored product
+#       ladder's uncore rungs; `[1.0]` for scalar recordings). Per-arm
+#       counter semantics are unchanged — flat product arms reuse the
+#       scalar arm column layout — so v1 files load unchanged, and the
+#       lam_unc < 0 policy sentinel (one shared switching penalty) means
+#       replaying a v1 trace through a factored policy needs no
+#       translation either.
+TRACE_VERSION = 2
+
 
 class Counters(NamedTuple):
     """Monotonic per-node counters, all shaped (N,). The GEOPM-shaped
@@ -423,7 +435,8 @@ class TraceReplayBackend(EnergyBackend):
     def __init__(self, trace: Counters, ladder_ghz: Sequence[float],
                  interval_s: float, variable_interval: bool = False,
                  reward_scale: float = 1.0,
-                 baseline: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+                 baseline: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                 uncore_ladder: Optional[Sequence[float]] = None):
         if np.asarray(trace.energy_j).ndim != 2:
             raise ValueError("trace counters must be stacked (T+1, N)")
         self.trace = trace
@@ -432,6 +445,11 @@ class TraceReplayBackend(EnergyBackend):
         self._variable = bool(variable_interval)
         self._rs = reward_scale
         self._baseline = baseline
+        self._uncore = (tuple(float(y) for y in uncore_ladder)
+                        if uncore_ladder is not None else (1.0,))
+        if self._uncore[-1] != 1.0:
+            raise ValueError(
+                f"uncore_ladder must ascend to 1.0, got {self._uncore}")
         self._cursor = 0
         self.requested_arms: list = []
 
@@ -447,6 +465,13 @@ class TraceReplayBackend(EnergyBackend):
     @property
     def ladder_ghz(self):
         return self._ladder
+
+    @property
+    def uncore_ladder(self) -> Tuple[float, ...]:
+        """Uncore rungs of the recorded (flat product) ladder; ``(1.0,)``
+        for scalar recordings, so ``len(uncore_ladder)`` is the k_unc to
+        replay the trace's arm columns with."""
+        return self._uncore
 
     @property
     def interval_s(self) -> float:
@@ -499,12 +524,15 @@ class TraceReplayBackend(EnergyBackend):
             baseline=None if baseline is None else tuple(
                 np.asarray(b)[lo:hi] for b in baseline
             ),
+            uncore_ladder=self._uncore,
         )
 
     # -- persistence ---------------------------------------------------
     def save(self, path: str) -> None:
         np.savez(
             path,
+            trace_version=TRACE_VERSION,
+            uncore_ladder=np.asarray(self._uncore),
             ladder_ghz=np.asarray(self._ladder),
             interval_s=self._interval_s,
             variable_interval=self._variable,
@@ -514,6 +542,14 @@ class TraceReplayBackend(EnergyBackend):
             baseline_t=np.zeros(0) if self._baseline is None else self._baseline[1],
             **{f: np.asarray(getattr(self.trace, f)) for f in Counters._fields},
         )
+        # explicit round-trip check: the version and ladder layout a
+        # future loader will dispatch on must read back exactly (savez
+        # appends .npz when the suffix is missing)
+        p = path if str(path).endswith(".npz") else f"{path}.npz"
+        with np.load(p) as z:
+            if (int(z["trace_version"]) != TRACE_VERSION
+                    or tuple(z["uncore_ladder"].tolist()) != self._uncore):
+                raise IOError(f"trace round-trip failed for {p}")
 
     @classmethod
     def load(cls, path: str,
@@ -521,8 +557,17 @@ class TraceReplayBackend(EnergyBackend):
         """Load a saved trace; ``nodes=(lo, hi)`` keeps only that column
         stripe, so a host replaying its shard of a big recording never
         materializes the full-fleet backend (the multi-process replay
-        path — see :func:`trace_n_nodes` for sizing the stripes)."""
+        path — see :func:`trace_n_nodes` for sizing the stripes).
+        Version-less files are the v1 (scalar-ladder) format and load
+        unchanged; files newer than :data:`TRACE_VERSION` fail loudly."""
         z = np.load(path)
+        version = int(z["trace_version"]) if "trace_version" in z.files else 1
+        if not 1 <= version <= TRACE_VERSION:
+            raise ValueError(
+                f"trace {path} has format version {version}; this build "
+                f"reads versions 1..{TRACE_VERSION}")
+        unc = (z["uncore_ladder"].tolist()
+               if "uncore_ladder" in z.files else None)
         sl = slice(None) if nodes is None else slice(*nodes)
         trace = Counters(*(z[f][:, sl] for f in Counters._fields))
         rs = z["reward_scale"]
@@ -535,6 +580,7 @@ class TraceReplayBackend(EnergyBackend):
             interval_s=float(z["interval_s"]),
             variable_interval=bool(z["variable_interval"]),
             reward_scale=rs[sl] if rs.ndim >= 1 else rs, baseline=baseline,
+            uncore_ladder=unc,
         )
 
 
@@ -569,4 +615,7 @@ def record_trace(backend: EnergyBackend, arm_schedule) -> TraceReplayBackend:
         variable_interval=backend.variable_interval,
         reward_scale=np.asarray(backend.reward_scale),
         baseline=baseline,
+        # factored backends expose their uncore rungs; scalar backends
+        # record the degenerate (1.0,) ladder
+        uncore_ladder=getattr(backend, "uncore_ladder", None),
     )

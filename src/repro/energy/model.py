@@ -35,6 +35,13 @@ from repro.core.simulator import EnvParams
 P_IDLE_W = 75.0
 P_DYN_W = 125.0
 GAMMA = 2.2
+# Uncore (HBM + fabric) dynamic envelope for the factored ladder: HBM
+# stacks are a comparable-sized lever to core DVFS on memory-heavy
+# phases. The scalar model folds this into its pinned power; the
+# factored model exposes it as a y-controlled term.
+P_UNC_W = 60.0
+GAMMA_UNC = 2.0
+UNC_FREQS = (0.6, 0.8, 1.0)  # ascending; max LAST (arm K-1 convention)
 
 
 @dataclass(frozen=True)
@@ -67,6 +74,41 @@ class StepEnergyModel:
             "uu": max(t_other / t, 1e-3),
         }
 
+    def step_factored(self, core_arm: int, unc_arm: int,
+                      unc_freqs=UNC_FREQS) -> Dict[str, float]:
+        """One step at relative core clock x and relative uncore clock
+        ``y = unc_freqs[unc_arm]``: HBM time stretches as 1/y (bandwidth
+        tracks the memory clock), the collective term does not (ICI has
+        its own clock domain), and the chip pays an extra
+        ``P_UNC_W * y^GAMMA_UNC * uu`` uncore-dynamic term. Unlike the
+        scalar :meth:`step` (which folds uncore power into its pinned
+        envelope), both the y = 1 column and every other column carry
+        the explicit uncore term — build the scalar BASELINE for a
+        factored comparison from ``unc_freqs=(1.0,)``, not from
+        :meth:`step`, so the two ladders share one power model."""
+        x = float(FREQS_GHZ[core_arm]) / F_MAX
+        y = float(unc_freqs[unc_arm])
+        t_comp = self.t_compute_s / x
+        t_other = max(self.t_memory_s / y, self.t_collective_s)
+        t = max(t_comp, t_other, 1e-9)
+        # activity counts work issued at the reference uncore clock, not
+        # stall time: stretching HBM must not bill core-dynamic power
+        # (coincides with the scalar expression at y = 1)
+        act_other = max(self.t_memory_s, self.t_collective_s)
+        activity = (t_comp + act_other) / (2 * t)
+        uu = max(t_other / t, 1e-3)
+        p_chip = (self.p_idle_w + self.p_dyn_w * (x ** self.gamma) * activity
+                  + P_UNC_W * (y ** GAMMA_UNC) * uu)
+        return {
+            "step_time_s": t,
+            "power_w": p_chip * self.n_chips,
+            "energy_j": p_chip * self.n_chips * t,
+            "core_active_s": t_comp,
+            "uncore_active_s": t_other,
+            "uc": t_comp / t,
+            "uu": uu,
+        }
+
     def static_energy_j(self, arm: int) -> float:
         return self.step(arm)["energy_j"] * self.steps_total
 
@@ -97,6 +139,56 @@ def env_params_from_roofline(
     r_scale = float(e_kj[-1] * 1e3 * uc[-1] / uu[-1])
     return EnvParams(
         freqs=jnp.asarray(FREQS_GHZ, jnp.float32),
+        p_used_kw=jnp.asarray(p_kw, jnp.float32),
+        t_rel=jnp.asarray(t / t[-1], jnp.float32),
+        progress=jnp.asarray(progress, jnp.float32),
+        uc=jnp.asarray(uc, jnp.float32),
+        uu=jnp.asarray(uu, jnp.float32),
+        t_ref_s=jnp.float32(t[-1] * model.steps_total),
+        dt_s=jnp.float32(t[-1]),
+        noise_energy=jnp.float32(noise_energy),
+        noise_util=jnp.float32(noise_util),
+        early_noise=jnp.float32(early_noise),
+        early_tau=jnp.float32(early_tau),
+        reward_scale=jnp.float32(r_scale),
+        e_interval_kj=jnp.asarray(e_kj, jnp.float32),
+    )
+
+
+def factored_env_params_from_roofline(
+    model: StepEnergyModel,
+    unc_freqs=UNC_FREQS,
+    noise_energy: float = 0.03,
+    noise_util: float = 0.05,
+    early_noise: float = 4.0,
+    early_tau: float = 30.0,
+) -> EnvParams:
+    """Package a framework cell as a PRODUCT-ladder bandit environment:
+    flat ``K = K_core * K_unc`` tables with the uncore axis minor (arm
+    ``i`` = core ``i // K_unc``, uncore ``i % K_unc``), built from
+    :meth:`StepEnergyModel.step_factored`. ``unc_freqs=(1.0,)`` is the
+    matching scalar-core-ladder baseline (same power model, uncore
+    pinned at max) — the fair comparison for factored-vs-scalar energy.
+    The decision interval and reward scale come from the top corner
+    (f_max, max uncore), mirroring the scalar convention."""
+    y = np.asarray(unc_freqs, np.float64)
+    if y[-1] != 1.0 or np.any(np.diff(y) <= 0) or np.any(y <= 0):
+        raise ValueError(
+            f"unc_freqs must ascend to 1.0, got {tuple(unc_freqs)}"
+        )
+    kc, ku = len(FREQS_GHZ), len(y)
+    rows = [model.step_factored(i, j, unc_freqs)
+            for i in range(kc) for j in range(ku)]
+    t = np.array([r["step_time_s"] for r in rows])
+    p_kw = np.array([r["power_w"] for r in rows]) / 1e3
+    uc = np.array([r["uc"] for r in rows])
+    uu = np.array([r["uu"] for r in rows])
+    dt = float(t[-1])
+    e_kj = p_kw * dt
+    progress = dt / (t * model.steps_total)
+    r_scale = float(e_kj[-1] * 1e3 * uc[-1] / uu[-1])
+    return EnvParams(
+        freqs=jnp.asarray(np.repeat(FREQS_GHZ, ku), jnp.float32),
         p_used_kw=jnp.asarray(p_kw, jnp.float32),
         t_rel=jnp.asarray(t / t[-1], jnp.float32),
         progress=jnp.asarray(progress, jnp.float32),

@@ -15,9 +15,22 @@ kernel families cover it:
 - ``flash_attention`` / ``ssd_scan`` — the workload-side kernels the
   energy model's roofline cells are calibrated against.
 
+Factored (core x uncore) ladders ride the SAME kernels: the flat arm
+index ``i = core * k_unc + unc`` keeps every (N, K) state array and
+trace format at ``K = k_core * k_unc``, and the static ``k_unc``
+selects per-dimension UCB bonuses (marginal pull counts) and split
+switching penalties (``lam``/``lam_unc`` lanes; per-controller
+sentinel ``lam_unc < 0`` = one shared penalty). ``k_unc == 1`` is a
+compile-time branch back to the scalar expressions verbatim, so the
+degenerate case is bit-exact with the pre-factored kernels — there is
+ONE copy of the controller arithmetic (``fleet_ucb.fleet_step_math``),
+shared by the per-step kernel, the megakernel, the XLA fallbacks, and
+mirrored only in the ``ref`` oracles.
+
 ``ops`` is the only entry point callers should use: it pads/broadcasts
 per-controller lanes, jits, and dispatches Pallas-on-TPU /
 interpret-mode-on-CPU (tests) / pure-XLA fallbacks (CPU production)
 per call. ``ref`` holds the pure-jnp oracles every kernel is
-bit-tested against (tests/test_kernels.py, tests/test_episode_scan.py).
+bit-tested against (tests/test_kernels.py, tests/test_episode_scan.py,
+tests/test_factored.py).
 """

@@ -234,10 +234,10 @@ _STATE = ("mu", "n", "phat", "pn", "prev", "t", "arm")
 
 def _episode_trace_kernel(
     mu0, n0, phat0, pn0, prev0, t0, arm0,
-    alpha, lam, qos, defr, gamma, opt, prior,
+    alpha, lam, qos, defr, gamma, opt, prior, lam_unc,
     r_s, p_s, a_s,
     mu_o, n_o, phat_o, pn_o, prev_o, t_o, arm_o, arms_o,
-    *, k,
+    *, k, k_unc,
 ):
     carry = (mu_o, n_o, phat_o, pn_o, prev_o, t_o, arm_o)
 
@@ -252,7 +252,7 @@ def _episode_trace_kernel(
         mu_o[...], n_o[...], phat_o[...], pn_o[...], prev_o[...], t_o[...],
         arm, r_s[0, :], p_s[0, :], a_s[0, :],
         alpha[...], lam[...], qos[...], defr[...], gamma[...], opt[...],
-        prior[...], k=k,
+        prior[...], lam_unc[...], k=k, k_unc=k_unc,
     )
     for o, v in zip(carry, out):
         o[...] = v
@@ -268,7 +268,9 @@ def episode_scan_trace(
     mu, n, phat, pn, prev, t, arm,  # initial controller state + held arm
     reward, progress, active,  # (T, N) observation columns
     alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,  # lanes
+    lam_unc=None,  # (N,) uncore switching penalty; sentinel < 0 = shared
     *,
+    k_unc: int = 1,
     block_n: int = 1024,
     interpret: bool = False,
 ):
@@ -278,6 +280,8 @@ def episode_scan_trace(
     ``arms_run[0] == arm`` and the final selection is ``next_arm``)."""
     nn, k = mu.shape
     tt = reward.shape[0]
+    if lam_unc is None:
+        lam_unc = jnp.full((nn,), -1.0, jnp.float32)
     block_n = min(block_n, nn)
     pad = (-nn) % block_n
     if pad:  # padded controllers are inactive: state rides through frozen
@@ -289,10 +293,11 @@ def episode_scan_trace(
             _pad(alpha, pad), _pad(lam, pad), _pad(qos, pad, -1.0),
             _pad(def_arm, pad), _pad(gamma, pad, 1.0),
             _pad(optimistic, pad, 1.0), _pad(prior_mu, pad),
-            block_n=block_n, interpret=interpret,
+            _pad(lam_unc, pad, -1.0),
+            k_unc=k_unc, block_n=block_n, interpret=interpret,
         )
         return tuple(o[:nn] for o in out), arms[:, :nn]
-    kernel = functools.partial(_episode_trace_kernel, k=k)
+    kernel = functools.partial(_episode_trace_kernel, k=k, k_unc=k_unc)
     row = pl.BlockSpec((block_n,), lambda i, tb: (i,))
     mat = pl.BlockSpec((block_n, k), lambda i, tb: (i, 0))
     stream = pl.BlockSpec((1, block_n), lambda i, tb: (tb, i))
@@ -301,7 +306,7 @@ def episode_scan_trace(
         kernel,
         grid=(nn // block_n, tt),
         in_specs=[mat, mat, mat, mat, row, row, row,
-                  row, row, row, row, row, row, mat,
+                  row, row, row, row, row, row, mat, row,
                   stream, stream, stream],
         out_specs=(mat, mat, mat, mat, row, row, row, stream),
         out_shape=(
@@ -316,7 +321,7 @@ def episode_scan_trace(
         ),
         interpret=interpret,
     )(mu, n, phat, pn, prev, t, arm,
-      alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,
+      alpha, lam, qos, def_arm, gamma, optimistic, prior_mu, lam_unc,
       reward, progress, active)
     return tuple(state), arms
 
@@ -328,14 +333,14 @@ def episode_scan_trace(
 
 def _episode_sim_kernel(
     mu0, n0, phat0, pn0, prev0, t0, arm0,
-    alpha, lam, qos, defr, gamma, opt, prior,
+    alpha, lam, qos, defr, gamma, opt, prior, lam_unc,
     rem0, eprev0, et0, en0, tm0, sw0, cs0, us0,
     ze_s, zuc_s, zuu_s, zp_s,
     e_tab, p_tab, uc_tab, uu_tab, scal,
     mu_o, n_o, phat_o, pn_o, prev_o, t_o, arm_o,
     rem_o, eprev_o, et_o, en_o, tm_o, sw_o, cs_o, us_o,
     arms_o,
-    *, k, t_start, drift_every, counter_obs,
+    *, k, k_unc, t_start, drift_every, counter_obs,
 ):
     carry = (mu_o, n_o, phat_o, pn_o, prev_o, t_o, arm_o)
     env_carry = (rem_o, eprev_o, et_o, en_o, tm_o, sw_o, cs_o, us_o)
@@ -364,7 +369,7 @@ def _episode_sim_kernel(
         mu_o[...], n_o[...], phat_o[...], pn_o[...], prev_o[...], t_o[...],
         arm, reward, prog, act,
         alpha[...], lam[...], qos[...], defr[...], gamma[...], opt[...],
-        prior[...], k=k,
+        prior[...], lam_unc[...], k=k, k_unc=k_unc,
     )
     for o, v in zip(carry + env_carry, out + tuple(env2)):
         o[...] = v
@@ -381,7 +386,9 @@ def episode_scan_sim(
     z: Tuple[jax.Array, jax.Array, jax.Array, jax.Array],  # 4x (T, N)
     scan_env: ScanEnv,
     alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,
+    lam_unc=None,  # (N,) uncore switching penalty; sentinel < 0 = shared
     *,
+    k_unc: int = 1,
     t_start: int = 0,
     drift_every: int = 0,
     counter_obs: bool = True,
@@ -396,6 +403,8 @@ def episode_scan_sim(
     nn, k = mu.shape
     z_e, z_uc, z_uu, z_p = z
     tt = z_e.shape[0]
+    if lam_unc is None:
+        lam_unc = jnp.full((nn,), -1.0, jnp.float32)
     block_n = min(block_n, nn)
     pad = (-nn) % block_n
     if pad:
@@ -408,13 +417,14 @@ def episode_scan_sim(
             _pad(alpha, pad), _pad(lam, pad), _pad(qos, pad, -1.0),
             _pad(def_arm, pad), _pad(gamma, pad, 1.0),
             _pad(optimistic, pad, 1.0), _pad(prior_mu, pad),
-            t_start=t_start, drift_every=drift_every,
+            _pad(lam_unc, pad, -1.0),
+            k_unc=k_unc, t_start=t_start, drift_every=drift_every,
             counter_obs=counter_obs, block_n=block_n, interpret=interpret,
         )
         return (tuple(o[:nn] for o in out),
                 EnvRows(*(leaf[:nn] for leaf in env2)), arms[:, :nn])
     kernel = functools.partial(
-        _episode_sim_kernel, k=k, t_start=int(t_start),
+        _episode_sim_kernel, k=k, k_unc=k_unc, t_start=int(t_start),
         drift_every=int(drift_every), counter_obs=bool(counter_obs),
     )
     p = scan_env.e_tab.shape[0]
@@ -430,7 +440,7 @@ def episode_scan_sim(
         kernel,
         grid=(nn // block_n, tt),
         in_specs=[mat, mat, mat, mat, row, row, row,
-                  row, row, row, row, row, row, mat,
+                  row, row, row, row, row, row, mat, row,
                   row, row, row, row, row, row, row, row,
                   stream, stream, stream, stream,
                   tabk, tabk, tabk, tabk, tabs],
@@ -444,7 +454,7 @@ def episode_scan_sim(
         ),
         interpret=interpret,
     )(mu, n, phat, pn, prev, t, arm,
-      alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,
+      alpha, lam, qos, def_arm, gamma, optimistic, prior_mu, lam_unc,
       *env_rows, z_e, z_uc, z_uu, z_p, *scan_env)
     return (tuple(state), EnvRows(rem, eprev, et, en, tm, sw, cs, us), arms)
 
@@ -460,10 +470,12 @@ def episode_scan_sim(
 _STATE_ARGS = tuple(range(7))
 
 
-@functools.partial(jax.jit, donate_argnums=_STATE_ARGS)
+@functools.partial(jax.jit, static_argnames=("k_unc",),
+                   donate_argnums=_STATE_ARGS)
 def xla_episode_trace(mu, n, phat, pn, prev, t, arm,
                       reward, progress, active,
-                      alpha, lam, qos, def_arm, gamma, optimistic, prior_mu):
+                      alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,
+                      lam_unc=None, *, k_unc: int = 1):
     """lax.scan over ``fleet_step_math`` — the trace-fed fallback.
     Same return contract as :func:`episode_scan_trace`."""
     k = mu.shape[1]
@@ -472,7 +484,7 @@ def xla_episode_trace(mu, n, phat, pn, prev, t, arm,
         r, p, a = cols
         out = fleet_step_math(
             *carry, r, p, a, alpha, lam, qos, def_arm, gamma, optimistic,
-            prior_mu, k=k,
+            prior_mu, lam_unc, k=k, k_unc=k_unc,
         )
         return out, carry[6]
 
@@ -490,14 +502,14 @@ def xla_episode_trace(mu, n, phat, pn, prev, t, arm,
 # until absorb_episode swaps in the post-scan rows
 @functools.partial(
     jax.jit,
-    static_argnames=("t_start", "drift_every", "counter_obs"),
+    static_argnames=("t_start", "drift_every", "counter_obs", "k_unc"),
     donate_argnums=_STATE_ARGS,
 )
 def xla_episode_sim(mu, n, phat, pn, prev, t, arm,
                     env_rows: EnvRows, z, scan_env: ScanEnv,
                     alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,
-                    *, t_start: int = 0, drift_every: int = 0,
-                    counter_obs: bool = True):
+                    lam_unc=None, *, t_start: int = 0, drift_every: int = 0,
+                    counter_obs: bool = True, k_unc: int = 1):
     """lax.scan over ``sim_env_obs`` + ``fleet_step_math`` — the
     sim-fused fallback. Same return contract as
     :func:`episode_scan_sim`."""
@@ -518,7 +530,7 @@ def xla_episode_sim(mu, n, phat, pn, prev, t, arm,
         )
         out = fleet_step_math(
             *state, r, p, a, alpha, lam, qos, def_arm, gamma, optimistic,
-            prior_mu, k=k,
+            prior_mu, lam_unc, k=k, k_unc=k_unc,
         )
         return (out, env2), state[6]
 

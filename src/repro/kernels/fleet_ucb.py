@@ -38,6 +38,16 @@ lanes are bit-exact with the un-flagged kernel). One program handles a
 BLOCK_N-controller stripe with all K arms resident in VMEM; K is small
 so the argmax/one-hot/feasibility reductions stay in registers.
 
+Factored action spaces (core x uncore ladders) flatten to the same
+(N, K) state with ``K = k_core * k_unc`` and a STATIC ``k_unc``: flat
+arm ``i`` decomposes as ``(i // k_unc, i % k_unc)`` and the switching
+cost becomes ``lam * 1[core moved] + lam_unc * 1[uncore moved]`` via the
+per-controller ``lam_unc`` lane (sentinel ``lam_unc < 0`` = one shared
+penalty on any move). ``k_unc == 1`` compiles the VERBATIM scalar-ladder
+expressions, so scalar fleets are bit-exact with the pre-factored
+kernel, and mixed scalar/factored fleets share one launch through the
+sentinel lane.
+
 Validated in interpret mode against kernels.ref.ref_fleet_select /
 ref_fleet_step on ragged fleet sizes (tests/test_kernels.py).
 """
@@ -50,13 +60,52 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _sa_scores(mu, cnt, prev, t, alpha, lam):
+def _switch_penalty(arms, prev, lam, lam_unc, dtype, k_unc):
+    """(BN, K) switching cost. Scalar ladders (``k_unc == 1``, a Python
+    static) keep the single-penalty expression VERBATIM — the factored
+    refactor must be bit-exact for every pre-existing fleet. Factored
+    ladders decompose the flat index as (core, unc) = divmod(i, k_unc)
+    and charge each dimension that moved; sentinel ``lam_unc < 0`` is a
+    per-controller lane meaning "one shared penalty on any move" (how
+    legacy checkpoints with no uncore lane replay inside a factored
+    fleet)."""
+    if k_unc == 1:
+        return lam[:, None] * (arms != prev[:, None]).astype(dtype)
+    shared = lam[:, None] * (arms != prev[:, None]).astype(dtype)
+    core_moved = (arms // k_unc) != (prev[:, None] // k_unc)
+    unc_moved = (arms % k_unc) != (prev[:, None] % k_unc)
+    split = (lam[:, None] * core_moved.astype(dtype)
+             + lam_unc[:, None] * unc_moved.astype(dtype))
+    return jnp.where(lam_unc[:, None] < 0.0, shared, split)
+
+
+def _ucb_bonus(cnt, tt, alpha, k_unc):
+    """(BN, K) exploration bonus. Scalar ladders keep the per-arm joint
+    bonus VERBATIM. Factored ladders use per-dimension bonuses over the
+    MARGINAL pull counts (core marginal = sum over uncore settings and
+    vice versa — exact sums of integer-valued float32 counts, so the
+    reduction order cannot perturb bits): a core frequency explored
+    under any uncore setting discounts that core's bonus everywhere,
+    so the controller explores ~K_core + K_unc dimensions instead of
+    K_core * K_unc joint cells."""
+    lt = jnp.log(tt)[:, None]
+    if k_unc == 1:
+        return alpha[:, None] * jnp.sqrt(lt / jnp.maximum(cnt, 1.0))
+    nn, k = cnt.shape
+    m = cnt.reshape(nn, k // k_unc, k_unc)
+    b_core = alpha[:, None] * jnp.sqrt(lt / jnp.maximum(m.sum(2), 1.0))
+    b_unc = alpha[:, None] * jnp.sqrt(lt / jnp.maximum(m.sum(1), 1.0))
+    return (b_core[:, :, None] + b_unc[:, None, :]).reshape(nn, k)
+
+
+def _sa_scores(mu, cnt, prev, t, alpha, lam, lam_unc=None, *, k_unc=1):
     """(BN, K) SA-UCB scores; t is the post-update step counter and gets
     the same +1 lookahead the policy's select applies."""
     tt = jnp.maximum(t + 1.0, 2.0)
-    bonus = alpha[:, None] * jnp.sqrt(jnp.log(tt)[:, None] / jnp.maximum(cnt, 1.0))
+    bonus = _ucb_bonus(cnt, tt, alpha, k_unc)
     arms = jax.lax.broadcasted_iota(jnp.int32, mu.shape, 1)
-    return mu + bonus - lam[:, None] * (arms != prev[:, None]).astype(mu.dtype)
+    return mu + bonus - _switch_penalty(arms, prev, lam, lam_unc,
+                                        mu.dtype, k_unc)
 
 
 def _first_argmax(sa, k):
@@ -97,17 +146,17 @@ def _feasible_argmax(sa, feasible, k):
 
 
 def _fleet_select_kernel(mu_ref, n_ref, prev_ref, t_ref, alpha_ref, lam_ref,
-                         arm_ref, *, k):
+                         lam_unc_ref, arm_ref, *, k, k_unc):
     sa = _sa_scores(
         mu_ref[...], n_ref[...], prev_ref[...], t_ref[...],
-        alpha_ref[...], lam_ref[...],
+        alpha_ref[...], lam_ref[...], lam_unc_ref[...], k_unc=k_unc,
     )
     arm_ref[...] = _first_argmax(sa, k)
 
 
 def fleet_step_math(
     mu, cnt, phat, pn, prev, t, arm, reward, prog, act,
-    alpha, lam, qos, def_arm, g, opt, prior, *, k,
+    alpha, lam, qos, def_arm, g, opt, prior, lam_unc=None, *, k, k_unc=1,
 ):
     """The per-interval update-then-select dataflow on (BN, K)/(BN,)
     values — THE one copy of the fused-step arithmetic. Both the
@@ -147,7 +196,7 @@ def fleet_step_math(
     w0 = 0.25
     shrunk = (n2 * mu2 + w0 * prior) / (n2 + w0)
     mu_eff = jnp.where((g < 1.0)[:, None], shrunk, mu2)
-    sa = _sa_scores(mu_eff, n2, prev2, t2, alpha, lam)
+    sa = _sa_scores(mu_eff, n2, prev2, t2, alpha, lam, lam_unc, k_unc=k_unc)
     untried = n2 < 1.0
     warm = jnp.where(untried, 1e9 - arms.astype(mu.dtype), -1e9)
     any_untried = jnp.max(jnp.where(untried, 1.0, 0.0), axis=1) > 0.5
@@ -160,14 +209,15 @@ def fleet_step_math(
 def _fleet_step_kernel(
     mu_ref, n_ref, phat_ref, pn_ref, prev_ref, t_ref,
     arm_ref, r_ref, prog_ref, act_ref, alpha_ref, lam_ref, qos_ref, def_ref,
-    gamma_ref, opt_ref, prior_ref,
-    mu_o, n_o, phat_o, pn_o, prev_o, t_o, next_o, *, k,
+    gamma_ref, opt_ref, prior_ref, lam_unc_ref,
+    mu_o, n_o, phat_o, pn_o, prev_o, t_o, next_o, *, k, k_unc,
 ):
     out = fleet_step_math(
         mu_ref[...], n_ref[...], phat_ref[...], pn_ref[...],
         prev_ref[...], t_ref[...], arm_ref[...], r_ref[...], prog_ref[...],
         act_ref[...], alpha_ref[...], lam_ref[...], qos_ref[...], def_ref[...],
-        gamma_ref[...], opt_ref[...], prior_ref[...], k=k,
+        gamma_ref[...], opt_ref[...], prior_ref[...], lam_unc_ref[...],
+        k=k, k_unc=k_unc,
     )
     for ref, val in zip((mu_o, n_o, phat_o, pn_o, prev_o, t_o, next_o), out):
         ref[...] = val
@@ -185,32 +235,36 @@ def fleet_select(
     prev: jax.Array,  # (N,) previous arm
     t: jax.Array,  # (N,) step counters
     alpha: jax.Array,  # (N,) per-controller exploration coefficient
-    lam: jax.Array,  # (N,) per-controller switching penalty
+    lam: jax.Array,  # (N,) per-controller (core) switching penalty
+    lam_unc: jax.Array = None,  # (N,) uncore penalty; sentinel < 0 = shared
     *,
+    k_unc: int = 1,  # static uncore-ladder width (K = k_core * k_unc)
     block_n: int = 1024,
     interpret: bool = False,
 ) -> jax.Array:
     nn, k = mu.shape
+    if lam_unc is None:
+        lam_unc = jnp.full((nn,), -1.0, jnp.float32)
     block_n = min(block_n, nn)
     pad = (-nn) % block_n
     if pad:  # ragged fleets: pad to a whole stripe, slice after
         out = fleet_select(
             _pad(mu, pad), _pad(n, pad, 1), _pad(prev, pad), _pad(t, pad, 2.0),
-            _pad(alpha, pad), _pad(lam, pad),
-            block_n=block_n, interpret=interpret,
+            _pad(alpha, pad), _pad(lam, pad), _pad(lam_unc, pad, -1.0),
+            k_unc=k_unc, block_n=block_n, interpret=interpret,
         )
         return out[:nn]
-    kernel = functools.partial(_fleet_select_kernel, k=k)
+    kernel = functools.partial(_fleet_select_kernel, k=k, k_unc=k_unc)
     row = pl.BlockSpec((block_n,), lambda i: (i,))
     mat = pl.BlockSpec((block_n, k), lambda i: (i, 0))
     return pl.pallas_call(
         kernel,
         grid=(nn // block_n,),
-        in_specs=[mat, mat, row, row, row, row],
+        in_specs=[mat, mat, row, row, row, row, row],
         out_specs=row,
         out_shape=jax.ShapeDtypeStruct((nn,), jnp.int32),
         interpret=interpret,
-    )(mu, n, prev, t, alpha, lam)
+    )(mu, n, prev, t, alpha, lam, lam_unc)
 
 
 def fleet_step(
@@ -231,12 +285,16 @@ def fleet_step(
     gamma: jax.Array,  # (N,) sliding-window discount; sentinel >= 1 = stationary
     optimistic: jax.Array,  # (N,) sentinel >= 0.5 = optimistic init, else warm-up
     prior_mu: jax.Array,  # (N, K) optimistic prior the shrink decays toward
+    lam_unc: jax.Array = None,  # (N,) uncore penalty; sentinel < 0 = shared
     *,
+    k_unc: int = 1,  # static uncore-ladder width (K = k_core * k_unc)
     block_n: int = 1024,
     interpret: bool = False,
 ):
     """Fused update+select. Returns (mu, n, phat, pn, prev, t, next_arm)."""
     nn, k = mu.shape
+    if lam_unc is None:
+        lam_unc = jnp.full((nn,), -1.0, jnp.float32)
     block_n = min(block_n, nn)
     pad = (-nn) % block_n
     if pad:  # padded controllers are inactive: state rides through frozen
@@ -247,10 +305,11 @@ def fleet_step(
             _pad(alpha, pad), _pad(lam, pad), _pad(qos, pad, -1.0),
             _pad(def_arm, pad), _pad(gamma, pad, 1.0),
             _pad(optimistic, pad, 1.0), _pad(prior_mu, pad),
-            block_n=block_n, interpret=interpret,
+            _pad(lam_unc, pad, -1.0),
+            k_unc=k_unc, block_n=block_n, interpret=interpret,
         )
         return tuple(o[:nn] for o in out)
-    kernel = functools.partial(_fleet_step_kernel, k=k)
+    kernel = functools.partial(_fleet_step_kernel, k=k, k_unc=k_unc)
     row = pl.BlockSpec((block_n,), lambda i: (i,))
     mat = pl.BlockSpec((block_n, k), lambda i: (i, 0))
     f32 = jnp.float32
@@ -258,7 +317,7 @@ def fleet_step(
         kernel,
         grid=(nn // block_n,),
         in_specs=[mat, mat, mat, mat, row, row, row, row, row, row, row, row,
-                  row, row, row, row, mat],
+                  row, row, row, row, mat, row],
         out_specs=(mat, mat, mat, mat, row, row, row),
         out_shape=(
             jax.ShapeDtypeStruct((nn, k), f32),
@@ -271,4 +330,4 @@ def fleet_step(
         ),
         interpret=interpret,
     )(mu, n, phat, pn, prev, t, arm, reward, progress, active, alpha, lam,
-      qos, def_arm, gamma, optimistic, prior_mu)
+      qos, def_arm, gamma, optimistic, prior_mu, lam_unc)

@@ -48,22 +48,23 @@ def _per_controller(x, n):
     return jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n,))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fleet_select(mu, n, prev, t, alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, *,
-                 interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("interpret", "k_unc"))
+def fleet_select(mu, n, prev, t, alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM,
+                 lam_unc=-1.0, *, k_unc: int = 1, interpret: bool = False):
     interp = interpret or not pallas_available()
     nn = mu.shape[0]
     return _fleet_select(
         mu, n, prev, t, _per_controller(alpha, nn), _per_controller(lam, nn),
+        _per_controller(lam_unc, nn), k_unc=k_unc,
         interpret=interp,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "k_unc"))
 def fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
                alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, qos_delta=-1.0,
                default_arm=None, gamma=1.0, optimistic=1.0, prior_mu=None,
-               *, interpret: bool = False):
+               lam_unc=-1.0, *, k_unc: int = 1, interpret: bool = False):
     """Fused per-interval fleet controller step (update then select,
     restricted to each controller's QoS feasible set; the ``qos_delta``
     sentinel < 0 disables the constraint per controller, so mixed
@@ -74,7 +75,11 @@ def fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
     stationary) discounts the reward and progress statistics and shrinks
     stale means toward ``prior_mu`` at select time, and ``optimistic``
     (sentinel >= 0.5 = optimistic init) flags the round-robin warm-up
-    ablation. Returns (mu, n, phat, pn, prev, t, next_arm)."""
+    ablation. Factored ladders (static ``k_unc > 1``) decompose each arm
+    as ``(core, unc) = divmod(arm, k_unc)`` and charge per-dimension
+    switching penalties ``lam``/``lam_unc``; the per-controller sentinel
+    ``lam_unc < 0`` keeps the single shared penalty. Returns
+    (mu, n, phat, pn, prev, t, next_arm)."""
     interp = interpret or not pallas_available()
     nn, k = mu.shape
     if default_arm is None:
@@ -92,6 +97,7 @@ def fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
         jnp.broadcast_to(jnp.asarray(default_arm, jnp.int32), (nn,)),
         _per_controller(gamma, nn), _per_controller(optimistic, nn),
         jnp.broadcast_to(jnp.asarray(prior_mu, jnp.float32), (nn, k)),
+        _per_controller(lam_unc, nn), k_unc=k_unc,
         interpret=interp,
     )
 
@@ -101,17 +107,17 @@ def fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
 # --------------------------------------------------------------------------
 
 _pl_episode_trace = jax.jit(
-    _ep.episode_scan_trace, static_argnames=("block_n", "interpret")
+    _ep.episode_scan_trace, static_argnames=("k_unc", "block_n", "interpret")
 )
 _pl_episode_sim = jax.jit(
     _ep.episode_scan_sim,
-    static_argnames=("t_start", "drift_every", "counter_obs", "block_n",
-                     "interpret"),
+    static_argnames=("t_start", "drift_every", "counter_obs", "k_unc",
+                     "block_n", "interpret"),
 )
 
 
 def _episode_lanes(nn, k, alpha, lam, qos_delta, default_arm, gamma,
-                   optimistic, prior_mu):
+                   optimistic, prior_mu, lam_unc):
     """Broadcast the per-controller lanes ONCE per episode (the per-step
     ``fleet_step`` wrapper re-broadcasts them every interval; the scan
     amortizes that and the ragged-N padding over the whole episode)."""
@@ -125,6 +131,7 @@ def _episode_lanes(nn, k, alpha, lam, qos_delta, default_arm, gamma,
         jnp.broadcast_to(jnp.asarray(default_arm, jnp.int32), (nn,)),
         _per_controller(gamma, nn), _per_controller(optimistic, nn),
         jnp.broadcast_to(jnp.asarray(prior_mu, jnp.float32), (nn, k)),
+        _per_controller(lam_unc, nn),
     )
 
 
@@ -132,8 +139,8 @@ def episode_scan_trace(mu, n, phat, pn, prev, t, arm,
                        reward, progress, active,
                        alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, qos_delta=-1.0,
                        default_arm=None, gamma=1.0, optimistic=1.0,
-                       prior_mu=None, *, interpret: bool = False,
-                       block_n: int = 1024):
+                       prior_mu=None, lam_unc=-1.0, *, k_unc: int = 1,
+                       interpret: bool = False, block_n: int = 1024):
     """T fused controller steps in one dispatch, trace-fed: per-interval
     observation columns ``reward/progress/active`` are (T, N). Routes to
     the Pallas megakernel on TPU (or with ``interpret=True``), else to
@@ -144,23 +151,25 @@ def episode_scan_trace(mu, n, phat, pn, prev, t, arm,
     the arm held entering interval t."""
     nn, k = mu.shape
     lanes = _episode_lanes(nn, k, alpha, lam, qos_delta, default_arm, gamma,
-                           optimistic, prior_mu)
+                           optimistic, prior_mu, lam_unc)
     obs = (jnp.asarray(reward, jnp.float32),
            jnp.asarray(progress, jnp.float32),
            jnp.asarray(active, jnp.float32))
     arm = jnp.asarray(arm, jnp.int32)
     if pallas_available() or interpret:
         return _pl_episode_trace(
-            mu, n, phat, pn, prev, t, arm, *obs, *lanes,
+            mu, n, phat, pn, prev, t, arm, *obs, *lanes, k_unc=k_unc,
             block_n=block_n, interpret=interpret or not pallas_available(),
         )
-    return _ep.xla_episode_trace(mu, n, phat, pn, prev, t, arm, *obs, *lanes)
+    return _ep.xla_episode_trace(mu, n, phat, pn, prev, t, arm, *obs, *lanes,
+                                 k_unc=k_unc)
 
 
 def episode_scan_sim(mu, n, phat, pn, prev, t, arm, env_rows, z, scan_env,
                      alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM, qos_delta=-1.0,
                      default_arm=None, gamma=1.0, optimistic=1.0,
-                     prior_mu=None, *, t_start: int = 0,
+                     prior_mu=None, lam_unc=-1.0, *, k_unc: int = 1,
+                     t_start: int = 0,
                      drift_every: int = 0, counter_obs: bool = True,
                      interpret: bool = False, block_n: int = 1024):
     """T fused env+controller intervals in one dispatch, sim-fused: the
@@ -180,17 +189,17 @@ def episode_scan_sim(mu, n, phat, pn, prev, t, arm, env_rows, z, scan_env,
     # most P*drift_every compiled variants (and stationary runs one)
     t_start = int(t_start) % (drift_every * p) if p > 1 else 0
     lanes = _episode_lanes(nn, k, alpha, lam, qos_delta, default_arm, gamma,
-                           optimistic, prior_mu)
+                           optimistic, prior_mu, lam_unc)
     arm = jnp.asarray(arm, jnp.int32)
     if pallas_available() or interpret:
         return _pl_episode_sim(
             mu, n, phat, pn, prev, t, arm, env_rows, z, scan_env, *lanes,
-            t_start=t_start, drift_every=int(drift_every),
+            k_unc=k_unc, t_start=t_start, drift_every=int(drift_every),
             counter_obs=bool(counter_obs), block_n=block_n,
             interpret=interpret or not pallas_available(),
         )
     return _ep.xla_episode_sim(
         mu, n, phat, pn, prev, t, arm, env_rows, z, scan_env, *lanes,
-        t_start=t_start, drift_every=int(drift_every),
+        k_unc=k_unc, t_start=t_start, drift_every=int(drift_every),
         counter_obs=bool(counter_obs),
     )

@@ -45,23 +45,56 @@ def ref_chunk_scan(states, decay, init_state):
     return prev, final
 
 
-def _ref_sa_scores(mu, n, prev, t, alpha, lam):
+def _ref_switch_penalty(arms, prev, lam, lam_unc, dtype, k_unc):
+    """Mirror of fleet_ucb._switch_penalty: scalar ladders (static
+    ``k_unc == 1``) keep the verbatim single-penalty expression; factored
+    ladders charge each (core, unc) = divmod(arm, k_unc) dimension that
+    moved, with sentinel ``lam_unc < 0`` = one shared penalty."""
+    if k_unc == 1:
+        return lam[:, None] * (arms != prev[:, None]).astype(dtype)
+    shared = lam[:, None] * (arms != prev[:, None]).astype(dtype)
+    core_moved = (arms // k_unc) != (prev[:, None] // k_unc)
+    unc_moved = (arms % k_unc) != (prev[:, None] % k_unc)
+    split = (lam[:, None] * core_moved.astype(dtype)
+             + lam_unc[:, None] * unc_moved.astype(dtype))
+    return jnp.where(lam_unc[:, None] < 0.0, shared, split)
+
+
+def _ref_ucb_bonus(cnt, tt, alpha, k_unc):
+    """Mirror of fleet_ucb._ucb_bonus: joint per-arm bonus on scalar
+    ladders (static ``k_unc == 1``), per-dimension bonuses over the
+    marginal pull counts on factored ladders."""
+    lt = jnp.log(tt)[:, None]
+    if k_unc == 1:
+        return alpha[:, None] * jnp.sqrt(lt / jnp.maximum(cnt, 1.0))
+    nn, k = cnt.shape
+    m = cnt.reshape(nn, k // k_unc, k_unc)
+    b_core = alpha[:, None] * jnp.sqrt(lt / jnp.maximum(m.sum(2), 1.0))
+    b_unc = alpha[:, None] * jnp.sqrt(lt / jnp.maximum(m.sum(1), 1.0))
+    return (b_core[:, :, None] + b_unc[:, None, :]).reshape(nn, k)
+
+
+def _ref_sa_scores(mu, n, prev, t, alpha, lam, lam_unc=None, *, k_unc=1):
     tt = jnp.maximum(t + 1.0, 2.0)  # the policy's select-time lookahead
-    bonus = alpha[:, None] * jnp.sqrt(jnp.log(tt)[:, None] / jnp.maximum(n, 1.0))
+    bonus = _ref_ucb_bonus(n, tt, alpha, k_unc)
     arms = jnp.arange(mu.shape[1])[None, :]
-    return mu + bonus - lam[:, None] * (arms != prev[:, None]).astype(mu.dtype)
+    return mu + bonus - _ref_switch_penalty(arms, prev, lam, lam_unc,
+                                            mu.dtype, k_unc)
 
 
-def ref_fleet_select(mu, n, prev, t, *, alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM):
+def ref_fleet_select(mu, n, prev, t, *, alpha=DEFAULT_ALPHA, lam=DEFAULT_LAM,
+                     lam_unc=None, k_unc=1):
     alpha = jnp.broadcast_to(jnp.float32(alpha), mu.shape[:1])
     lam = jnp.broadcast_to(jnp.float32(lam), mu.shape[:1])
-    sa = _ref_sa_scores(mu, n, prev, t, alpha, lam)
+    lam_unc = (None if lam_unc is None
+               else jnp.broadcast_to(jnp.float32(lam_unc), mu.shape[:1]))
+    sa = _ref_sa_scores(mu, n, prev, t, alpha, lam, lam_unc, k_unc=k_unc)
     return jnp.argmax(sa, axis=1).astype(jnp.int32)
 
 
 def ref_fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
                    alpha, lam, qos=None, default_arm=None, gamma=None,
-                   optimistic=None, prior_mu=None):
+                   optimistic=None, prior_mu=None, lam_unc=None, *, k_unc=1):
     """Fused update-then-select oracle for kernels.fleet_ucb.fleet_step:
     apply the interval's observation as a one-hot running-mean update
     (frozen where inactive), then pick the next SA-UCB arm from each
@@ -81,6 +114,8 @@ def ref_fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
            else jnp.broadcast_to(jnp.asarray(optimistic, mu.dtype), (nn,)))
     prior = (jnp.zeros((nn, k), mu.dtype) if prior_mu is None
              else jnp.broadcast_to(jnp.asarray(prior_mu, mu.dtype), (nn, k)))
+    lu = (None if lam_unc is None
+          else jnp.broadcast_to(jnp.asarray(lam_unc, mu.dtype), (nn,)))
     onehot = (jnp.arange(k)[None, :] == arm[:, None]).astype(mu.dtype) * act[:, None]
     # decay-then-increment: the incremental mean over decayed counts IS
     # the discounted mean, so gamma only ever touches the counts (the
@@ -95,7 +130,7 @@ def ref_fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
     w0 = 0.25
     shrunk = (n2 * mu2 + w0 * prior) / (n2 + w0)
     mu_eff = jnp.where((g < 1.0)[:, None], shrunk, mu2)
-    sa = _ref_sa_scores(mu_eff, n2, prev2, t2, alpha, lam)
+    sa = _ref_sa_scores(mu_eff, n2, prev2, t2, alpha, lam, lu, k_unc=k_unc)
     untried = n2 < 1.0
     warm = jnp.where(untried, 1e9 - jnp.arange(k)[None, :].astype(mu.dtype),
                      -1e9)
@@ -131,7 +166,8 @@ def ref_fleet_step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
 
 def ref_episode_scan(mu, n, phat, pn, prev, t, arm, reward, progress, active,
                      alpha, lam, qos=None, default_arm=None, gamma=None,
-                     optimistic=None, prior_mu=None):
+                     optimistic=None, prior_mu=None, lam_unc=None, *,
+                     k_unc=1):
     """Oracle for kernels.episode_scan's trace-fed mode: a lax.scan of
     :func:`ref_fleet_step` over the T observation columns. Shares the
     per-step arithmetic expressions with the single-step oracle (the
@@ -146,7 +182,7 @@ def ref_episode_scan(mu, n, phat, pn, prev, t, arm, reward, progress, active,
             carry[0], carry[1], carry[2], carry[3], carry[4], carry[5],
             carry[6], r, p, a, alpha, lam, qos=qos,
             default_arm=default_arm, gamma=gamma, optimistic=optimistic,
-            prior_mu=prior_mu,
+            prior_mu=prior_mu, lam_unc=lam_unc, k_unc=k_unc,
         )
         return out, carry[6]
 
@@ -159,8 +195,8 @@ def ref_episode_scan(mu, n, phat, pn, prev, t, arm, reward, progress, active,
 def ref_episode_scan_sim(mu, n, phat, pn, prev, t, arm,
                          env_rows: EnvRows, z, scan_env: ScanEnv,
                          alpha, lam, qos=None, default_arm=None, gamma=None,
-                         optimistic=None, prior_mu=None, *, t_start=0,
-                         drift_every=0, counter_obs=True):
+                         optimistic=None, prior_mu=None, lam_unc=None, *,
+                         t_start=0, drift_every=0, counter_obs=True, k_unc=1):
     """Oracle for kernels.episode_scan's sim-fused mode: per interval,
     derive the observation with the shared env helper
     (:func:`~repro.kernels.episode_scan.sim_env_obs` — THE one copy of
@@ -186,7 +222,7 @@ def ref_episode_scan_sim(mu, n, phat, pn, prev, t, arm,
             state[0], state[1], state[2], state[3], state[4], state[5],
             state[6], r, p, a, alpha, lam, qos=qos,
             default_arm=default_arm, gamma=gamma, optimistic=optimistic,
-            prior_mu=prior_mu,
+            prior_mu=prior_mu, lam_unc=lam_unc, k_unc=k_unc,
         )
         return (out, env2), state[6]
 

@@ -44,6 +44,14 @@ while the bandwidth-bound decode lane runs unconstrained
 (``repro.core.phase_policy``). Streaming only: ``--episode-scan`` and
 ``--drift`` stay simulator-side.
 
+``--uncore-ladder 0.6,0.8,1.0`` factorizes the action space into
+(core, uncore) product arms on BOTH workloads — the simulator prices
+the HBM-stretch/uncore-power tradeoff per app, the serving workload
+gives prefill and decode their opposite uncore preferences — while the
+controllers still run as one fused launch over the flat ladder
+(``--lam-unc`` sets the per-move uncore switching penalty; omitted, one
+shared penalty prices any move).
+
 Replay a recorded trace shard-per-host instead of the simulator with
 ``--trace trace.npz`` (see repro.energy.record_trace); ``--out arms.npz``
 makes host 0 gather and persist the full (T, N) arm trajectory — the
@@ -64,9 +72,16 @@ import sys
 
 import numpy as np
 
-from repro.core import get_app, make_env_params
+from repro.core import FREQS_GHZ, get_app, make_env_params
 from repro.core.fleet import slice_policy_lanes
-from repro.core.policies import energy_ucb, make_policy_params, phase_policy
+from repro.core.policies import (
+    ActionSpace,
+    energy_ucb,
+    factored_energy_ucb,
+    make_policy_params,
+    phase_policy,
+)
+from repro.core.simulator import make_factored_env_params
 from repro.energy import SimBackend, TraceReplayBackend
 from repro.energy.backend import trace_n_nodes
 from repro.parallel.distributed import (
@@ -105,6 +120,17 @@ def parse_args(argv=None):
     ap.add_argument("--slo-factor", type=float, default=4.0,
                     help="p99 SLO = slo_factor x the analytic f_max "
                          "no-queueing latency")
+    ap.add_argument("--uncore-ladder", default=None,
+                    help="comma-separated relative uncore clocks "
+                         "ascending to 1.0 (e.g. 0.6,0.8,1.0): factored "
+                         "(core x uncore) product arms end to end — the "
+                         "policy splits per-dimension bonuses/penalties, "
+                         "the sim/serve physics price the HBM stretch "
+                         "and uncore power; one fused launch either way")
+    ap.add_argument("--lam-unc", type=float, default=None,
+                    help="per-move uncore switching penalty (factored "
+                         "ladders only; default: one shared penalty on "
+                         "any move, the scalar-compatible sentinel)")
     ap.add_argument("--num-hosts", type=int, default=1)
     ap.add_argument("--host-id", type=int, default=0)
     ap.add_argument("--coordinator", default="127.0.0.1:7733",
@@ -147,6 +173,15 @@ def parse_args(argv=None):
     return ap.parse_args(argv)
 
 
+def parse_uncore_ladder(spec):
+    """``--uncore-ladder`` string -> ascending tuple, or None for the
+    scalar ladder (empty spec, or the degenerate single 1.0 rung)."""
+    if not spec:
+        return None
+    y = tuple(float(v) for v in spec.split(",") if v.strip())
+    return None if y == (1.0,) else y
+
+
 def build_policy(args):
     # --qos 0.0 is a valid (strictest) budget, and --window-discount 0.0
     # a valid (last-sample-only) window: dispatch on `is None`, never on
@@ -160,15 +195,26 @@ def build_policy(args):
         kw["window_discount"] = args.window_discount
     if args.warmup:
         kw["optimistic_init"] = False
+    ladder = parse_uncore_ladder(args.uncore_ladder)
+    space = ActionSpace(len(FREQS_GHZ), len(ladder)) if ladder else None
     if args.workload == "serve" and args.phase_split and args.trace is None:
         # the physics-informed per-phase config: the slowdown budget
         # binds the compute-bound prefill lane; the bandwidth-bound
-        # decode lane (step time flat in frequency) stays unconstrained
+        # decode lane (step time flat in core frequency) stays
+        # unconstrained. Factored ladders keep the same split — lanes
+        # just select over the flat (core x uncore) product.
+        pk = dict(kw)
+        if space is not None:
+            pk.update(k=space.k, default_arm=space.k - 1,
+                      lam_unc=args.lam_unc)
         return phase_policy(
             args.nodes,
-            prefill=make_policy_params(**kw),
-            decode=make_policy_params(**{**kw, "qos_delta": None}),
+            prefill=make_policy_params(**pk),
+            decode=make_policy_params(**{**pk, "qos_delta": None}),
+            space=space,
         )
+    if space is not None:
+        return factored_energy_ucb(space, uncore_penalty=args.lam_unc, **kw)
     return energy_ucb(**kw)
 
 
@@ -193,18 +239,28 @@ def build_local_backend(args, lo: int, hi: int):
                              "the serving workload streams (run without "
                              "--episode-scan)")
         from repro.workload import ServingBackend, bursty_diurnal_traffic
+        from repro.workload.serving_backend import SERVE_P_UNC_W
 
+        ladder = parse_uncore_ladder(args.uncore_ladder)
         f = 2 if args.phase_split else 1
         return ServingBackend(
             bursty_diurnal_traffic(args.rate), args.serve_model,
             n_nodes=(hi - lo) // f, n_slots=args.slots,
             phase_split=args.phase_split, node_offset=lo // f,
             slo_factor=args.slo_factor,
+            uncore_ladder=ladder,
+            p_unc_w=SERVE_P_UNC_W if ladder else 0.0,
         )
-    drift = ([make_env_params(get_app(a.strip()))
-              for a in args.drift.split(",") if a.strip()]
+    ladder = parse_uncore_ladder(args.uncore_ladder)
+
+    def env(app_name):
+        app = get_app(app_name)
+        return (make_factored_env_params(app, unc_freqs=ladder)
+                if ladder else make_env_params(app))
+
+    drift = ([env(a.strip()) for a in args.drift.split(",") if a.strip()]
              if args.drift else None)
-    return SimBackend(make_env_params(get_app(args.app)), n=hi - lo,
+    return SimBackend(env(args.app), n=hi - lo,
                       seed=args.seed, node_offset=lo,
                       drift_params=drift, drift_every=args.drift_every)
 
@@ -331,6 +387,10 @@ def spawn_local(args) -> int:
         base += ["--qos", str(args.qos)]
     if args.window_discount is not None:
         base += ["--window-discount", str(args.window_discount)]
+    if args.uncore_ladder is not None:
+        base += ["--uncore-ladder", args.uncore_ladder]
+    if args.lam_unc is not None:
+        base += ["--lam-unc", str(args.lam_unc)]
     if args.warmup:
         base += ["--warmup"]
     if args.drift is not None:

@@ -66,27 +66,29 @@ def host_stripe(n: int, num_hosts: int, host_id: int):
 
 def make_sharded_fleet_step(
     mesh: Mesh, axis: str = "data", block_n: int = 1024,
-    interpret: bool = False,
+    interpret: bool = False, k_unc: int = 1,
 ) -> Callable:
     """Build the jitted sharded fleet step for ``mesh``.
 
     Returns ``step(mu, n, phat, pn, prev, t, arm, reward, progress,
-    active, alpha, lam, qos, def_arm, gamma, optimistic, prior_mu) ->
-    (mu, n, phat, pn, prev, t, next_arm)`` with every array sharded on
-    its leading N axis over ``axis``. Scalar hyperparameters broadcast
-    to (N,) lanes first (``prior_mu`` to its (N, K) lane), and ragged
-    fleets are padded to a shard multiple with inactive (frozen)
+    active, alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,
+    lam_unc) -> (mu, n, phat, pn, prev, t, next_arm)`` with every array
+    sharded on its leading N axis over ``axis``. Scalar hyperparameters
+    broadcast to (N,) lanes first (``prior_mu`` to its (N, K) lane), and
+    ragged fleets are padded to a shard multiple with inactive (frozen)
     controllers — same convention as the kernel's stripe padding — then
-    sliced back.
+    sliced back. ``k_unc`` is the factored-ladder static (1 = scalar);
+    row parallelism is factorization-blind, so the sharding story is
+    unchanged — the static just rides into each shard's kernel.
     """
     n_shards = int(mesh.shape[axis])
-    kernel = functools.partial(fleet_step, block_n=block_n,
+    kernel = functools.partial(fleet_step, k_unc=k_unc, block_n=block_n,
                                interpret=interpret)
     row, mat = P(axis), P(axis, None)
     sharded = shard_map(
         kernel, mesh=mesh,
         in_specs=(mat, mat, mat, mat, row, row, row, row, row, row, row,
-                  row, row, row, row, row, mat),
+                  row, row, row, row, row, mat, row),
         out_specs=(mat, mat, mat, mat, row, row, row),
         check_rep=False,  # pallas_call has no replication rule
     )
@@ -94,7 +96,7 @@ def make_sharded_fleet_step(
     @jax.jit
     def step(mu, n, phat, pn, prev, t, arm, reward, progress, active,
              alpha, lam, qos, def_arm, gamma=1.0, optimistic=1.0,
-             prior_mu=0.0):
+             prior_mu=0.0, lam_unc=-1.0):
         nn, k = mu.shape
         lane = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (nn,))
         ilane = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.int32), (nn,))
@@ -104,11 +106,12 @@ def make_sharded_fleet_step(
             lane(alpha), lane(lam), lane(qos), ilane(def_arm),
             lane(gamma), lane(optimistic),
             jnp.broadcast_to(jnp.asarray(prior_mu, jnp.float32), (nn, k)),
+            lane(lam_unc),
         ]
         pad = (-nn) % n_shards
         if pad:
             fills = (0, 1, 0, 1, 0, 2.0, 0, 0, 0, 0, 0, 0, -1.0, 0,
-                     1.0, 1.0, 0)
+                     1.0, 1.0, 0, -1.0)
             args = [_pad(a, pad, f) for a, f in zip(args, fills)]
         out = sharded(*args)
         return tuple(o[:nn] for o in out) if pad else out

@@ -61,7 +61,7 @@ from repro.core.calibration import (
     SWITCH_LATENCY_S,
 )
 from repro.energy.backend import Counters, EnergyBackend
-from repro.energy.model import GAMMA, P_DYN_W, P_IDLE_W
+from repro.energy.model import GAMMA, GAMMA_UNC, P_DYN_W, P_IDLE_W
 from repro.roofline.analysis import HW, Hardware, exec_flops, hbm_bytes
 from repro.workload.traffic import IntervalTraffic, TrafficConfig, TrafficGen
 
@@ -72,6 +72,12 @@ K = len(FREQS_GHZ)
 # range — the split that makes bandwidth-bound decode worth downclocking
 SERVE_P_IDLE_W = 50.0
 SERVE_P_DYN_W = 150.0
+# uncore dynamic envelope for factored serving scenarios (p_unc_w=0
+# keeps the scalar physics bit-exact). The phase asymmetry is the win:
+# compute-bound prefill can shed nearly all of this at y < 1 for ~no
+# slowdown, while bandwidth-bound decode must keep y high but sheds
+# core power instead — a corner no scalar (core-only) ladder reaches.
+SERVE_P_UNC_W = 70.0
 
 
 @dataclass(frozen=True)
@@ -92,6 +98,13 @@ class ServePhysics:
     p_idle_w: float = P_IDLE_W
     p_dyn_w: float = P_DYN_W
     gamma: float = GAMMA
+    # uncore (HBM) axis: memory time stretches as 1/y at relative uncore
+    # clock y, and the chip pays p_unc_w * y^gamma_unc * uu extra. The
+    # defaults (p_unc_w = 0, y = 1) make every scalar-ladder path
+    # BIT-EXACT with the pre-factored physics: t_mem / 1.0 and + 0.0
+    # are IEEE-exact identities, so no branch is needed.
+    p_unc_w: float = 0.0
+    gamma_unc: float = GAMMA_UNC
 
     @classmethod
     def from_arch(cls, cfg: ArchConfig, n_slots: int, ctx_len: int,
@@ -118,26 +131,37 @@ class ServePhysics:
             **kw,
         )
 
-    def _op(self, t_comp: float, t_mem: float,
-            x: float) -> Tuple[float, float, float, float]:
-        """(wall_s, energy_j, uc, uu) of one op at relative frequency x
-        — max-overlap step time, core stretched by 1/x."""
+    def _op(self, t_comp: float, t_mem: float, x: float,
+            y: float = 1.0) -> Tuple[float, float, float, float]:
+        """(wall_s, energy_j, uc, uu) of one op at relative core
+        frequency x and relative uncore frequency y — max-overlap step
+        time, core stretched by 1/x, memory stretched by 1/y."""
         tc = t_comp / x
-        t = max(tc, t_mem, 1e-12)
+        tm = t_mem / y
+        t = max(tc, tm, 1e-12)
         uc = tc / t
-        uu = max(t_mem / t, 1e-3)
+        uu = max(tm / t, 1e-3)
+        # the engine-activity proxy behind the core-dynamic term counts
+        # WORK ISSUED (t_mem at the reference clock), not stall time: a
+        # slower uncore stretches the wall clock but must not bill extra
+        # core-dynamic power. At y = 1 both readings coincide, keeping
+        # the scalar path bit-exact.
         act = (tc + t_mem) / (2.0 * t)
-        p = self.p_idle_w + self.p_dyn_w * (x ** self.gamma) * act
+        p = (self.p_idle_w + self.p_dyn_w * (x ** self.gamma) * act
+             + self.p_unc_w * (y ** self.gamma_unc) * uu)
         return t, p * t, uc, uu
 
-    def prefill(self, plen: int, arm: int):
+    def prefill(self, plen: int, arm: int, y: float = 1.0):
+        """One unbatched prefill at CORE ladder index ``arm`` and
+        relative uncore clock ``y`` (factored backends decompose their
+        flat product arm before calling)."""
         x = float(FREQS_GHZ[arm]) / F_MAX
         return self._op(plen * self.t_pre_comp_tok,
-                        self.t_pre_mem_fix + plen * self.t_pre_mem_tok, x)
+                        self.t_pre_mem_fix + plen * self.t_pre_mem_tok, x, y)
 
-    def decode_wave(self, arm: int):
+    def decode_wave(self, arm: int, y: float = 1.0):
         x = float(FREQS_GHZ[arm]) / F_MAX
-        return self._op(self.t_dec_comp, self.t_dec_mem, x)
+        return self._op(self.t_dec_comp, self.t_dec_mem, x, y)
 
     def fmax_latency_s(self, plen: float, olen: float) -> float:
         """Analytic no-queueing request latency at f_max: one prefill
@@ -174,7 +198,9 @@ class ServingBackend(EnergyBackend):
                  phase_split: bool = False, node_offset: int = 0,
                  ctx_len: Optional[int] = None, slo_factor: float = 4.0,
                  hw: Hardware = HW, p_idle_w: float = SERVE_P_IDLE_W,
-                 p_dyn_w: float = SERVE_P_DYN_W):
+                 p_dyn_w: float = SERVE_P_DYN_W,
+                 uncore_ladder: Optional[Sequence[float]] = None,
+                 p_unc_w: float = 0.0):
         from repro.configs import get_arch
 
         self.traffic = traffic
@@ -187,21 +213,39 @@ class ServingBackend(EnergyBackend):
         self.slo_factor = float(slo_factor)
         self._hw = hw
         self._pw = (float(p_idle_w), float(p_dyn_w))
+        # factored product ladder: flat arm i = (core i // k_unc,
+        # uncore i % k_unc), uncore MINOR and ascending to 1.0 so flat
+        # arm n_arms-1 is the (f_max, max-uncore) default/QoS reference
+        # corner. uncore_ladder=None keeps the scalar ladder verbatim.
+        self.unc_freqs: Tuple[float, ...] = (
+            tuple(float(v) for v in uncore_ladder)
+            if uncore_ladder is not None else (1.0,))
+        if (self.unc_freqs[-1] != 1.0
+                or any(b <= a for a, b in zip(self.unc_freqs,
+                                              self.unc_freqs[1:]))
+                or self.unc_freqs[0] <= 0.0):
+            raise ValueError(
+                f"uncore_ladder must ascend to 1.0, got {self.unc_freqs}")
+        self.k_unc = len(self.unc_freqs)
+        self.n_arms = K * self.k_unc
+        self._p_unc_w = float(p_unc_w)
         self.ctx_len = int(ctx_len if ctx_len is not None
                            else traffic.prompt_mean + traffic.output_mean)
         self.phys = ServePhysics.from_arch(self.cfg, self.n_slots,
                                            self.ctx_len, hw=hw,
                                            p_idle_w=p_idle_w,
-                                           p_dyn_w=p_dyn_w)
-        # decode tables are plen-independent: precompute all K arms
-        self._dec = [self.phys.decode_wave(a) for a in range(K)]
+                                           p_dyn_w=p_dyn_w,
+                                           p_unc_w=self._p_unc_w)
+        # decode tables are plen-independent: precompute all flat arms
+        self._dec = [self.phys.decode_wave(*self._split(a))
+                     for a in range(self.n_arms)]
 
         self._gens = [TrafficGen(traffic, node_id=self._offset + m)
                       for m in range(self._m)]
         self._nodes = [_Node(self.n_slots) for _ in range(self._m)]
         self._interval = 0
         n = self.n_nodes
-        self._arms = np.full((n,), K - 1, np.int32)
+        self._arms = np.full((n,), self.n_arms - 1, np.int32)
         self._prev_arms = self._arms.copy()
         self._energy = np.zeros(n, np.float64)
         self._core = np.zeros(n, np.float64)
@@ -225,7 +269,7 @@ class ServingBackend(EnergyBackend):
         dt = traffic.interval_s
         mp, mo = traffic.prompt_mean, traffic.output_mean
         tp, ep = self.phys.prefill(int(round(mp)), K - 1)[:2]
-        td, ed = self._dec[K - 1][:2]
+        td, ed = self._dec[-1][:2]
         busy_p = r * dt * tp  # expected prefill-busy seconds / interval
         waves = r * dt * mo / self.n_slots  # full-batch wave estimate
         busy_d = waves * td
@@ -256,7 +300,19 @@ class ServingBackend(EnergyBackend):
 
     @property
     def ladder_ghz(self) -> Sequence[float]:
-        return tuple(FREQS_GHZ)
+        """Per-FLAT-arm core GHz (uncore minor): the scalar ladder when
+        ``k_unc == 1``, else each core step repeated ``k_unc`` times."""
+        if self.k_unc == 1:
+            return tuple(FREQS_GHZ)
+        return tuple(float(g) for g in np.repeat(FREQS_GHZ, self.k_unc))
+
+    @property
+    def uncore_ladder(self) -> Tuple[float, ...]:
+        return self.unc_freqs
+
+    def _split(self, flat: int) -> Tuple[int, float]:
+        """Flat product arm -> (core ladder index, relative uncore y)."""
+        return flat // self.k_unc, self.unc_freqs[flat % self.k_unc]
 
     @property
     def interval_s(self) -> float:
@@ -299,6 +355,7 @@ class ServingBackend(EnergyBackend):
     def _advance_node(self, m: int, iv: IntervalTraffic, dt: float) -> None:
         lp, ld = self._lanes(m)
         arm_p, arm_d = int(self._arms[lp]), int(self._arms[ld])
+        core_p, y_p = self._split(arm_p)
         st = self._nodes[m]
         t0 = self._interval * dt
         for off, pl, ol in zip(iv.offsets_s, iv.prompt_len, iv.output_len):
@@ -319,7 +376,7 @@ class ServingBackend(EnergyBackend):
         # and serves a FRACTION of what f_max would have, which is
         # exactly the slowdown the QoS feasible set prices — and the
         # precursor of the queueing that blows the p99 tail
-        t_wd_ref = self._dec[K - 1][0]
+        t_wd_ref = self._dec[-1][0]
         cap_d = dt / t_wd_ref  # decode tokens one slot can demand
         rem_p = rem_d = 0.0
         for sl in st.slots:
@@ -353,7 +410,7 @@ class ServingBackend(EnergyBackend):
             pre = next((sl for sl in st.slots if sl is not None
                         and sl[0] == "prefill"), None)
             if pre is not None:
-                t, e = self.phys.prefill(pre[1], arm_p)[:2]
+                t, e = self.phys.prefill(pre[1], core_p, y_p)[:2]
                 self._energy[lp] += e
                 self._core[lp] += t  # actual busy
                 # f_max-equivalent service time of this prompt
@@ -428,7 +485,10 @@ class ServingBackend(EnergyBackend):
             self.traffic, self.cfg, n_nodes=(hi - lo) // f,
             n_slots=self.n_slots, phase_split=self.phase_split,
             node_offset=self._offset + lo // f, ctx_len=self.ctx_len,
-            slo_factor=self.slo_factor, hw=self._hw)
+            slo_factor=self.slo_factor, hw=self._hw,
+            p_idle_w=self._pw[0], p_dyn_w=self._pw[1],
+            uncore_ladder=(self.unc_freqs if self.k_unc > 1 else None),
+            p_unc_w=self._p_unc_w)
 
     # -- serving telemetry ---------------------------------------------
     @property
@@ -467,15 +527,19 @@ class ServingBackend(EnergyBackend):
         }
 
     def busy_fractions(self, rate_rps: Optional[float] = None,
-                       arm_p: int = K - 1, arm_d: int = K - 1
+                       arm_p: int = -1, arm_d: int = -1
                        ) -> Dict[str, float]:
         """Analytic per-interval busy-time shares at a given load and
-        arm pair — the scenario-sizing diagnostic (keep the f_max total
-        under 1.0 and the low-f total near/over 1.0 for a QoS-binding
-        burst)."""
+        FLAT arm pair (negative = the top/f_max corner) — the
+        scenario-sizing diagnostic (keep the f_max total under 1.0 and
+        the low-f total near/over 1.0 for a QoS-binding burst)."""
         r = self.traffic.mean_rate_rps if rate_rps is None else rate_rps
         dt = self.traffic.interval_s
-        tp = self.phys.prefill(int(round(self.traffic.prompt_mean)), arm_p)[0]
+        arm_p = arm_p if arm_p >= 0 else self.n_arms - 1
+        arm_d = arm_d if arm_d >= 0 else self.n_arms - 1
+        tp = self.phys.prefill(int(round(self.traffic.prompt_mean)),
+                               *self._split(arm_p))
+        tp = tp[0]
         td = self._dec[arm_d][0]
         waves = r * dt * self.traffic.output_mean / self.n_slots
         return {

@@ -377,3 +377,45 @@ def test_two_process_nonstationary_drift_matches_single_process(tmp_path):
         np.testing.assert_array_equal(
             z[f"state_{leaf}"], np.asarray(ref.states[leaf]),
             err_msg=f"2-process nonstationary state diverged on {leaf}")
+
+
+@pytest.mark.slow
+def test_two_process_factored_matches_single_process(tmp_path):
+    """The factored acceptance oracle: a (core x uncore) product-ladder
+    fleet (--uncore-ladder, 9x3 = 27 flat arms, per-dimension uncore
+    penalty) striped across H=2 subprocess hosts reproduces the
+    single-process sharded-step trajectory exactly — observation-
+    determined striping stays deterministic at k_unc > 1."""
+    from repro.core.policies import ActionSpace, factored_energy_ucb
+    from repro.core.simulator import make_factored_env_params
+
+    n, t = 10, 40
+    out = tmp_path / "arms_factored.npz"
+    cmd = [sys.executable, "-m", "repro.launch.fleet_serve", "--spawn",
+           "--num-hosts", "2", "--nodes", str(n), "--intervals", str(t),
+           "--app", "tealeaf", "--uncore-ladder", "0.6,0.8,1.0",
+           "--lam-unc", "0.01", "--seed", "0", "--interpret",
+           "--out", str(out)]
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=600,
+                       env=_subproc_env(), cwd=str(REPO))
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    z = np.load(out)
+
+    from repro.parallel import fleet_mesh
+
+    p = make_factored_env_params(get_app("tealeaf"),
+                                 unc_freqs=(0.6, 0.8, 1.0))
+    ref = EnergyController(
+        factored_energy_ucb(ActionSpace(9, 3), uncore_penalty=0.01,
+                            qos_delta=None),
+        SimBackend(p, n=n, seed=0), seed=0, interpret=True,
+        mesh=fleet_mesh())
+    assert ref.use_kernel, "factored fleets must dispatch fused"
+    assert ref.fleet.k_unc == 3
+    ref_arms = _run_controller(ref, t)
+    np.testing.assert_array_equal(z["arms"], ref_arms)
+    assert ref.states["mu"].shape == (n, 27)
+    for leaf in ref.states:
+        np.testing.assert_array_equal(
+            z[f"state_{leaf}"], np.asarray(ref.states[leaf]),
+            err_msg=f"2-process factored state diverged on {leaf}")

@@ -484,6 +484,7 @@ def test_bench_check_guard(tmp_path):
         {"name": "a", "us_per_call": 110.0},
         {"name": "b", "us_per_call": 45.0},
         {"name": "c", "us_per_call": 12.0},
+        {"name": "old_only", "us_per_call": 1.0},
         {"name": "new_only", "us_per_call": 2.0},
         # interpret rows may swing arbitrarily without tripping the guard
         {"name": "emu", "us_per_call": 500.0,
@@ -491,16 +492,31 @@ def test_bench_check_guard(tmp_path):
     ]
     assert bc.main([_rows_json(tmp_path, "ok.json", ok),
                     "--baseline", bp]) == 0
+    # coverage is part of the contract: dropping a baseline row FAILS...
+    dropped = [r for r in ok if r["name"] != "old_only"]
+    dp = _rows_json(tmp_path, "dropped.json", dropped)
+    assert bc.main([dp, "--baseline", bp]) == 1
+    # ...unless the row belongs to another invocation's scope (the CI
+    # layout: one committed baseline, several benchmark JSONs)
+    assert bc.main([dp, "--baseline", bp, "--scope", "a", "--scope", "b",
+                    "--scope", "c", "--scope", "emu"]) == 0
+    # a scoped run still fails when a row IN scope is missing
+    assert bc.main([dp, "--baseline", bp, "--scope", "old_"]) == 1
     bad = [
         {"name": "a", "us_per_call": 100.0},
         {"name": "b", "us_per_call": 50.0},
         {"name": "c", "us_per_call": 45.0},  # 4.5x on one row
+        {"name": "old_only", "us_per_call": 1.0},
+        {"name": "emu", "us_per_call": 5.0,
+         "derived": "interpret mode on CPU"},
     ]
     assert bc.main([_rows_json(tmp_path, "bad.json", bad),
                     "--baseline", bp]) == 1
     # a uniformly slower machine is NOT a regression (median rescale)
-    slow = [{"name": r["name"], "us_per_call": r["us_per_call"] * 3}
-            for r in base if "derived" not in r]
+    slow = [{"name": r["name"],
+             "us_per_call": r["us_per_call"] * 3,
+             **({"derived": r["derived"]} if "derived" in r else {})}
+            for r in base]
     assert bc.main([_rows_json(tmp_path, "slow.json", slow),
                     "--baseline", bp]) == 0
     broken = [{"name": "a", "us_per_call": "120 us"}]
