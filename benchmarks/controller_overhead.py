@@ -248,6 +248,105 @@ def run(fast: bool = True, out_json=None, quick: bool = False):
     print(f"episode scan (trace) n={ne}: {us_trace:.1f} us/interval "
           f"({us_stream/us_trace:.1f}x under streaming)")
 
+    # distributed control plane: rendezvous, the strict aggregate round,
+    # and stripe checkpoint save/restore. Per-interval stepping never
+    # touches the network, so these four rows ARE the whole off-hot-path
+    # overhead of the fault-tolerant multi-process fleet.
+    import shutil
+    import socket
+    import tempfile
+    import threading
+    import time
+
+    from repro.parallel.distributed import (ClientComm, CoordinatorComm,
+                                            DistributedFleetController)
+    from repro.train import checkpoint as dckpt
+
+    hh = 4
+
+    def free_port():
+        with socket.socket() as s:
+            s.bind(("127.0.0.1", 0))
+            return s.getsockname()[1]
+
+    def rendezvous_once():
+        port = free_port()
+
+        def dial(h):
+            # fixed settle delay so the listener is up before the first
+            # dial: the row stays a constant-bias rendezvous latency
+            # instead of sometimes swallowing a connect-backoff sleep
+            time.sleep(0.02)
+            ClientComm(("127.0.0.1", port), hh, h).close()
+
+        ts = [threading.Thread(target=dial, args=(h,))
+              for h in range(1, hh)]
+        for t in ts:
+            t.start()
+        CoordinatorComm(("127.0.0.1", port), hh).close()
+        for t in ts:
+            t.join()
+
+    us_rdv = time_us(rendezvous_once, n=3, warmup=1)
+    rows.append({"name": f"distributed_rendezvous_h{hh}",
+                 "us_per_call": round(us_rdv, 2),
+                 "derived": f"H={hh} loopback check-in, 20 ms settle bias"})
+    print(f"distributed rendezvous H={hh}: {us_rdv:.1f} us")
+
+    ticks, twarm = (20, 3) if quick else (50, 5)
+    port = free_port()
+
+    def client_rounds(h):
+        c = ClientComm(("127.0.0.1", port), hh, h)
+        for i in range(ticks + twarm):
+            c.allgather(h, f"tick-{i}")
+        c.close()
+
+    ts = [threading.Thread(target=client_rounds, args=(h,))
+          for h in range(1, hh)]
+    for t in ts:
+        t.start()
+    coord = CoordinatorComm(("127.0.0.1", port), hh)
+    cnt = {"i": 0}
+
+    def tick_round():
+        coord.allgather(0, f"tick-{cnt['i']}")
+        cnt["i"] += 1
+
+    us_tick = time_us(tick_round, n=ticks, warmup=twarm)
+    for t in ts:
+        t.join()
+    coord.close()
+    rows.append({"name": f"distributed_aggregate_tick_h{hh}",
+                 "us_per_call": round(us_tick, 2),
+                 "derived": f"strict H={hh} gather round on loopback"})
+    print(f"distributed aggregate tick H={hh}: {us_tick:.1f} us")
+
+    nd = 1024 if quick else 4096
+    dctl = DistributedFleetController(
+        pol, SimBackend(p, n=nd), seed=0, use_kernel=False)
+    dctl.step()
+    sd = dctl.state_dict()
+    root = tempfile.mkdtemp(prefix="bench_ckpt_")
+    spath = dckpt.stripe_dir(root, 0, nd)
+    try:
+        us_save = time_us(
+            lambda: dckpt.save(spath, dctl.interval, sd, keep_last=1),
+            n=3, warmup=1)
+        rows.append({"name": f"distributed_checkpoint_save_n{nd}",
+                     "us_per_call": round(us_save, 2),
+                     "derived": "blocking stripe save, atomic rename"})
+        print(f"distributed checkpoint save n={nd}: {us_save:.1f} us")
+        us_rest = time_us(
+            lambda: dckpt.restore_stripe(root, 0, nd, like=sd),
+            n=3, warmup=1)
+        rows.append({"name": f"distributed_checkpoint_restore_n{nd}",
+                     "us_per_call": round(us_rest, 2),
+                     "derived": "stripe restore incl. cover walk"})
+        print(f"distributed checkpoint restore n={nd}: {us_rest:.1f} us")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
     if out_json is not None:
         payload = {
             "benchmark": "controller_overhead",

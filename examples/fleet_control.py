@@ -11,9 +11,12 @@ The multi-process control plane also has its own CLI launcher
 ``--num-hosts H --host-id h --coordinator host:port`` (plus ``--app``,
 ``--nodes``, ``--qos``, ``--window-discount``/``--warmup`` for the
 nonstationary variants, ``--drift``/``--drift-every`` for cycling
-workload phases, ``--trace`` for recorded-counter replay, and
-``--report-every`` for periodic fleet aggregates), or ``--spawn`` to
-fork all H hosts locally in one command:
+workload phases, ``--trace`` for recorded-counter replay,
+``--report-every`` for periodic fleet aggregates, and
+``--checkpoint-dir``/``--checkpoint-every`` for periodic stripe
+checkpoints — a SIGKILLed host relaunched with the same command line
+resumes bit-exact and rejoins mid-run, see the kill-and-resume demo
+below), or ``--spawn`` to fork all H hosts locally in one command:
 
   PYTHONPATH=src python -m repro.launch.fleet_serve --spawn \\
       --num-hosts 2 --nodes 64 --intervals 100 --report-every 25
@@ -260,6 +263,62 @@ def main():
     print("\n".join("  " + l for l in r.stdout.strip().splitlines()))
     if r.returncode != 0:
         print(r.stderr[-1500:])
+
+    # fault tolerance end to end — the crash-restart runbook. Host 1 is
+    # SIGKILLed right after its first stripe checkpoint and relaunched
+    # with the SAME command line: it is admitted mid-run (skipping the
+    # start barrier), restores its stripe's checkpoint, and replays
+    # forward bit-exact while the survivor's periodic aggregates degrade
+    # (hosts=1) instead of stalling. The final strict gather waits for
+    # the resurrected host, so the run still ends fleet-complete.
+    import os
+    import secrets
+    import shutil
+    import signal
+    import socket
+    import tempfile
+
+    from repro.train import checkpoint as ckpt_mod
+
+    with socket.socket() as sock:
+        sock.bind(("127.0.0.1", 0))
+        port = sock.getsockname()[1]
+    root = tempfile.mkdtemp(prefix="fleet_demo_ckpt_")
+    env = dict(os.environ)
+    env["FLEET_AUTHKEY"] = secrets.token_hex(16)
+    nd2, td2 = 8, 60
+    cmd = lambda h: [
+        sys.executable, "-m", "repro.launch.fleet_serve",
+        "--nodes", str(nd2), "--intervals", str(td2), "--app", "tealeaf",
+        "--num-hosts", "2", "--host-id", str(h),
+        "--coordinator", f"127.0.0.1:{port}", "--pace", "0.1",
+        "--checkpoint-dir", root, "--checkpoint-every", "10",
+        "--report-every", "30",
+    ]
+    print(f"\ncrash-restart runbook (N={nd2}, {td2} intervals, "
+          "SIGKILL host 1 at its first checkpoint):")
+    procs = {h: subprocess.Popen(cmd(h), stdout=subprocess.PIPE,
+                                 stderr=subprocess.STDOUT, text=True,
+                                 env=env) for h in (0, 1)}
+    vdir = ckpt_mod.stripe_dir(root, nd2 // 2, nd2)  # host 1's stripe
+    while not ckpt_mod.list_steps(vdir):
+        time.sleep(0.05)
+    os.kill(procs[1].pid, signal.SIGKILL)
+    procs[1].wait()
+    print("  host 1 SIGKILLed; relaunching the same command line...")
+    revived = subprocess.Popen(cmd(1), stdout=subprocess.PIPE,
+                               stderr=subprocess.STDOUT, text=True, env=env)
+    out0, _ = procs[0].communicate(timeout=300)
+    out1, _ = revived.communicate(timeout=300)
+    for line in out1.splitlines():
+        if "resumed stripe" in line:
+            print("  " + line)
+    for line in out0.splitlines():
+        if "hosts" in line:
+            print("  " + line)
+    print(f"  exit codes: survivor {procs[0].returncode}, "
+          f"resurrected {revived.returncode}")
+    shutil.rmtree(root, ignore_errors=True)
 
     # coordinated vs independent on a memory-bound app (8-node gang demo)
     p = make_env_params(get_app("miniswp"))

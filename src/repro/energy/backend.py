@@ -149,6 +149,27 @@ class EnergyBackend(abc.ABC):
             "construct it per host instead"
         )
 
+    def state_dict(self) -> PyTree:
+        """Checkpointable backend state as ``{"striped": ..., "host":
+        ...}``: every leaf under ``"striped"`` carries a leading node
+        axis (so train.checkpoint.restore_stripe can re-stripe it under
+        elastic membership changes), ``"host"`` holds stripe-independent
+        leaves (RNG key data, cursors) that are identical across hosts
+        at a common global interval. Simulated/replay backends
+        implement the pair; real-hardware backends have no replayable
+        state and keep the default error."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support checkpointing"
+        )
+
+    def load_state_dict(self, state: PyTree) -> None:
+        """Adopt a :meth:`state_dict` snapshot — afterwards the backend
+        is bit-identical to the one that saved (same stripe) or to the
+        corresponding row-stripe of it (elastic restore)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support checkpointing"
+        )
+
 
 # ---------------------------------------------------------------------------
 # SimBackend: the pure-JAX env, batched over N apps
@@ -370,6 +391,35 @@ class SimBackend(EnergyBackend):
             active=es.remaining > 0.0,
         )
 
+    # -- checkpoint surface (train.checkpoint via the fleet controller) -
+    def state_dict(self) -> PyTree:
+        """Per-node env rows under ``"striped"``; the RNG key chain and
+        global interval index under ``"host"`` (hosts advance in
+        lockstep from the same seed, so both are identical across a
+        striped fleet at a common interval — which is what lets an
+        elastic restore stitch stripes saved by different hosts)."""
+        return {
+            "striped": {
+                "estates": self._estates,
+                "core_s": self._core_s,
+                "uncore_s": self._uncore_s,
+                "arms": self._arms,
+            },
+            "host": {
+                "key": jax.random.key_data(self._key),
+                "interval": np.int64(self._interval),
+            },
+        }
+
+    def load_state_dict(self, state: PyTree) -> None:
+        s = state["striped"]
+        self._estates = EnvState(*(jnp.asarray(x) for x in s["estates"]))
+        self._core_s = jnp.asarray(s["core_s"])
+        self._uncore_s = jnp.asarray(s["uncore_s"])
+        self._arms = jnp.asarray(s["arms"])
+        self._key = jax.random.wrap_key_data(jnp.asarray(state["host"]["key"]))
+        self._interval = int(state["host"]["interval"])
+
     # -- episode scan surface (kernels.episode_scan) -------------------
     @property
     def drift_every(self) -> int:
@@ -505,6 +555,17 @@ class TraceReplayBackend(EnergyBackend):
     def read_counters(self) -> Counters:
         i = self._cursor
         return Counters(*(np.asarray(leaf)[i] for leaf in self.trace))
+
+    # -- checkpoint surface --------------------------------------------
+    def state_dict(self) -> PyTree:
+        """Only the replay cursor: the trace is immutable input, loaded
+        from disk (column-sliced) at construction, so an elastic restore
+        has no striped leaves to stitch. ``requested_arms`` is a log,
+        not state — a resumed replay re-requests from the cursor on."""
+        return {"striped": {}, "host": {"cursor": np.int64(self._cursor)}}
+
+    def load_state_dict(self, state: PyTree) -> None:
+        self._cursor = int(state["host"]["cursor"])
 
     def local_slice(self, lo: int, hi: int) -> "TraceReplayBackend":
         """The trace columns [lo, hi) as a per-host replay backend: a

@@ -313,6 +313,47 @@ class EnergyController:
         self._n_steps += tt
         return self.summary()
 
+    # -- checkpoint surface (train.checkpoint via the fleet controller) -
+    def state_dict(self) -> PyTree:
+        """Checkpointable controller state, split per the distributed
+        control plane's contract: per-node leaves (policy state, the
+        pre-selected next arms, the counter snapshots) under
+        ``"striped"`` with their leading N axis; the RNG key chain and
+        step count under ``"host"`` (every host burns one split per
+        interval from the same seed, so these are identical across a
+        striped fleet at a common interval — elastic restores can take
+        them from any covering stripe). Forces the initial arm
+        selection if it hasn't happened yet (the same split ``step``
+        would burn), so the snapshot always holds concrete next arms."""
+        if self._arms is None:
+            self._key, k = jax.random.split(self._key)
+            self._arms = self.fleet.select(self._states, k)
+        return {
+            "striped": {
+                "states": dict(self._states),
+                "arms": self._arms,
+                "last": self._last,
+                "start": self._start,
+            },
+            "host": {
+                "key": jax.random.key_data(self._key),
+                "n_steps": np.int64(self._n_steps),
+            },
+        }
+
+    def load_state_dict(self, state: PyTree) -> None:
+        """Adopt a :meth:`state_dict` snapshot: the next :meth:`step`
+        actuates the restored pre-selected arms and continues the exact
+        key/observation stream the saver would have produced."""
+        s = state["striped"]
+        self._states = {k: jnp.asarray(v) for k, v in s["states"].items()}
+        self._arms = jnp.asarray(s["arms"])
+        self.last_arms = self._arms
+        self._last = Counters(*(jnp.asarray(x) for x in s["last"]))
+        self._start = Counters(*(jnp.asarray(x) for x in s["start"]))
+        self._key = jax.random.wrap_key_data(jnp.asarray(state["host"]["key"]))
+        self._n_steps = int(state["host"]["n_steps"])
+
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
         """Job-so-far telemetry vs the static-f_max baseline (per-node

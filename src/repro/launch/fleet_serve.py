@@ -60,6 +60,38 @@ single-process run. ``--jax-distributed`` switches coordination to
 ``jax.distributed`` initialization for real multi-host TPU/GPU
 deployments (the socket coordinator still carries the periodic
 aggregates).
+
+**Fault tolerance & the crash-restart runbook.** ``--checkpoint-dir
+CKPT --checkpoint-every K`` makes every host checkpoint its stripe
+(fused-kernel controller state, backend env rows/cursor, arm log —
+train.checkpoint async_save under ``CKPT/stripe_<lo>_<hi>/``) every K
+GLOBAL intervals, plus a final blocking save. Recovery is then one
+rule: RE-RUN THE SAME COMMAND LINE.
+
+- One host crashed (OOM, SIGKILL, node reboot): relaunch that host's
+  exact command. It restores the latest checkpoint for its stripe,
+  dials the still-running coordinator (bounded retry with backoff),
+  is admitted as a rejoining member — skipping the start barrier —
+  and replays forward bit-exact (noise is keyed by global node id,
+  drift phases by global interval index). Meanwhile the live fleet
+  kept going: aggregate ticks are stale-tolerant folds over live
+  hosts, never blocking on the dead one.
+- The whole fleet died (power loss, preemption): relaunch every
+  host's command. A fresh rendezvous forms, every host auto-resumes
+  its stripe checkpoint, and the run continues from the latest common
+  interval.
+- Membership changed for good (a host is NOT coming back): restart
+  the fleet at the new size against the same --checkpoint-dir — each
+  new stripe is stitched row-wise out of the old stripe checkpoints
+  at their latest common step (train.checkpoint.restore_stripe; the
+  coordinator broadcasts the epoch-stamped stripe map live hosts
+  WOULD own, see parallel.distributed.FleetEpoch).
+
+The coordinator (host 0) is the one process that must stay up for
+mid-run rejoin; if it dies, fall back to the whole-fleet restart rule.
+``--pace S`` sleeps S seconds per interval (the paper's decision
+intervals are seconds-scale; also what makes kill/rejoin windows
+controllable in the fault-injection soak).
 """
 from __future__ import annotations
 
@@ -69,6 +101,7 @@ import secrets
 import socket
 import subprocess
 import sys
+import time
 
 import numpy as np
 
@@ -159,6 +192,19 @@ def parse_args(argv=None):
                     help="intervals per drift phase (required with --drift)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--report-every", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="stripe-checkpoint root: each host saves its "
+                         "stripe under <dir>/stripe_<lo>_<hi>/ and "
+                         "AUTO-RESUMES from it at launch (the crash-"
+                         "restart runbook: re-run the same command)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint cadence in GLOBAL intervals "
+                         "(0 = only the final state; needs "
+                         "--checkpoint-dir)")
+    ap.add_argument("--pace", type=float, default=0.0,
+                    help="sleep this many seconds per interval "
+                         "(seconds-scale decision intervals; streaming "
+                         "only)")
     ap.add_argument("--interpret", action="store_true",
                     help="force the fused Pallas kernel in interpret mode "
                          "(parity testing off-TPU)")
@@ -308,34 +354,69 @@ def run_host(args) -> dict:
             backend, comm, stripe=(lo, hi), n_total=n_total,
             seed=args.seed, interpret=args.interpret,
             log_arms=args.out is not None,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
         )
-        comm.barrier("start")
+        resumed = 0
+        if ctl.try_restore():
+            resumed = ctl.interval
+            print(f"host {comm.host_id}: resumed stripe {ctl.stripe} "
+                  f"from checkpoint at interval {resumed}", flush=True)
+        # a host admitted to an already-running fleet must not wait on
+        # the start barrier — that round completed long ago
+        if not comm.rejoined:
+            comm.barrier("start")
 
         def on_report(i, fleet):
             if lead:
                 print(f"[interval {i:5d}] fleet energy {fleet['energy_j']:.1f} J"
                       + (f", saved {fleet['saved_energy_pct']:.1f}%"
                          if "saved_energy_pct" in fleet else "")
-                      + f", {fleet['switches']} switches", flush=True)
+                      + f", {fleet['switches']} switches"
+                      + f", {fleet['hosts']}/{comm.num_hosts} hosts",
+                      flush=True)
 
-        fleet = ctl.run(intervals, report_every=args.report_every,
+        work_fn = ((lambda: time.sleep(args.pace)) if args.pace > 0
+                   else None)
+        fleet = ctl.run(max(0, intervals - resumed), work_fn=work_fn,
+                        report_every=args.report_every,
                         on_report=on_report,
                         episode_scan=args.episode_scan)
         if args.out is not None:
-            arms = ctl.gather_arms()
-            # final controller state rides along so parity tests can
-            # compare state trajectories, not just the arms
-            states = comm.allgather(
-                {k: np.asarray(v) for k, v in ctl.controller.states.items()},
-                tag="states",
+            # one strict gather: each live host's stripe bounds, arm
+            # log and final controller state (so parity tests can
+            # compare state trajectories, not just arms). Dead hosts
+            # leave None slots; their stripes are filled with -1/0 and
+            # recorded in missing_hosts instead of stalling the fleet.
+            local = (np.stack(ctl.arm_log) if ctl.arm_log
+                     else np.zeros((0, ctl.n_local), np.int32))
+            out = comm.allgather(
+                {"stripe": ctl.stripe, "arms": local,
+                 "states": {k: np.asarray(v)
+                            for k, v in ctl.controller.states.items()}},
+                tag="out",
             )
             if lead:
-                merged = {f"state_{k}": np.concatenate([s[k] for s in states])
-                          for k in states[0]}
+                t = max(g["arms"].shape[0] for g in out if g is not None)
+                arms = np.full((t, ctl.n_total), -1, np.int32)
+                merged = {}
+                for g in out:
+                    if g is None:
+                        continue
+                    glo, ghi = g["stripe"]
+                    arms[: g["arms"].shape[0], glo:ghi] = g["arms"]
+                    for k, v in g["states"].items():
+                        merged.setdefault(
+                            f"state_{k}",
+                            np.zeros((ctl.n_total,) + v.shape[1:], v.dtype),
+                        )[glo:ghi] = v
                 stripes = stripe_bounds(ctl.n_total, comm.num_hosts)
                 np.savez(args.out, arms=arms,
                          stripe_lo=np.asarray([s[0] for s in stripes]),
                          stripe_hi=np.asarray([s[1] for s in stripes]),
+                         missing_hosts=np.asarray(
+                             [h for h, g in enumerate(out) if g is None],
+                             np.int32),
                          **merged)
         if args.workload == "serve" and args.trace is None:
             # QoS accounting is per completed request, so each host
@@ -396,6 +477,11 @@ def spawn_local(args) -> int:
     if args.drift is not None:
         base += ["--drift", args.drift, "--drift-every",
                  str(args.drift_every)]
+    if args.checkpoint_dir is not None:
+        base += ["--checkpoint-dir", args.checkpoint_dir,
+                 "--checkpoint-every", str(args.checkpoint_every)]
+    if args.pace:
+        base += ["--pace", str(args.pace)]
     if args.interpret:
         base += ["--interpret"]
     if args.episode_scan:

@@ -1,15 +1,18 @@
 from repro.parallel.distributed import (
     DistributedFleetController,
     FleetComm,
+    FleetEpoch,
     connect_fleet,
     init_jax_distributed,
     parse_address,
+    restore_fleet_controller,
 )
 from repro.parallel.fleet import (
     fleet_mesh,
     host_stripe,
     make_sharded_fleet_step,
     stripe_bounds,
+    stripe_map,
 )
 from repro.parallel.sharding import DEFAULT_RULES, Sharder, spec_for_axes
 
@@ -17,6 +20,7 @@ __all__ = [
     "DEFAULT_RULES",
     "DistributedFleetController",
     "FleetComm",
+    "FleetEpoch",
     "Sharder",
     "connect_fleet",
     "fleet_mesh",
@@ -24,6 +28,8 @@ __all__ = [
     "init_jax_distributed",
     "make_sharded_fleet_step",
     "parse_address",
+    "restore_fleet_controller",
     "spec_for_axes",
     "stripe_bounds",
+    "stripe_map",
 ]

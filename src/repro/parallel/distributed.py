@@ -29,15 +29,59 @@ within one process). Hosts coordinate only through
   every process and each host may additionally shard its own stripe over
   its local chips.
 
+**Fault tolerance.** Node churn is the steady state at datacenter scale,
+so the coordinator runs lease-based membership instead of lockstep
+all-or-nothing rounds:
+
+- *Liveness is wire liveness.* A SIGKILLed/crashed peer's TCP socket
+  closes; the coordinator marks it dead (and bumps the membership
+  ``epoch``) the moment a recv/send on that socket errors. A live host
+  that merely misses a fold round's lease window contributes a ``None``
+  (stale) slot but keeps its membership — optional consecutive-miss
+  eviction is available via ``max_missed_folds``.
+- *Two gather verbs.* ``allgather(payload, tag)`` is STRICT: it waits
+  (bounded by ``round_timeout_s``, picking up mid-round joins) for every
+  live member and raises ``TimeoutError`` naming the missing hosts —
+  used for the start barrier and the final state/arm gathers, where
+  bit-exactness demands every stripe. ``fold(payload, tag)`` is
+  STALE-TOLERANT: the coordinator collects whatever live members deliver
+  within ``lease_s`` (dead or late hosts yield ``None`` slots), and
+  clients never block — they send and drain whatever round results have
+  arrived, so a behind/rejoining host can't stall the fleet's periodic
+  aggregates and the fleet can't stall it.
+- *Epoch-stamped stripe maps.* Every round result is broadcast in an
+  envelope carrying a :class:`FleetEpoch` — the membership epoch, the
+  live host ids, and (when the coordinator knows ``n_total``) the
+  ``stripe_map`` those members WOULD own after an elastic re-stripe.
+  The map is advisory: surviving hosts never re-stripe mid-run (that
+  would break bit-exactness); it is applied at checkpoint boundaries by
+  :func:`restore_fleet_controller`, which stitches the new stripe out of
+  per-stripe checkpoints (train.checkpoint.restore_stripe).
+- *Rejoin.* A restarted host dials the same coordinator address
+  (bounded retry with exponential backoff), is admitted mid-run with a
+  ``rejoined=True`` join ACK (so it skips the start barrier), restores
+  the latest checkpoint for its stripe, and replays forward — the
+  observation-determined determinism (noise keyed by global node id,
+  drift phases by global interval index) makes the replay bit-identical
+  to the run it crashed out of.
+
+The coordinator process itself is a single point of failure (see
+ROADMAP design notes); every OTHER host may die and return freely.
+
 Bit-parity with the single-process sharded step is the correctness
 oracle: a 2-process run must reproduce the exact arm/state trajectories
-of one process owning the whole fleet (tests/test_distributed.py).
+of one process owning the whole fleet (tests/test_distributed.py), and
+an 8-process run with a SIGKILL + resurrect mid-run must still match it
+arm for arm (tests/test_fault_tolerance.py).
 """
 from __future__ import annotations
 
+import socket
+import threading
 import time
 from multiprocessing.connection import Client, Listener
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from multiprocessing.connection import wait as conn_wait
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -45,7 +89,8 @@ from repro.core.fleet import slice_policy_lanes
 from repro.core.policies import Policy
 from repro.energy.backend import EnergyBackend
 from repro.energy.controller import EnergyController, reduce_summaries
-from repro.parallel.fleet import host_stripe
+from repro.parallel.fleet import host_stripe, stripe_map
+from repro.train import checkpoint as ckpt
 
 # Rendezvous auth (multiprocessing.connection HMAC handshake). The
 # payloads are pickles, so WHOEVER HOLDS THE KEY CAN EXECUTE CODE on the
@@ -78,24 +123,59 @@ def init_jax_distributed(coordinator: str, num_hosts: int, host_id: int):
 
 
 # ---------------------------------------------------------------------------
-# the socket coordinator: startup barrier + periodic aggregate gathers
+# the socket coordinator: lease membership, strict + stale-tolerant rounds
 # ---------------------------------------------------------------------------
 
 
+class FleetEpoch(NamedTuple):
+    """One epoch of fleet membership, broadcast with every round result.
+
+    ``epoch`` bumps on every death/join; ``members`` are the live host
+    ids (sorted, coordinator included); ``stripes`` maps each live
+    member to the (lo, hi) node stripe it WOULD own after an elastic
+    re-stripe (``parallel.fleet.stripe_map``), or None when the
+    coordinator was never told the fleet width. Advisory: applied only
+    at checkpoint boundaries, never mid-run."""
+
+    epoch: int
+    members: Tuple[int, ...]
+    stripes: Optional[Dict[int, Tuple[int, int]]]
+
+
 class FleetComm:
-    """H-process rendezvous with one verb: ``allgather(payload, tag)``
-    returns every host's payload ordered by host_id, on every host. Tags
-    guard against rounds drifting out of step (every gather in the
-    control plane happens at the same logical point on all hosts)."""
+    """H-process rendezvous with two verbs. ``allgather(payload, tag)``
+    is the STRICT round: one slot per host id, ``None`` where a host is
+    dead, blocking until every live member contributes (tags guard
+    against rounds drifting out of step). ``fold(payload, tag)`` is the
+    STALE-TOLERANT round for periodic aggregates: dead AND late hosts
+    yield ``None`` slots, and non-coordinator hosts never block (they
+    may return ``None`` before any round result has arrived)."""
 
     num_hosts: int
     host_id: int
+    # True when this comm was admitted to an already-running fleet (a
+    # restarted host): the caller must skip the start barrier and
+    # restore its stripe's checkpoint instead
+    rejoined: bool = False
+    _n_total: Optional[int] = None
 
     def allgather(self, payload: Any, tag: str) -> List[Any]:
         raise NotImplementedError
 
+    def fold(self, payload: Any, tag: str) -> Optional[List[Any]]:
+        return self.allgather(payload, tag)
+
     def barrier(self, tag: str = "barrier") -> None:
         self.allgather(None, tag)
+
+    def set_fleet_size(self, n_total: int) -> None:
+        """Tell the comm the fleet width so membership broadcasts can
+        carry elastic stripe maps (no-op where that's not its job)."""
+        self._n_total = int(n_total)
+
+    def fleet_epoch(self) -> Optional[FleetEpoch]:
+        """The latest known membership epoch (None before any round)."""
+        return None
 
     def close(self) -> None:
         pass
@@ -115,31 +195,63 @@ class NullComm(FleetComm):
     def allgather(self, payload: Any, tag: str) -> List[Any]:
         return [payload]
 
+    def fleet_epoch(self) -> Optional[FleetEpoch]:
+        stripes = {0: (0, self._n_total)} if self._n_total else None
+        return FleetEpoch(0, (0,), stripes)
+
 
 class CoordinatorComm(FleetComm):
     """Host 0: serves the rendezvous socket and participates in every
-    gather in-process. Accepts exactly H-1 peers at startup (each peer
-    identifies itself with its host_id), then each allgather round
-    collects one tagged payload per peer and broadcasts the full list."""
+    round in-process. Accepts H-1 peers at startup, then keeps a
+    lifetime accept thread so crashed hosts can dial back in mid-run
+    (admission bumps the membership epoch; a reconnect under an id that
+    is still live supersedes the stale socket — latest lease wins).
+
+    Strict rounds collect one tagged payload per live member (skimming
+    stale leftovers a resurrected host re-sent), refresh membership
+    every poll tick so mid-round joins are waited for, and raise
+    ``TimeoutError`` naming the hosts still missing at
+    ``round_timeout_s``. Fold rounds wait at most ``lease_s``, drain
+    each member's queue to its freshest payload, and leave ``None`` in
+    the slots of dead or late hosts. Wire errors (EOF/RST — the SIGKILL
+    signature) remove membership immediately in either mode; with
+    ``max_missed_folds=k``, a connected-but-silent host is also evicted
+    after k consecutive missed fold leases."""
 
     def __init__(self, address: Tuple[str, int], num_hosts: int,
-                 authkey: bytes = DEFAULT_AUTHKEY, timeout_s: float = 120.0):
+                 authkey: bytes = DEFAULT_AUTHKEY, timeout_s: float = 120.0,
+                 round_timeout_s: float = 120.0, lease_s: float = 5.0,
+                 max_missed_folds: Optional[int] = None,
+                 n_total: Optional[int] = None):
         self.num_hosts, self.host_id = int(num_hosts), 0
-        self._listener = Listener(address, authkey=authkey)
+        self.round_timeout_s = float(round_timeout_s)
+        self.lease_s = float(lease_s)
+        self.max_missed_folds = max_missed_folds
+        self._n_total = n_total
+        # backlog sized to the fleet: H-1 peers dial at once during
+        # rendezvous, and the default backlog of 1 bounces the rest
+        # into ~1s of connect backoff each
+        self._listener = Listener(address, backlog=num_hosts + 1,
+                                  authkey=authkey)
         self.address = self._listener.address
+        self._lock = threading.Lock()
         self._conns: Dict[int, Any] = {}
+        self._epoch = 0
+        self._dead: Dict[int, str] = {}
+        self._misses: Dict[int, int] = {}
+        self._stash: Dict[int, Dict[str, Any]] = {}
+        self._closing = False
         # a peer that dies before connecting must fail the rendezvous
         # fast, not hang host 0 (and CI) until the job timeout. A
         # timeout on the listening socket is the only reliable way to
         # bound the blocking accept (closing the listener from another
         # thread does NOT wake accept on Linux); accepted connections
-        # come back blocking, so gather rounds are unaffected. (A peer
-        # that connects but never sends its host_id can still block the
-        # handshake recv — the connect itself is the flaky part.)
+        # come back blocking, so gather rounds are unaffected.
         sock = getattr(getattr(self._listener, "_listener", None),
                        "_socket", None)
         if sock is not None:
             sock.settimeout(timeout_s)
+        deadline = time.monotonic() + timeout_s
         while len(self._conns) < num_hosts - 1:
             try:
                 conn = self._listener.accept()
@@ -149,57 +261,297 @@ class CoordinatorComm(FleetComm):
                     f"fleet rendezvous: {len(self._conns) + 1}/"
                     f"{num_hosts} hosts checked in after {timeout_s}s"
                 ) from None
-            peer = int(conn.recv())
-            if peer in self._conns or not 0 < peer < num_hosts:
-                conn.close()
-                raise RuntimeError(f"bad or duplicate host_id {peer}")
-            self._conns[peer] = conn
+            self._admit(conn, rejoined=False,
+                        handshake_s=max(0.1, deadline - time.monotonic()))
+        # post-rendezvous: keep accepting for the fleet's lifetime so
+        # dead hosts can resurrect; a short socket timeout lets the
+        # thread observe close()
+        if sock is not None:
+            sock.settimeout(1.0)
+        self._acceptor = threading.Thread(target=self._accept_loop,
+                                          daemon=True)
+        self._acceptor.start()
 
-    def allgather(self, payload: Any, tag: str) -> List[Any]:
-        gathered = {0: payload}
-        for peer, conn in self._conns.items():
-            got_peer, got_tag, data = conn.recv()
-            if got_peer != peer or got_tag != tag:
-                raise RuntimeError(
-                    f"fleet comm out of step: expected {(peer, tag)}, "
-                    f"got {(got_peer, got_tag)}"
-                )
-            gathered[peer] = data
-        out = [gathered[h] for h in range(self.num_hosts)]
-        for conn in self._conns.values():
-            conn.send(out)
+    # -- membership ----------------------------------------------------
+    def _admit(self, conn, rejoined: bool, handshake_s: float = 10.0):
+        """Handshake (peer sends its host_id) and register the peer; an
+        id that is still registered supersedes its stale socket. Bad
+        handshakes close the connection without killing the fleet."""
+        try:
+            if not conn.poll(handshake_s):
+                conn.close()
+                return
+            peer = int(conn.recv())
+        except (EOFError, OSError, ValueError, TypeError):
+            conn.close()
+            return
+        if not 0 < peer < self.num_hosts:
+            conn.close()
+            return
+        with self._lock:
+            if peer in self._conns:
+                self._mark_dead_locked(peer, "superseded by reconnect")
+            self._conns[peer] = conn
+            self._epoch += 1
+            self._dead.pop(peer, None)
+            self._misses.pop(peer, None)
+            self._stash.pop(peer, None)
+            try:
+                conn.send(("__join__", self._fleet_epoch_locked(), rejoined))
+            except (OSError, ValueError):
+                self._mark_dead_locked(peer, "join ack failed")
+
+    def _accept_loop(self):
+        while not self._closing:
+            try:
+                conn = self._listener.accept()
+            except Exception:
+                # socket timeout tick, close()'s waker dial, or a peer
+                # failing the HMAC handshake — none may kill the
+                # fleet's rejoin path
+                if self._closing:
+                    return
+                continue
+            self._admit(conn, rejoined=True)
+
+    def _mark_dead_locked(self, host: int, reason: str):
+        conn = self._conns.pop(host, None)
+        if conn is None:
+            return
+        try:
+            conn.close()
+        except OSError:
+            pass
+        self._epoch += 1
+        self._dead[host] = reason
+        self._misses.pop(host, None)
+        self._stash.pop(host, None)
+
+    def _mark_dead(self, host: int, reason: str):
+        with self._lock:
+            self._mark_dead_locked(host, reason)
+
+    def _fleet_epoch_locked(self) -> FleetEpoch:
+        members = tuple(sorted([0, *self._conns]))
+        stripes = (stripe_map(self._n_total, members)
+                   if self._n_total else None)
+        return FleetEpoch(self._epoch, members, stripes)
+
+    def fleet_epoch(self) -> FleetEpoch:
+        with self._lock:
+            return self._fleet_epoch_locked()
+
+    def dead_hosts(self) -> Dict[int, str]:
+        """host_id -> reason for every host that has left the fleet
+        (cleared again if it rejoins)."""
+        with self._lock:
+            return dict(self._dead)
+
+    # -- rounds --------------------------------------------------------
+    def _round(self, tag: str, payload: Any, strict: bool) -> List[Any]:
+        results: Dict[int, Any] = {0: payload}
+        deadline = time.monotonic() + (self.round_timeout_s if strict
+                                       else self.lease_s)
+        while True:
+            with self._lock:
+                live = dict(self._conns)
+                if strict:
+                    for h, stash in self._stash.items():
+                        if h not in results and tag in stash:
+                            results[h] = stash.pop(tag)
+            pending = {h: c for h, c in live.items() if h not in results}
+            if not pending:
+                break
+            left = deadline - time.monotonic()
+            if left <= 0:
+                break
+            # short poll ticks so mid-round joins/deaths are picked up
+            for conn in conn_wait(list(pending.values()),
+                                  timeout=min(left, 0.25)):
+                h = next(hh for hh, cc in pending.items() if cc is conn)
+                try:
+                    got = self._drain(h, conn, tag, strict)
+                except (EOFError, ConnectionResetError, OSError):
+                    self._mark_dead(h, "connection lost")
+                    continue
+                if got is not None:
+                    results[h] = got[0]
+        with self._lock:
+            missing = [h for h in self._conns if h not in results]
+        if strict and missing:
+            raise TimeoutError(
+                f"strict gather {tag!r}: hosts {sorted(missing)} still "
+                f"missing after {self.round_timeout_s}s (live members "
+                f"{sorted([0, *live])}, dead {self.dead_hosts()})"
+            )
+        with self._lock:
+            for h in live:
+                if h in results:
+                    self._misses.pop(h, None)
+                elif h in self._conns:
+                    self._misses[h] = self._misses.get(h, 0) + 1
+                    if (self.max_missed_folds is not None
+                            and self._misses[h] >= self.max_missed_folds):
+                        self._mark_dead_locked(
+                            h, f"lease expired ({self.max_missed_folds} "
+                               "consecutive missed folds)")
+        out = [results.get(h) for h in range(self.num_hosts)]
+        self._broadcast(("__round__", tag, self.fleet_epoch(), out))
         return out
 
+    def _drain(self, host: int, conn, tag: str, strict: bool):
+        """Consume ``host``'s queued messages. Strict: stash off-tag
+        strict payloads for their own round, skim (drop) stale folds,
+        return the matching payload if present. Fold: return the
+        freshest fold payload, stashing any strict payloads untouched
+        (a host far ahead must not have its barrier send eaten)."""
+        got = None
+        while True:
+            peer_id, msg_tag, data, msg_strict = conn.recv()
+            if msg_strict:
+                if strict and msg_tag == tag:
+                    return (data,)
+                self._stash.setdefault(host, {})[msg_tag] = data
+            elif not strict:
+                got = (data,)  # freshest fold wins
+            # strict rounds skim (drop) stale fold leftovers
+            if not conn.poll(0):
+                return got
+
+    def _broadcast(self, envelope) -> None:
+        with self._lock:
+            for h, conn in list(self._conns.items()):
+                try:
+                    conn.send(envelope)
+                except (OSError, ValueError):
+                    self._mark_dead_locked(h, "broadcast failed")
+
+    def allgather(self, payload: Any, tag: str) -> List[Any]:
+        return self._round(tag, payload, strict=True)
+
+    def fold(self, payload: Any, tag: str) -> List[Any]:
+        return self._round(tag, payload, strict=False)
+
     def close(self) -> None:
-        for conn in self._conns.values():
-            conn.close()
+        self._closing = True
+        # closing a listening socket does NOT interrupt a blocked accept
+        # on Linux; a throwaway dial does (it fails the HMAC handshake
+        # and the accept loop sees _closing on the way around)
+        if isinstance(self.address, tuple):
+            try:
+                socket.create_connection(self.address, timeout=0.2).close()
+            except OSError:
+                pass
         self._listener.close()
+        acceptor = getattr(self, "_acceptor", None)
+        if acceptor is not None:
+            acceptor.join(timeout=2.0)
+        with self._lock:
+            for conn in self._conns.values():
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+            self._conns.clear()
 
 
 class ClientComm(FleetComm):
-    """Hosts 1..H-1: connect (with retry while host 0 comes up), then
-    mirror the coordinator's gather rounds."""
+    """Hosts 1..H-1: dial the coordinator (bounded retry with
+    exponential backoff while host 0 comes up — or comes BACK up), then
+    mirror its rounds. The join ACK says whether this comm was admitted
+    to an already-running fleet (``rejoined``), and every round envelope
+    refreshes the cached :meth:`fleet_epoch`."""
 
     def __init__(self, address: Tuple[str, int], num_hosts: int, host_id: int,
-                 authkey: bytes = DEFAULT_AUTHKEY, timeout_s: float = 60.0):
+                 authkey: bytes = DEFAULT_AUTHKEY, timeout_s: float = 60.0,
+                 round_timeout_s: float = 150.0):
         self.num_hosts, self.host_id = int(num_hosts), int(host_id)
+        self.round_timeout_s = float(round_timeout_s)
         deadline = time.monotonic() + timeout_s
+        delay, attempts = 0.05, 0
         while True:
             try:
                 self._conn = Client(address, authkey=authkey)
                 break
-            except (ConnectionError, OSError):
-                if time.monotonic() > deadline:
+            except (ConnectionError, EOFError, OSError):
+                attempts += 1
+                if time.monotonic() + delay > deadline:
                     raise TimeoutError(
-                        f"host {host_id}: coordinator {address} not up "
-                        f"after {timeout_s}s"
-                    )
-                time.sleep(0.1)
+                        f"host {host_id}: coordinator {address} not "
+                        f"accepting after {attempts} attempts over "
+                        f"{timeout_s}s — is host 0 up, and do both ends "
+                        "share FLEET_AUTHKEY?"
+                    ) from None
+                time.sleep(delay)
+                delay = min(delay * 2, 1.0)
         self._conn.send(self.host_id)
+        if not self._conn.poll(max(1.0, deadline - time.monotonic())):
+            raise TimeoutError(
+                f"host {host_id}: coordinator accepted the connection "
+                "but sent no join ACK (handshake stalled)"
+            )
+        kind, epoch, rejoined = self._conn.recv()
+        assert kind == "__join__", kind
+        self._epoch: FleetEpoch = epoch
+        self.rejoined = bool(rejoined)
+        self._last_round: Optional[List[Any]] = None
+
+    def _read(self, msg) -> Optional[Tuple[str, List[Any]]]:
+        kind = msg[0]
+        if kind == "__round__":
+            _, tag, epoch, out = msg
+            self._epoch = epoch
+            self._last_round = out
+            return tag, out
+        if kind == "__join__":
+            self._epoch = msg[1]
+        return None
 
     def allgather(self, payload: Any, tag: str) -> List[Any]:
-        self._conn.send((self.host_id, tag, payload))
-        return self._conn.recv()
+        """Strict: send, then block for THIS tag's round envelope
+        (skimming fold results broadcast in between)."""
+        self._send(tag, payload, strict=True)
+        deadline = time.monotonic() + self.round_timeout_s
+        while True:
+            if not self._conn.poll(max(0.0, deadline - time.monotonic())):
+                raise TimeoutError(
+                    f"host {self.host_id}: no {tag!r} round result after "
+                    f"{self.round_timeout_s}s — coordinator gone?"
+                )
+            got = self._read(self._recv())
+            if got is not None and got[0] == tag:
+                return got[1]
+
+    def fold(self, payload: Any, tag: str) -> Optional[List[Any]]:
+        """Stale-tolerant: send, drain whatever envelopes have arrived,
+        return the latest known round result (None before the first one
+        lands). Never blocks — a behind host can't stall the fleet and
+        the fleet can't stall it."""
+        self._send(tag, payload, strict=False)
+        while self._conn.poll(0):
+            self._read(self._recv())
+        return self._last_round
+
+    def _send(self, tag: str, payload: Any, strict: bool) -> None:
+        try:
+            self._conn.send((self.host_id, tag, payload, strict))
+        except (OSError, ValueError):
+            raise RuntimeError(
+                f"host {self.host_id}: coordinator connection lost "
+                "(evicted or superseded?) — restart this host to rejoin"
+            ) from None
+
+    def _recv(self):
+        try:
+            return self._conn.recv()
+        except (EOFError, ConnectionResetError, OSError):
+            raise RuntimeError(
+                f"host {self.host_id}: coordinator connection lost "
+                "(evicted or superseded?) — restart this host to rejoin"
+            ) from None
+
+    def fleet_epoch(self) -> FleetEpoch:
+        return self._epoch
 
     def close(self) -> None:
         self._conn.close()
@@ -207,21 +559,24 @@ class ClientComm(FleetComm):
 
 def connect_fleet(num_hosts: int, host_id: int,
                   address: Optional[Tuple[str, int]] = None,
-                  authkey: bytes = DEFAULT_AUTHKEY) -> FleetComm:
-    """The one entry point: host 0 serves, the rest connect, H=1 is a
-    no-op comm. Blocks until the whole fleet has checked in."""
+                  authkey: bytes = DEFAULT_AUTHKEY, **kw) -> FleetComm:
+    """The one entry point: host 0 serves, the rest connect (with
+    bounded retry-with-backoff while the listener comes up), H=1 is a
+    no-op comm. Blocks until the whole fleet has checked in — or, for a
+    client dialing an already-running fleet, until it is admitted as a
+    rejoining member (``comm.rejoined``)."""
     if num_hosts == 1:
         return NullComm()
     if address is None:
         raise ValueError("multi-host fleets need a coordinator address")
     if host_id == 0:
-        return CoordinatorComm(address, num_hosts, authkey=authkey)
-    return ClientComm(address, num_hosts, host_id, authkey=authkey)
+        return CoordinatorComm(address, num_hosts, authkey=authkey, **kw)
+    return ClientComm(address, num_hosts, host_id, authkey=authkey, **kw)
 
 
 # ---------------------------------------------------------------------------
 # the distributed controller: one stripe per process, zero per-interval
-# collectives
+# collectives, periodic stripe checkpoints
 # ---------------------------------------------------------------------------
 
 
@@ -234,7 +589,18 @@ class DistributedFleetController:
     full-fleet description, then slices its own stripe — parity by
     construction) or pass an already-local backend with its ``stripe``.
     ``step``/``run`` never touch the network; ``fleet_summary`` and the
-    optional ``report_every`` ticks gather H small summary dicts."""
+    optional ``report_every`` ticks gather H small summary dicts
+    (stale-tolerant folds, so a dead host degrades the aggregate to the
+    live stripes instead of blocking the fleet).
+
+    ``checkpoint_dir`` + ``checkpoint_every`` enable periodic stripe
+    checkpoints (train.checkpoint async_save under
+    ``<dir>/stripe_<lo>_<hi>/``) of the fused-kernel controller state,
+    the backend cursor/env rows and the arm log, all keyed by the
+    GLOBAL interval index — so a crash-restarted host
+    (:meth:`try_restore`) resumes bit-exact, and an elastically
+    re-striped one (:func:`restore_fleet_controller`) stitches its new
+    stripe from whatever stripes were saved."""
 
     def __init__(self, policy: Policy, local_backend: EnergyBackend,
                  comm: Optional[FleetComm] = None,
@@ -242,11 +608,13 @@ class DistributedFleetController:
                  n_total: Optional[int] = None, seed: int = 0,
                  use_kernel: Optional[bool] = None, interpret: bool = False,
                  record_history: bool = False, mesh=None,
-                 log_arms: bool = False):
+                 log_arms: bool = False, checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0, keep_last: int = 3):
         self.comm = comm or NullComm()
         self.stripe = stripe or (0, local_backend.n_nodes)
         self.n_total = int(n_total or local_backend.n_nodes)
         self.n_local = int(local_backend.n_nodes)
+        self.comm.set_fleet_size(self.n_total)
         self.controller = EnergyController(
             policy, local_backend, seed=seed, use_kernel=use_kernel,
             interpret=interpret, record_history=record_history, mesh=mesh,
@@ -254,6 +622,13 @@ class DistributedFleetController:
         self.log_arms = log_arms
         self.arm_log: List[np.ndarray] = []
         self.reports: List[Dict[str, Any]] = []
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = int(checkpoint_every)
+        self.keep_last = int(keep_last)
+        # GLOBAL interval index (survives crash-restart restores), the
+        # key for checkpoint/report cadences so a resumed host realigns
+        # with the fleet's tick boundaries
+        self.interval = 0
 
     @classmethod
     def from_global(cls, policy: Policy, backend: EnergyBackend,
@@ -274,6 +649,7 @@ class DistributedFleetController:
     def step(self, work_fn: Optional[Callable[[], Any]] = None) -> Dict[str, Any]:
         """One host-local decision interval — no collectives."""
         rec = self.controller.step(work_fn)
+        self.interval += 1
         if self.log_arms:
             self.arm_log.append(
                 np.asarray(self.controller.last_arms).reshape(self.n_local)
@@ -287,18 +663,35 @@ class DistributedFleetController:
             episode_scan: bool = False,
             ) -> Dict[str, Any]:
         """Drive the stripe for ``n_intervals``; every ``report_every``
-        intervals (0 = never) gather the fleet aggregate and append it
-        to ``self.reports`` (``on_report(interval, fleet_summary)`` fires
-        on every host). Returns the final fleet summary.
+        intervals (0 = never) fold the fleet aggregate and append it to
+        ``self.reports`` (``on_report(interval, fleet_summary)`` fires
+        on every host that has a round result — the coordinator always
+        does; clients may lag a tick, that's the stale-fold contract).
+        Cadences key off the GLOBAL interval index, so a resumed host
+        realigns with the fleet's boundaries. Returns the final fleet
+        summary (a STRICT gather: every live stripe contributes).
 
         ``episode_scan=True`` advances the stripe in fused episode-scan
         chunks (``EnergyController.run_scanned`` — one dispatch per
-        chunk of ``report_every`` intervals, or the whole run when
-        reporting is off) instead of per-interval steps. Striping is
-        unaffected: the scan is host-local (noise is keyed by global
-        node id, the drift schedule by global interval index), and the
-        reporting/arm-log cadence is preserved. ``work_fn`` cannot run
+        chunk up to the next report/checkpoint boundary) instead of
+        per-interval steps. Striping is unaffected: the scan is
+        host-local (noise is keyed by global node id, the drift
+        schedule by global interval index), and the reporting/arm-log/
+        checkpoint cadences are preserved. ``work_fn`` cannot run
         inside a fused episode."""
+        ckpt_every = self.checkpoint_every if self.checkpoint_dir else 0
+
+        def tick():
+            if ckpt_every and self.interval % ckpt_every == 0:
+                self.save_checkpoint()
+            if report_every and self.interval % report_every == 0:
+                fleet = self.fleet_summary(tag=f"report-{self.interval}",
+                                           strict=False)
+                if fleet is not None:
+                    self.reports.append(fleet)
+                    if on_report is not None:
+                        on_report(self.interval, fleet)
+
         if episode_scan:
             if work_fn is not None:
                 raise ValueError(
@@ -307,7 +700,10 @@ class DistributedFleetController:
                 )
             done = 0
             while done < n_intervals:
-                chunk = min(report_every or n_intervals, n_intervals - done)
+                chunk = n_intervals - done
+                for every in (report_every, ckpt_every):
+                    if every:
+                        chunk = min(chunk, every - self.interval % every)
                 self.controller.run_scanned(chunk)
                 if self.log_arms:
                     self.arm_log.extend(
@@ -315,37 +711,153 @@ class DistributedFleetController:
                         .reshape(chunk, self.n_local)
                     )
                 done += chunk
-                if report_every and done % report_every == 0:
-                    fleet = self.fleet_summary(tag=f"report-{done}")
-                    self.reports.append(fleet)
-                    if on_report is not None:
-                        on_report(done, fleet)
-            return self.fleet_summary(tag="final")
-        for i in range(n_intervals):
-            self.step(work_fn)
-            if report_every and (i + 1) % report_every == 0:
-                fleet = self.fleet_summary(tag=f"report-{i + 1}")
-                self.reports.append(fleet)
-                if on_report is not None:
-                    on_report(i + 1, fleet)
+                self.interval += chunk
+                tick()
+        else:
+            for _ in range(n_intervals):
+                self.step(work_fn)
+                tick()
+        if self.checkpoint_dir:
+            # the end state is always resumable, whatever the cadence
+            self.save_checkpoint(block=True)
         return self.fleet_summary(tag="final")
 
     def local_summary(self) -> Dict[str, Any]:
         return self.controller.summary()
 
-    def fleet_summary(self, tag: str = "summary") -> Dict[str, Any]:
-        """Gather H per-host summaries, reduce to the fleet aggregate
-        (identical result on every host)."""
-        return reduce_summaries(
-            self.comm.allgather(self.local_summary(), tag=tag)
-        )
+    def fleet_summary(self, tag: str = "summary",
+                      strict: bool = True) -> Optional[Dict[str, Any]]:
+        """The fleet aggregate. Strict gathers every live stripe (and
+        raise if one goes silent); stale-tolerant folds reduce whatever
+        stripes the lease window delivered — identical to strict while
+        the whole fleet is alive and on pace — and may return ``None``
+        on a client before its first round result arrives."""
+        local = self.local_summary()
+        if strict:
+            gathered = self.comm.allgather(local, tag=tag)
+        else:
+            gathered = self.comm.fold(local, tag=tag)
+            if gathered is None:
+                return None
+        live = [s for s in gathered if s is not None]
+        return reduce_summaries(live if live else [local])
 
     def gather_arms(self, tag: str = "arms") -> np.ndarray:
         """The full fleet's (T, N) arm trajectory, assembled from every
         host's stripe log (requires ``log_arms=True``) — the parity
-        oracle against a single-process run."""
+        oracle against a single-process run. Raises if any live stripe
+        is missing (use the per-host ``arm_log`` + stripes for partial
+        fleets)."""
         if not self.log_arms:
             raise RuntimeError("construct with log_arms=True to gather arms")
         local = (np.stack(self.arm_log) if self.arm_log
                  else np.zeros((0, self.n_local), np.int32))
-        return np.concatenate(self.comm.allgather(local, tag=tag), axis=1)
+        gathered = self.comm.allgather(local, tag=tag)
+        if any(g is None for g in gathered):
+            raise RuntimeError(
+                f"gather_arms: hosts "
+                f"{[h for h, g in enumerate(gathered) if g is None]} "
+                "are dead; their stripes' logs live in their checkpoints"
+            )
+        return np.concatenate(gathered, axis=1)
+
+    # -- checkpoint surface --------------------------------------------
+    @property
+    def checkpoint_path(self) -> Optional[str]:
+        """This stripe's checkpoint directory under ``checkpoint_dir``."""
+        if self.checkpoint_dir is None:
+            return None
+        return ckpt.stripe_dir(self.checkpoint_dir, *self.stripe)
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Everything a resumed process needs, split per the stripe
+        contract: controller policy state + pre-selected arms + counter
+        snapshots, backend env rows/cursor and the (n_local, T) arm log
+        under ``"striped"``; RNG key chains and the global interval
+        under ``"host"`` (identical across hosts at a common interval,
+        which is what lets restore_stripe stitch elastic restripes)."""
+        c = self.controller.state_dict()
+        b = self.controller.backend.state_dict()
+        log = (np.stack(self.arm_log, axis=1).astype(np.int32)
+               if self.arm_log else np.zeros((self.n_local, 0), np.int32))
+        return {
+            "striped": {"controller": c["striped"], "backend": b["striped"],
+                        "arm_log": log},
+            "host": {"controller": c["host"], "backend": b["host"],
+                     "interval": np.int64(self.interval)},
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        s, h = state["striped"], state["host"]
+        self.controller.load_state_dict(
+            {"striped": s["controller"], "host": h["controller"]})
+        self.controller.backend.load_state_dict(
+            {"striped": s["backend"], "host": h["backend"]})
+        log = np.asarray(s["arm_log"])
+        self.arm_log = [log[:, t] for t in range(log.shape[1])]
+        self.interval = int(h["interval"])
+
+    def save_checkpoint(self, block: bool = False) -> None:
+        """Checkpoint this stripe at the current global interval
+        (async by default — serialization rides a background thread
+        with one-in-flight backpressure; ``block=True`` for the final
+        save). No-op without a ``checkpoint_dir``."""
+        path = self.checkpoint_path
+        if path is None:
+            return
+        extra = {"stripe": list(self.stripe), "n_total": self.n_total,
+                 "interval": self.interval}
+        if block:
+            ckpt.wait_for_saves(path)
+            ckpt.save(path, self.interval, self.state_dict(), extra,
+                      self.keep_last)
+        else:
+            ckpt.async_save(path, self.interval, self.state_dict(), extra,
+                            self.keep_last)
+
+    def try_restore(self, step: Optional[int] = None) -> bool:
+        """Resume from the latest (or given) checkpoint covering this
+        stripe, stitching across saved stripes if the layout changed.
+        Returns False when there is nothing to restore (fresh start)."""
+        if self.checkpoint_dir is None:
+            return False
+        try:
+            _, state, _ = ckpt.restore_stripe(
+                self.checkpoint_dir, *self.stripe, like=self.state_dict(),
+                step=step)
+        except FileNotFoundError:
+            return False
+        self.load_state_dict(state)
+        return True
+
+
+def restore_fleet_controller(
+    policy: Policy,
+    backend_factory: Callable[[int, int], EnergyBackend],
+    lo: int, hi: int, n_total: int,
+    checkpoint_dir: str,
+    comm: Optional[FleetComm] = None,
+    step: Optional[int] = None,
+    **kw,
+) -> DistributedFleetController:
+    """Elastic rebuild: construct the [lo, hi) stripe of an N-node fleet
+    (``backend_factory(lo, hi)`` builds the local backend — e.g.
+    fleet_serve.build_local_backend) and restore it from the per-stripe
+    checkpoints under ``checkpoint_dir``, whatever stripe layout saved
+    them. This is how a membership change is APPLIED: take the new
+    stripe bounds from the coordinator's epoch-stamped stripe map
+    (``comm.fleet_epoch().stripes``), rebuild, continue — the restored
+    state is the common-step stitch of the old stripes, so the rebuilt
+    fleet replays exactly like one that ran at the new size all along.
+    Raises FileNotFoundError if no saved stripes cover [lo, hi)."""
+    local = backend_factory(lo, hi)
+    ctl = DistributedFleetController(
+        slice_policy_lanes(policy, lo, hi, n_total), local, comm,
+        stripe=(lo, hi), n_total=n_total, checkpoint_dir=checkpoint_dir,
+        **kw)
+    if not ctl.try_restore(step=step):
+        raise FileNotFoundError(
+            f"no stripe checkpoints covering [{lo}, {hi}) under "
+            f"{checkpoint_dir}"
+        )
+    return ctl

@@ -64,6 +64,20 @@ def host_stripe(n: int, num_hosts: int, host_id: int):
     return stripe_bounds(n, num_hosts)[host_id]
 
 
+def stripe_map(n: int, members):
+    """host_id -> (lo, hi) over an arbitrary LIVE member set: the elastic
+    re-striping of an N-node fleet after membership changed (the
+    coordinator broadcasts this, epoch-stamped, on every death/join —
+    see parallel.distributed.FleetEpoch). Stripes go to members in
+    ascending host_id order with the same ceil-balanced bounds a fresh
+    H=len(members) fleet would use, so a rebalanced fleet is
+    indistinguishable from one launched at the new size."""
+    ids = sorted(set(int(m) for m in members))
+    if not ids:
+        raise ValueError("stripe_map needs at least one live member")
+    return dict(zip(ids, stripe_bounds(n, len(ids))))
+
+
 def make_sharded_fleet_step(
     mesh: Mesh, axis: str = "data", block_n: int = 1024,
     interpret: bool = False, k_unc: int = 1,

@@ -10,6 +10,15 @@
   loop keeps stepping (double-buffered: we snapshot to host first).
 - Data-pipeline state (step counter, rng) rides in the manifest so a
   restart is bit-identical.
+- ``restore_stripe`` rebuilds one node-stripe [lo, hi) of a striped
+  fleet from per-stripe checkpoint directories — including a stripe
+  layout DIFFERENT from the one that saved (elastic membership change:
+  the new stripe is stitched row-wise out of the old stripes at their
+  latest COMMON step). States split into a ``"striped"`` subtree
+  (leaves with a leading node axis, sliceable) and a ``"host"`` subtree
+  (stripe-independent leaves like RNG keys and step counters, identical
+  across hosts at a common step), so stitching needs no shape
+  heuristics.
 """
 from __future__ import annotations
 
@@ -144,3 +153,116 @@ def _prune(ckpt_dir: str, keep_last: int):
     )
     for d in steps[:-keep_last]:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# stripe checkpoints: per-host directories under one fleet root
+# ---------------------------------------------------------------------------
+
+
+def stripe_dir(root: str, lo: int, hi: int) -> str:
+    """The checkpoint directory for the node stripe [lo, hi)."""
+    return os.path.join(root, f"stripe_{int(lo):06d}_{int(hi):06d}")
+
+
+def list_stripes(root: str) -> Dict[Tuple[int, int], str]:
+    """(lo, hi) -> directory for every stripe saved under ``root``."""
+    out: Dict[Tuple[int, int], str] = {}
+    if not os.path.isdir(root):
+        return out
+    for d in sorted(os.listdir(root)):
+        parts = d.split("_")
+        if d.startswith("stripe_") and len(parts) == 3:
+            try:
+                lo, hi = int(parts[1]), int(parts[2])
+            except ValueError:
+                continue
+            if os.path.isdir(os.path.join(root, d)):
+                out[(lo, hi)] = os.path.join(root, d)
+    return out
+
+
+def list_steps(ckpt_dir: str) -> list:
+    """Every complete checkpoint step under one stripe dir, ascending."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and os.path.isdir(os.path.join(ckpt_dir, d))
+    )
+
+
+def restore_stripe(
+    root: str,
+    lo: int,
+    hi: int,
+    like: PyTree,
+    step: Optional[int] = None,
+) -> Tuple[int, PyTree, Dict[str, Any]]:
+    """Restore the node stripe [lo, hi) from the per-stripe checkpoints
+    under ``root``, stitching across saved stripes when the requested
+    bounds don't match any saved directory (elastic membership change).
+
+    ``like`` must be a ``{"striped": ..., "host": ...}`` state (the
+    distributed controller's ``state_dict`` contract): every leaf under
+    ``"striped"`` has a leading node axis and is sliced/concatenated
+    row-wise; the ``"host"`` subtree is taken from the first covering
+    stripe (stripe-independent by construction — RNG key chains and
+    step counters advance identically on every host).
+
+    When stitching across stripes the chosen step must exist in EVERY
+    covering stripe (states are only mutually coherent at a common
+    step); ``step=None`` picks the latest such common step.
+    """
+    stripes = list_stripes(root)
+    if (lo, hi) in stripes and (
+        step is None or step in list_steps(stripes[(lo, hi)])
+    ):
+        return restore(stripes[(lo, hi)], like, step=step)
+    # greedy non-overlapping cover walk: saved roots can hold stripes
+    # from DIFFERENT layouts (an H=3 epoch next to an H=2 epoch), so
+    # candidates may overlap — at each position take the overlapping
+    # stripe reaching furthest, and slice each pick to its uncovered run
+    cover = []  # (slo, shi, dir, row_lo, row_hi): rows of that stripe used
+    pos = lo
+    while pos < hi:
+        best = None
+        for (slo, shi), d in stripes.items():
+            if slo <= pos < shi and (best is None or shi > best[1]):
+                best = (slo, shi, d)
+        if best is None:
+            raise FileNotFoundError(
+                f"stripe checkpoints under {root} leave node {pos} of the "
+                f"requested [{lo}, {hi}) uncovered "
+                f"(saved stripes: {sorted(stripes)})"
+            )
+        slo, shi, d = best
+        cover.append((slo, shi, d, pos - slo, min(hi, shi) - slo))
+        pos = min(hi, shi)
+    common = set(list_steps(cover[0][2]))
+    for _, _, d, _, _ in cover[1:]:
+        common &= set(list_steps(d))
+    if step is None:
+        if not common:
+            raise FileNotFoundError(
+                f"stripes covering [{lo}, {hi}) under {root} share no "
+                "common checkpoint step (states are only coherent at a "
+                "common step)"
+            )
+        step = max(common)
+    elif step not in common:
+        raise FileNotFoundError(
+            f"step {step} is not present in every stripe covering "
+            f"[{lo}, {hi}) under {root} (common steps: {sorted(common)})"
+        )
+    parts = []
+    extra: Dict[str, Any] = {}
+    host_part: PyTree = None
+    for slo, shi, d, a, b in cover:
+        _, state, ex = restore(d, like, step=step)
+        parts.append(jax.tree.map(lambda x: x[a:b], state["striped"]))
+        if host_part is None:
+            host_part, extra = state["host"], ex
+    striped = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *parts)
+    return step, {"striped": striped, "host": host_part}, extra

@@ -1,0 +1,427 @@
+"""Fault-tolerant elastic fleet control plane: lease membership must
+degrade (never block) on host death, a SIGKILLed host must resurrect
+from its stripe checkpoint bit-exact, and elastic re-stripes stitched
+out of per-stripe checkpoints must replay exactly like a fleet launched
+at the new size. The single-process run stays the correctness oracle
+throughout — fault injection must not cost a single ulp on surviving
+stripes.
+
+The subprocess soaks (H=8 kill + resurrect; the H=16 double-kill
+nightly variant) are ``slow``: the push/PR ``fault-soak`` CI lane runs
+them explicitly (minus ``nightly``), the scheduled slow lane runs
+everything. Set ``FAULT_SOAK_ARTIFACTS`` to persist per-host logs and
+the checkpoint tree for post-mortem upload (the CI lane does, with
+``if: failure()``)."""
+import os
+import secrets
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import get_app, make_env_params
+from repro.core.fleet import slice_policy_lanes
+from repro.core.policies import energy_ucb
+from repro.energy import EnergyController, SimBackend
+from repro.parallel.distributed import (
+    ClientComm,
+    CoordinatorComm,
+    DistributedFleetController,
+    connect_fleet,
+    restore_fleet_controller,
+)
+from repro.parallel.fleet import host_stripe, stripe_bounds, stripe_map
+from repro.train import checkpoint
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _subproc_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    env["FLEET_AUTHKEY"] = secrets.token_hex(16)
+    return env
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _run_controller(ctl, t):
+    arms = []
+    for _ in range(t):
+        ctl.step()
+        arms.append(np.asarray(ctl.last_arms).reshape(-1))
+    return np.stack(arms)
+
+
+ENV = make_env_params(get_app("tealeaf"))
+
+
+def _stripe_ctl(lo, hi, n_total, ckpt_dir=None, every=0, comm=None):
+    return DistributedFleetController(
+        slice_policy_lanes(energy_ucb(), lo, hi, n_total),
+        SimBackend(ENV, n=hi - lo, seed=0, node_offset=lo),
+        comm, stripe=(lo, hi), n_total=n_total, seed=0, interpret=True,
+        log_arms=True, checkpoint_dir=ckpt_dir, checkpoint_every=every,
+    )
+
+
+# ---------------------------------------------------------------------------
+# comm: lease membership, stale-tolerant folds, rejoin
+# ---------------------------------------------------------------------------
+
+
+def test_connect_fleet_backoff_times_out_with_clear_error():
+    """The connect race bugfix: a client dialing a coordinator that
+    never comes up must fail at the deadline with a diagnosis, not spin
+    forever or die on the first ConnectionRefusedError."""
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError, match="not accepting"):
+        connect_fleet(2, 1, ("127.0.0.1", _free_port()), timeout_s=1.0)
+    assert time.monotonic() - t0 < 10.0
+
+
+def test_fold_degrades_on_death_and_rejoin_bumps_epoch():
+    """An abruptly-dead host's fold slot degrades to None (wire death,
+    no blocking); a reconnect under the same id is admitted with a
+    rejoined ACK, bumps the epoch, and the next STRICT gather waits for
+    the resurrected host and skims its stale re-sent folds."""
+    port = _free_port()
+    out = {}
+
+    def doomed():
+        c = ClientComm(("127.0.0.1", port), 3, 1)
+        c.allgather("a1", "start")
+        c._conn.close()  # SIGKILL signature: socket closes, no goodbye
+
+    def survivor():
+        c = ClientComm(("127.0.0.1", port), 3, 2)
+        out["rejoined2"] = c.rejoined
+        c.allgather("a2", "start")
+        c.fold("f2", "r1")
+        out["final2"] = c.allgather("b2", "final")
+        c.close()
+
+    def resurrected():
+        c = ClientComm(("127.0.0.1", port), 3, 1)
+        out["rejoined1"] = c.rejoined
+        out["epoch1"] = c.fleet_epoch()
+        c.fold("stale", "r0")  # a replayed, long-gone fold tick
+        out["final1"] = c.allgather("b1", "final")
+        c.close()
+
+    threads = [threading.Thread(target=doomed),
+               threading.Thread(target=survivor)]
+    for t in threads:
+        t.start()
+    coord = CoordinatorComm(("127.0.0.1", port), 3, lease_s=2.0, n_total=9)
+    with coord:
+        assert coord.allgather("a0", "start") == ["a0", "a1", "a2"]
+        threads[0].join()  # host 1 is gone
+        got = coord.fold("f0", "r1")
+        assert got[0] == "f0" and got[1] is None and got[2] == "f2"
+        assert coord.dead_hosts() == {1: "connection lost"}
+        fe = coord.fleet_epoch()
+        assert fe.members == (0, 2)
+        assert fe.stripes == stripe_map(9, (0, 2))
+        epoch_after_death = fe.epoch
+        t3 = threading.Thread(target=resurrected)
+        t3.start()
+        deadline = time.monotonic() + 30.0
+        while 1 not in coord.fleet_epoch().members:
+            assert time.monotonic() < deadline, "rejoin was never admitted"
+            time.sleep(0.01)
+        final = coord.allgather("b0", "final")
+        assert final == ["b0", "b1", "b2"]
+        t3.join()
+        threads[1].join()
+    assert out["rejoined2"] is False  # rendezvous join
+    assert out["rejoined1"] is True  # mid-run admission
+    assert out["epoch1"].epoch > epoch_after_death
+    assert out["epoch1"].members == (0, 1, 2)
+    assert out["final1"] == ["b0", "b1", "b2"]
+    assert out["final2"] == ["b0", "b1", "b2"]
+
+
+def test_lease_eviction_of_silent_host_is_opt_in():
+    """Wire-alive but silent hosts keep membership by default; with
+    ``max_missed_folds`` the coordinator evicts them after that many
+    consecutive missed fold leases."""
+    port = _free_port()
+    stop = threading.Event()
+
+    def silent():
+        c = ClientComm(("127.0.0.1", port), 2, 1)
+        c.allgather("a1", "start")
+        stop.wait(30.0)  # never contributes another round
+        c.close()
+
+    t = threading.Thread(target=silent)
+    t.start()
+    coord = CoordinatorComm(("127.0.0.1", port), 2, lease_s=0.2,
+                            max_missed_folds=2)
+    with coord:
+        coord.allgather("a0", "start")
+        assert coord.fold("f0", "r1")[1] is None  # miss 1: still a member
+        assert coord.fleet_epoch().members == (0, 1)
+        coord.fold("f0", "r2")  # miss 2: lease expired
+        assert coord.fleet_epoch().members == (0,)
+        assert "lease expired" in coord.dead_hosts()[1]
+    stop.set()
+    t.join()
+
+
+def test_controller_reports_degrade_and_final_collects_ahead_host():
+    """Controller-level integration: a 2-host fleet where host 1
+    finishes early and goes quiet. Host 0's periodic folds degrade to
+    its own stripe (hosts=1) without blocking, and the final STRICT
+    gather still collects host 1's stashed contribution (hosts=2)."""
+    port = _free_port()
+    n = 4
+    (lo0, hi0), (lo1, hi1) = stripe_bounds(n, 2)
+    out = {}
+
+    def fast_host():
+        comm = ClientComm(("127.0.0.1", port), 2, 1)
+        with comm:
+            ctl = _stripe_ctl(lo1, hi1, n, comm=comm)
+            comm.barrier("start")
+            out["final1"] = ctl.run(20)
+
+    t = threading.Thread(target=fast_host)
+    t.start()
+    comm = CoordinatorComm(("127.0.0.1", port), 2, lease_s=0.3)
+    with comm:
+        ctl = _stripe_ctl(lo0, hi0, n, comm=comm)
+        comm.barrier("start")
+        final = ctl.run(20, report_every=5)
+    t.join()
+    assert final["hosts"] == 2 and final["nodes"] == n
+    assert final == out["final1"]
+    assert all(r["hosts"] == 1 for r in ctl.reports)
+
+
+# ---------------------------------------------------------------------------
+# stripe checkpoints: crash-restart resume + elastic re-stripe
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_resume_is_bit_exact(tmp_path):
+    """Crash-restart on one stripe: a fresh process restoring the
+    latest checkpoint and replaying forward reproduces the uncrashed
+    run's arms and fused-kernel state bit for bit."""
+    n, t = 6, 12
+    ref = _stripe_ctl(0, n, n)
+    for _ in range(t):
+        ref.step()
+    ref_arms = np.stack(ref.arm_log)
+
+    live = _stripe_ctl(0, n, n, ckpt_dir=str(tmp_path))
+    for _ in range(9):  # crash between checkpoints: latest save is step 8
+        live.step()
+        if live.interval % 4 == 0:
+            live.save_checkpoint()  # async, like run()'s cadence tick
+    checkpoint.wait_for_saves()
+    del live
+
+    back = _stripe_ctl(0, n, n, ckpt_dir=str(tmp_path))
+    assert back.try_restore()
+    assert back.interval == 8
+    for _ in range(t - 8):
+        back.step()
+    np.testing.assert_array_equal(np.stack(back.arm_log), ref_arms)
+    for k in ref.controller.states:
+        np.testing.assert_array_equal(
+            np.asarray(back.controller.states[k]),
+            np.asarray(ref.controller.states[k]),
+            err_msg=f"resumed state diverged on {k}")
+
+
+def test_elastic_restripe_from_checkpoints_matches_oracle(tmp_path):
+    """Elastic leave: an H=3 fleet checkpoints, host 1 never returns,
+    and the surviving pair rebuilds at the stripe_map(N, {0, 2}) bounds
+    via restore_fleet_controller — each new stripe stitched row-wise
+    out of the old stripe checkpoints at their common step. The rebuilt
+    fleet's arms and state match the single-process oracle exactly."""
+    n, t_ck, t = 8, 8, 12
+    ref = _stripe_ctl(0, n, n)
+    for _ in range(t):
+        ref.step()
+    ref_arms = np.stack(ref.arm_log)
+
+    for lo, hi in stripe_bounds(n, 3):
+        ctl = _stripe_ctl(lo, hi, n, ckpt_dir=str(tmp_path))
+        for _ in range(t_ck):
+            ctl.step()
+        ctl.save_checkpoint(block=True)
+
+    smap = stripe_map(n, [0, 2])
+    assert smap == {0: (0, 4), 2: (4, 8)}
+    parts = []
+    for h, (lo, hi) in sorted(smap.items()):
+        ctl = restore_fleet_controller(
+            energy_ucb(),
+            lambda lo, hi: SimBackend(ENV, n=hi - lo, seed=0, node_offset=lo),
+            lo, hi, n, str(tmp_path), seed=0, interpret=True, log_arms=True)
+        assert ctl.interval == t_ck
+        for _ in range(t - t_ck):
+            ctl.step()
+        parts.append(ctl)
+    arms = np.concatenate([np.stack(p.arm_log) for p in parts], axis=1)
+    np.testing.assert_array_equal(arms, ref_arms)
+    for k in ref.controller.states:
+        got = np.concatenate(
+            [np.asarray(p.controller.states[k]) for p in parts])
+        np.testing.assert_array_equal(
+            got, np.asarray(ref.controller.states[k]),
+            err_msg=f"restriped state diverged on {k}")
+
+
+def test_restore_stripe_picks_latest_common_step(tmp_path):
+    """Stitching across stripes whose checkpoint histories differ must
+    pick the latest COMMON step (states are only mutually coherent at a
+    common interval), and refuse a step any covering stripe lacks."""
+    state = lambda lo, hi, v: {
+        "striped": {"x": np.arange(lo, hi, dtype=np.int64) * 10 + v},
+        "host": {"k": np.int64(v)},
+    }
+    for step in (4, 8):
+        checkpoint.save(checkpoint.stripe_dir(str(tmp_path), 0, 4),
+                        step, state(0, 4, step))
+    checkpoint.save(checkpoint.stripe_dir(str(tmp_path), 4, 8),
+                    4, state(4, 8, 4))
+    step, got, _ = checkpoint.restore_stripe(
+        str(tmp_path), 1, 7, like=state(1, 7, 0))
+    assert step == 4
+    np.testing.assert_array_equal(got["striped"]["x"],
+                                  np.arange(1, 7) * 10 + 4)
+    assert int(got["host"]["k"]) == 4
+    with pytest.raises(FileNotFoundError, match="not present in every"):
+        checkpoint.restore_stripe(str(tmp_path), 1, 7,
+                                  like=state(1, 7, 0), step=8)
+    with pytest.raises(FileNotFoundError, match="uncovered"):
+        checkpoint.restore_stripe(str(tmp_path), 4, 9,
+                                  like=state(4, 9, 0))
+
+
+# ---------------------------------------------------------------------------
+# the soak: H subprocess hosts, SIGKILL + resurrect mid-run
+# ---------------------------------------------------------------------------
+
+
+def _artifact_dir(tmp_path: Path, name: str) -> Path:
+    root = os.environ.get("FAULT_SOAK_ARTIFACTS")
+    d = (Path(root) if root else tmp_path) / name
+    d.mkdir(parents=True, exist_ok=True)
+    return d
+
+
+def _host_cmd(h, hosts, n, t, port, ckpt_dir, out, pace, every):
+    return [sys.executable, "-m", "repro.launch.fleet_serve",
+            "--nodes", str(n), "--intervals", str(t), "--app", "tealeaf",
+            "--num-hosts", str(hosts), "--host-id", str(h),
+            "--coordinator", f"127.0.0.1:{port}", "--seed", "0",
+            "--interpret", "--pace", str(pace), "--report-every", "10",
+            "--checkpoint-dir", str(ckpt_dir),
+            "--checkpoint-every", str(every), "--out", str(out)]
+
+
+def _launch(cmd, log_path, env):
+    with open(log_path, "ab") as log:
+        return subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT,
+                                env=env, cwd=str(REPO))
+
+
+def _wait_for_checkpoint(stripe_dir, timeout_s=240.0):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        steps = checkpoint.list_steps(str(stripe_dir))
+        if steps:
+            return steps[-1]
+        time.sleep(0.05)
+    raise TimeoutError(f"no checkpoint appeared under {stripe_dir}")
+
+
+def _soak(tmp_path, name, hosts, n, t, victims, pace=0.25, every=5):
+    """Launch H fleet_serve processes, SIGKILL each victim as soon as
+    its stripe has a complete checkpoint, relaunch it with the SAME
+    command line (the runbook), and require: every process exits 0,
+    each victim logs a checkpoint resume, and the gathered (T, N) arms
+    + final fused-kernel state match the single-process oracle
+    bit-for-bit on EVERY stripe (the resurrected ones included)."""
+    art = _artifact_dir(tmp_path, name)
+    ckpt_dir, out = art / "ckpt", art / "arms.npz"
+    port, env = _free_port(), _subproc_env()
+    cmds = {h: _host_cmd(h, hosts, n, t, port, ckpt_dir, out, pace, every)
+            for h in range(hosts)}
+    logs = {h: art / f"host{h}.log" for h in range(hosts)}
+    procs = {h: _launch(cmds[h], logs[h], env) for h in range(hosts)}
+    relaunched = {}
+    try:
+        for v in victims:
+            stripe = host_stripe(n, hosts, v)
+            step = _wait_for_checkpoint(
+                checkpoint.stripe_dir(str(ckpt_dir), *stripe))
+            assert procs[v].poll() is None, (
+                f"victim {v} already exited (rc={procs[v].poll()}) before "
+                f"the kill window — raise --intervals/--pace. Log:\n"
+                + logs[v].read_text()[-2000:])
+            os.kill(procs[v].pid, signal.SIGKILL)
+            procs[v].wait(timeout=30)
+            assert step < t, f"victim {v} checkpointed the whole run"
+            relaunched[v] = _launch(cmds[v], logs[v], env)
+        rcs = {h: p.wait(timeout=420) for h, p in procs.items()}
+        rcs.update({h: p.wait(timeout=420) for h, p in relaunched.items()})
+    finally:
+        for p in [*procs.values(), *relaunched.values()]:
+            if p.poll() is None:
+                p.kill()
+    for v in victims:
+        assert rcs[v] == 0, f"victim {v} relaunch failed:\n" + \
+            logs[v].read_text()[-4000:]
+        assert "resumed stripe" in logs[v].read_text(), (
+            f"victim {v} restarted from scratch instead of its checkpoint")
+    for h, rc in rcs.items():
+        assert rc == 0, f"host {h} rc={rc}:\n" + logs[h].read_text()[-4000:]
+
+    z = np.load(out)
+    assert z["missing_hosts"].size == 0, (
+        f"hosts {z['missing_hosts']} never made it back into the final "
+        "gather")
+    ref = EnergyController(energy_ucb(), SimBackend(ENV, n=n, seed=0),
+                           seed=0, interpret=True)
+    ref_arms = _run_controller(ref, t)
+    np.testing.assert_array_equal(z["arms"], ref_arms)
+    for leaf in ref.states:
+        np.testing.assert_array_equal(
+            z[f"state_{leaf}"], np.asarray(ref.states[leaf]),
+            err_msg=f"soak state diverged on {leaf}")
+
+
+@pytest.mark.slow
+def test_soak_h8_sigkill_and_resurrect(tmp_path):
+    """The acceptance soak: 8 subprocess hosts, one SIGKILLed right
+    after its first stripe checkpoint and relaunched with the same
+    command line. The fleet's folds degrade while it is down, the
+    strict final gather waits for its return, and the full (T, N)
+    trajectory still matches the single-process oracle arm for arm."""
+    _soak(tmp_path, "h8", hosts=8, n=16, t=80, victims=[3])
+
+
+@pytest.mark.slow
+@pytest.mark.nightly
+def test_soak_h16_double_kill(tmp_path):
+    """The nightly variant: 16 hosts, two victims killed and
+    resurrected one after the other — serial churn, same oracle."""
+    _soak(tmp_path, "h16", hosts=16, n=32, t=100, victims=[5, 11])
