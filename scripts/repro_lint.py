@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""repro-lint CLI: check the repo's architecture invariants statically.
+
+Usage::
+
+    python scripts/repro_lint.py                 # lint src/repro
+    python scripts/repro_lint.py --json          # machine-readable
+    python scripts/repro_lint.py path/to/file.py # lint specific paths
+    python scripts/repro_lint.py --show-suppressed
+
+Exit status: 0 when every finding is suppressed (with a justification),
+1 when any active finding remains, 2 on usage errors. Stdlib-only — no
+jax needed, safe for pre-commit and the CI lint job.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import (  # noqa: E402
+    exit_code,
+    render_human,
+    render_json,
+    run_lint,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="AST invariant checker (RPL001..RPL005)",
+    )
+    ap.add_argument(
+        "paths", nargs="*", type=Path,
+        help="files or directories to lint (default: src/repro)",
+    )
+    ap.add_argument(
+        "--root", type=Path, default=REPO_ROOT,
+        help="repo root used for relative paths in reports",
+    )
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit JSON instead of human-readable lines")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="include suppressed findings in human output")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or [args.root / "src" / "repro"]
+    for p in paths:
+        if not p.exists():
+            print(f"repro_lint: no such path: {p}", file=sys.stderr)
+            return 2
+
+    findings = run_lint(args.root, paths)
+    if args.as_json:
+        print(render_json(findings))
+    else:
+        print(render_human(findings, show_suppressed=args.show_suppressed))
+    return exit_code(findings)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verification (ROADMAP.md).
 #
-#   scripts/tier1.sh          full tier-1 gate: pytest -x -q
-#   scripts/tier1.sh fast     fast lane: skip tests marked `slow`
+#   scripts/tier1.sh            full tier-1 gate: pytest -x -q
+#   scripts/tier1.sh fast       fast lane: skip tests marked `slow`
+#   scripts/tier1.sh lint       repro-lint invariant checker (no jax needed)
+#   scripts/tier1.sh sanitize   controller/episode smoke tests under
+#                               jax_debug_nans + tracer-leak checking +
+#                               rank_promotion="raise"
 #
-# Extra args are forwarded to pytest, e.g. scripts/tier1.sh fast -k fleet
+# Extra args are forwarded to pytest (or to repro_lint for `lint`),
+# e.g. scripts/tier1.sh fast -k fleet / scripts/tier1.sh lint --json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -13,6 +18,21 @@ lane="${1:-full}"
 if [ "$lane" = "fast" ]; then
   shift
   exec python -m pytest -x -q -m "not slow" "$@"
+fi
+if [ "$lane" = "lint" ]; then
+  shift
+  exec python scripts/repro_lint.py "$@"
+fi
+if [ "$lane" = "sanitize" ]; then
+  shift
+  # runtime sanitizers on the numerics-heavy smoke suites: NaNs raise at
+  # the op that produced them, leaked tracers raise at escape, implicit
+  # rank promotion raises at the broadcast
+  export JAX_DEBUG_NANS=True
+  export JAX_CHECK_TRACER_LEAKS=True
+  export JAX_NUMPY_RANK_PROMOTION=raise
+  exec python -m pytest -x -q -m "not slow" \
+    tests/test_energy_backend.py tests/test_episode_scan.py "$@"
 fi
 [ "$lane" = "full" ] && shift || true
 exec python -m pytest -x -q "$@"

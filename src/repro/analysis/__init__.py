@@ -1,0 +1,39 @@
+"""repro-lint: AST static analysis mechanizing the repo's architecture
+invariants (ROADMAP "Architecture invariants" → RPL001..RPL005).
+
+Stdlib-only; never imports the code it analyses. CLI entry point:
+``scripts/repro_lint.py`` (or ``scripts/tier1.sh lint``).
+"""
+from .engine import (
+    Finding,
+    Rule,
+    SourceFile,
+    exit_code,
+    in_scope,
+    load_files,
+    render_human,
+    render_json,
+    run_rules,
+)
+from .rules import RULES
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "RULES",
+    "SourceFile",
+    "exit_code",
+    "in_scope",
+    "load_files",
+    "render_human",
+    "render_json",
+    "run_rules",
+    "run_lint",
+]
+
+
+def run_lint(root, paths):
+    """Lint ``paths`` (files or directories) relative to ``root``;
+    returns the sorted finding list (suppressed ones included)."""
+    files = load_files(root, paths)
+    return run_rules(files, RULES)

@@ -1,0 +1,224 @@
+"""repro-lint rule engine: findings, suppressions, file loading, and the
+driver that runs every registered rule over a file set.
+
+Stdlib-only on purpose — the lint lane must run on a box with no jax (CI
+lint job, pre-commit) and must never import the code under analysis.
+
+Suppression syntax (same line as the finding, or the line directly
+above it)::
+
+    x = state["n"].at[arm].add(1.0)  # repro-lint: disable=RPL001 baseline-only helper, no fused twin
+
+Multiple rules: ``disable=RPL001,RPL004``. The free text after the rule
+list is the REQUIRED justification; a suppression without one does not
+suppress — it escalates to RPL000 so "all suppressions carry reasons"
+is enforced by the tool itself rather than by review.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Iterable
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,]+)[ \t]*(.*?)\s*$"
+)
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    severity: str
+    path: str            # repo-relative, forward slashes
+    line: int
+    message: str
+    suppressed: bool = False
+    reason: str = ""     # justification text when suppressed
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def format(self) -> str:
+        tag = f" [suppressed: {self.reason}]" if self.suppressed else ""
+        return (
+            f"{self.path}:{self.line}: {self.rule} {self.severity}: "
+            f"{self.message}{tag}"
+        )
+
+
+@dataclasses.dataclass
+class Suppression:
+    rules: tuple[str, ...]
+    reason: str
+    line: int
+    used: bool = False
+
+
+class SourceFile:
+    """One parsed file: AST + per-line suppression directives."""
+
+    def __init__(self, path: Path, relpath: str, text: str):
+        self.path = path
+        self.relpath = relpath.replace("\\", "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree: ast.AST | None = None
+        self.parse_error: str | None = None
+        try:
+            self.tree = ast.parse(text, filename=str(path))
+        except SyntaxError as exc:  # surfaced as its own finding
+            self.parse_error = f"syntax error: {exc.msg} (line {exc.lineno})"
+        self.suppressions: dict[int, Suppression] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(line)
+            if m:
+                rules = tuple(
+                    r.strip().upper() for r in m.group(1).split(",") if r.strip()
+                )
+                self.suppressions[i] = Suppression(
+                    rules=rules, reason=m.group(2).strip(), line=i
+                )
+
+    def suppression_for(self, rule: str, line: int) -> Suppression | None:
+        """Directive on the finding's line, or on the line directly above."""
+        for ln in (line, line - 1):
+            sup = self.suppressions.get(ln)
+            if sup and rule in sup.rules:
+                # a directive on the previous line only counts if that
+                # line is comment-only (otherwise it belongs to the code
+                # on that line, not to ours)
+                if ln == line - 1:
+                    stripped = self.lines[ln - 1].lstrip()
+                    if not stripped.startswith("#"):
+                        continue
+                return sup
+        return None
+
+
+@dataclasses.dataclass
+class Rule:
+    rule_id: str
+    severity: str
+    summary: str
+    check_file: Callable[[SourceFile], list[Finding]] | None = None
+    check_project: Callable[[list[SourceFile]], list[Finding]] | None = None
+
+
+def in_scope(
+    relpath: str,
+    dirs: tuple[str, ...] = (),
+    suffixes: tuple[str, ...] = (),
+) -> bool:
+    """Path-based rule scoping that works both for the real tree
+    (``src/repro/kernels/fleet_ucb.py``) and for test fixtures living in
+    a tmp dir (``kernels/fleet_ucb.py``): a directory name matches as a
+    path segment, a suffix matches the tail of the path."""
+    p = "/" + relpath.replace("\\", "/")
+    for d in dirs:
+        if f"/{d}/" in p:
+            return True
+    for s in suffixes:
+        if p.endswith("/" + s.lstrip("/")):
+            return True
+    return False
+
+
+def load_files(root: Path, paths: Iterable[Path]) -> list[SourceFile]:
+    files: list[SourceFile] = []
+    seen: set[Path] = set()
+    for p in paths:
+        p = p.resolve()
+        candidates = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in candidates:
+            if f in seen or f.suffix != ".py":
+                continue
+            seen.add(f)
+            try:
+                rel = str(f.relative_to(root.resolve()))
+            except ValueError:
+                rel = f.name
+            files.append(SourceFile(f, rel, f.read_text(encoding="utf-8")))
+    return files
+
+
+def run_rules(
+    files: list[SourceFile], rules: list[Rule]
+) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in files:
+        if sf.parse_error:
+            findings.append(
+                Finding("RPL000", "error", sf.relpath, 1, sf.parse_error)
+            )
+    parsed = [sf for sf in files if sf.tree is not None]
+    by_rel = {sf.relpath: sf for sf in parsed}
+    for rule in rules:
+        raw: list[Finding] = []
+        if rule.check_file:
+            for sf in parsed:
+                raw.extend(rule.check_file(sf))
+        if rule.check_project:
+            raw.extend(rule.check_project(parsed))
+        for f in raw:
+            sf = by_rel.get(f.path)
+            if sf is not None:
+                sup = sf.suppression_for(f.rule, f.line)
+                if sup is not None:
+                    sup.used = True
+                    if not sup.reason:
+                        findings.append(
+                            Finding(
+                                "RPL000",
+                                "error",
+                                f.path,
+                                sup.line,
+                                "suppression without a justification: "
+                                f"disable={f.rule} must carry a one-line "
+                                "reason after the rule list",
+                            )
+                        )
+                        # the reasonless directive does NOT suppress
+                    else:
+                        f.suppressed = True
+                        f.reason = sup.reason
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def render_human(findings: list[Finding], show_suppressed: bool = False) -> str:
+    active = [f for f in findings if not f.suppressed]
+    shown = findings if show_suppressed else active
+    out = [f.format() for f in shown]
+    n_err = sum(1 for f in active if f.severity == "error")
+    n_warn = sum(1 for f in active if f.severity == "warning")
+    n_sup = sum(1 for f in findings if f.suppressed)
+    out.append(
+        f"repro-lint: {n_err} error(s), {n_warn} warning(s), "
+        f"{n_sup} suppressed"
+    )
+    return "\n".join(out)
+
+
+def render_json(findings: list[Finding]) -> str:
+    active = [f for f in findings if not f.suppressed]
+    return json.dumps(
+        {
+            "findings": [f.to_dict() for f in findings],
+            "counts": {
+                "error": sum(1 for f in active if f.severity == "error"),
+                "warning": sum(1 for f in active if f.severity == "warning"),
+                "suppressed": sum(1 for f in findings if f.suppressed),
+            },
+        },
+        indent=2,
+    )
+
+
+def exit_code(findings: list[Finding]) -> int:
+    return 1 if any(not f.suppressed for f in findings) else 0

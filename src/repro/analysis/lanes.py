@@ -1,0 +1,66 @@
+"""The lane registry: the one declarative copy of "what is a policy lane
+and where must it appear" that RPL003 (lane completeness) checks against.
+
+The hyperparams-as-data design (ROADMAP "Architecture invariants") means
+every ``PolicyParams`` field is a per-controller data lane that must be
+threaded through EVERY dispatch surface — the lane classifier
+(``core.fleet._params_axes``), the stripe slicer (``slice_policy_lanes``,
+which derives from the classifier), the fused kernel signatures
+(``fleet_step`` / ``fleet_step_math`` / the episode scans and their XLA
+fallbacks), the sharded step's pad fills, and the ``ref`` oracles. A lane
+added to ``PolicyParams`` but missing from any of those silently gets a
+default on that path — exactly the class of bug PR 5's scatter drift and
+PR 4's RNG split were, so the linter turns it into a hard error.
+
+Adding a real new lane is a REGISTERED act: extend ``RUNTIME_LANES``
+(or ``INIT_ONLY_LANES``) here in the same PR that threads the lane
+through the surfaces, and RPL003 will hold every surface to it from then
+on. An unregistered ``PolicyParams`` field is itself a finding.
+"""
+from __future__ import annotations
+
+# PolicyParams field -> parameter-name aliases accepted on the kernel /
+# oracle / dispatcher signatures (the kernels abbreviate some lanes).
+RUNTIME_LANES = {
+    "alpha": ("alpha",),
+    "lam": ("lam",),
+    "qos_delta": ("qos_delta", "qos"),
+    "gamma": ("gamma", "g"),
+    "optimistic": ("optimistic", "opt"),
+    "prior_mu": ("prior_mu", "prior"),
+    "default_arm": ("default_arm", "def_arm"),
+    "lam_unc": ("lam_unc",),
+}
+
+# Lanes consumed only at state-initialization time (ucb_init); they must
+# still be classified by _params_axes / sliced by slice_policy_lanes, but
+# have no per-interval kernel surface to appear on.
+INIT_ONLY_LANES = {
+    "prior_n",
+}
+
+# Function names that are per-interval lane surfaces: every RUNTIME_LANES
+# entry must appear (under one of its aliases) in the parameter list of
+# any function with one of these names.
+SURFACE_FUNCS = {
+    "fleet_step",          # kernels/fleet_ucb.py AND kernels/ops.py
+    "fleet_step_math",     # THE one copy of the fused arithmetic
+    "ref_fleet_step",      # kernels/ref.py oracle
+    "ref_episode_scan",
+    "ref_episode_scan_sim",
+    "episode_scan_trace",  # megakernel + ops dispatcher
+    "episode_scan_sim",
+    "xla_episode_trace",   # lax.scan fallbacks
+    "xla_episode_sim",
+    "_episode_lanes",      # ops.py once-per-episode lane broadcast
+}
+
+# Methods of the Fleet control plane that must FORWARD every runtime
+# lane (as a ``p.<lane>`` attribute read) into the kernel dispatch — a
+# lane present in the kernel signature but never passed silently runs
+# with the kernel default.
+FLEET_DISPATCH_METHODS = {
+    "step",
+    "episode_trace",
+    "episode_sim",
+}

@@ -1,0 +1,591 @@
+"""The five repro-lint rules (RPL001..RPL005) — each mechanizes one of
+the ROADMAP "Architecture invariants".
+
+RPL001  parity    one-sided ``.at[...].add/.set`` scatter in a
+                  parity-critical module (kernels/, core/fleet.py,
+                  core/policies.py). Fused and vmapped paths must share
+                  the select+onehot arithmetic expressions; a scatter on
+                  one path lets XLA pick different FMA contractions and
+                  drifts the trajectories by an ulp (the PR 5 bug).
+RPL002  parity    ``unroll=`` on a ``lax.scan`` in kernels/core (fusing
+                  across iterations breaks bit-parity with the stepwise
+                  path — the PR 6 bug), and donation of the aliased
+                  ``env_rows`` operand in the episode-scan fallbacks
+                  (it aliases live backend counters).
+RPL003  lanes     lane completeness: every ``PolicyParams`` field must
+                  be registered in :mod:`repro.analysis.lanes` and
+                  appear on every dispatch surface — ``_params_axes``,
+                  ``slice_policy_lanes``, the fused-kernel and oracle
+                  signatures, the Fleet dispatch methods, and the
+                  sharded step's pad fills.
+RPL004  determinism  wall clocks, ``np.random`` module state, argless
+                  seeds, and local-count key splits in backend/sim/
+                  kernel modules. All randomness must derive from
+                  ``fold_in`` on a GLOBAL node id / GLOBAL interval
+                  index so striped runs are bit-exact (the PR 4 bug).
+RPL005  locks     lock discipline: attributes a class mutates under its
+                  ``self._lock`` (or in ``*_locked`` methods) may only
+                  be mutated under that lock; ``*_locked`` helpers may
+                  only be called while holding it.
+"""
+from __future__ import annotations
+
+import ast
+
+from .engine import Finding, Rule, SourceFile, in_scope
+from .lanes import (
+    FLEET_DISPATCH_METHODS,
+    INIT_ONLY_LANES,
+    RUNTIME_LANES,
+    SURFACE_FUNCS,
+)
+
+# ---------------------------------------------------------------- util
+
+
+def dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression: ``jax.random.split`` ->
+    "jax.random.split"; unresolvable parts render as ``?``."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return f"{dotted(node.value)}.{node.attr}"
+    if isinstance(node, ast.Call):
+        return f"{dotted(node.func)}()"
+    return "?"
+
+
+def param_names(fn: ast.FunctionDef) -> set:
+    a = fn.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    return set(names)
+
+
+def walk_functions(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def const_int_seq(node: ast.AST, module: ast.Module | None) -> list | None:
+    """Const-evaluate a donate_argnums-style expression to a list of
+    ints: literals, tuples/lists of literals, ``tuple(range(N))``, and
+    one level of module-level Name indirection."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            sub = const_int_seq(e, module)
+            if sub is None or len(sub) != 1:
+                return None
+            out.extend(sub)
+        return out
+    if isinstance(node, ast.Call):
+        fn = dotted(node.func)
+        inner = node.args[0] if node.args else None
+        if fn == "tuple" and isinstance(inner, ast.Call):
+            fn, node = "tuple(range)", inner
+            if dotted(node.func) == "range" and len(node.args) == 1:
+                n = const_int_seq(node.args[0], module)
+                if n and len(n) == 1:
+                    return list(range(n[0]))
+        elif fn == "range" and len(node.args) == 1:
+            n = const_int_seq(node.args[0], module)
+            if n and len(n) == 1:
+                return list(range(n[0]))
+        return None
+    if isinstance(node, ast.Name) and module is not None:
+        for stmt in module.body:
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == node.id:
+                        return const_int_seq(stmt.value, None) or const_int_seq(
+                            stmt.value, module
+                        )
+        return None
+    return None
+
+
+# ------------------------------------------------------------- RPL001
+
+RPL001_SCOPE_DIRS = ("kernels",)
+RPL001_SCOPE_SUFFIXES = ("core/fleet.py", "core/policies.py")
+SCATTER_METHODS = {"add", "set", "mul", "min", "max", "subtract", "divide",
+                   "apply", "power"}
+
+
+def _check_rpl001(sf: SourceFile) -> list:
+    if not in_scope(sf.relpath, RPL001_SCOPE_DIRS, RPL001_SCOPE_SUFFIXES):
+        return []
+    out = []
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in SCATTER_METHODS):
+            continue
+        sub = node.func.value
+        if (isinstance(sub, ast.Subscript)
+                and isinstance(sub.value, ast.Attribute)
+                and sub.value.attr == "at"):
+            out.append(Finding(
+                "RPL001", "error", sf.relpath, node.lineno,
+                f"one-sided `.at[...].{node.func.attr}` scatter in a "
+                "parity-critical module; use the shared select+onehot "
+                "expression so fused and vmapped paths contract "
+                "identically",
+            ))
+    return out
+
+
+# ------------------------------------------------------------- RPL002
+
+RPL002_SCOPE_DIRS = ("kernels", "core")
+
+
+def _jit_donations(fn: ast.FunctionDef, module: ast.Module):
+    """Donated argnums from a ``@functools.partial(jax.jit, ...,
+    donate_argnums=X)`` / ``@jax.jit(...)`` decorator on ``fn``."""
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        name = dotted(dec.func)
+        target_kwargs = None
+        if name.endswith("partial") and dec.args:
+            if dotted(dec.args[0]).endswith("jit"):
+                target_kwargs = dec.keywords
+        elif name.endswith("jit"):
+            target_kwargs = dec.keywords
+        if target_kwargs is None:
+            continue
+        for kw in target_kwargs:
+            if kw.arg in ("donate_argnums", "donate_argnames"):
+                if kw.arg == "donate_argnames":
+                    yield kw, None
+                else:
+                    yield kw, const_int_seq(kw.value, module)
+
+
+def _check_rpl002(sf: SourceFile) -> list:
+    if not in_scope(sf.relpath, RPL002_SCOPE_DIRS):
+        return []
+    out = []
+    module = sf.tree
+    fn_by_name = {
+        fn.name: fn for fn in module.body
+        if isinstance(fn, ast.FunctionDef)
+    }
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        # (a) unroll on lax.scan
+        if name.endswith("lax.scan") or name == "scan" or name.endswith(".scan"):
+            for kw in node.keywords:
+                if kw.arg == "unroll":
+                    out.append(Finding(
+                        "RPL002", "error", sf.relpath, kw.value.lineno,
+                        "`unroll=` on lax.scan in a parity-critical "
+                        "module: unrolling lets XLA fuse across "
+                        "iterations and breaks bitwise parity with the "
+                        "stepwise path",
+                    ))
+        # (b2) call-form jit: name = jax.jit(fn, donate_argnums=...)
+        if name.endswith("jit") and node.args:
+            target = node.args[0]
+            fn = fn_by_name.get(target.id) if isinstance(target, ast.Name) else None
+            for kw in node.keywords:
+                if kw.arg not in ("donate_argnums", "donate_argnames"):
+                    continue
+                donated = (None if kw.arg == "donate_argnames"
+                           else const_int_seq(kw.value, module))
+                out.extend(_donation_findings(sf, kw, donated, fn))
+    # (b1) decorator-form jit
+    for fn in walk_functions(sf.tree):
+        for kw, donated in _jit_donations(fn, module):
+            out.extend(_donation_findings(sf, kw, donated, fn))
+    return out
+
+
+def _donation_findings(sf, kw, donated, fn):
+    if fn is None:
+        return []
+    a = fn.args
+    ordered = [p.arg for p in (*a.posonlyargs, *a.args)]
+    bad = []
+    if donated is not None:
+        bad = [ordered[i] for i in donated
+               if 0 <= i < len(ordered) and ordered[i] == "env_rows"]
+    elif isinstance(kw.value, (ast.Tuple, ast.List, ast.Constant)):
+        vals = (kw.value.elts
+                if isinstance(kw.value, (ast.Tuple, ast.List))
+                else [kw.value])
+        bad = ["env_rows" for v in vals
+               if isinstance(v, ast.Constant) and v.value == "env_rows"]
+    if bad:
+        return [Finding(
+            "RPL002", "error", sf.relpath, kw.value.lineno,
+            f"`{fn.name}` donates `env_rows`: the env rows alias live "
+            "backend counters and must NOT be donated (the caller "
+            "still reads them)",
+        )]
+    return []
+
+
+# ------------------------------------------------------------- RPL003
+
+
+def _lane_aliases(lane: str) -> tuple:
+    return RUNTIME_LANES[lane]
+
+
+def _find_class(files, name):
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef) and node.name == name:
+                yield sf, node
+
+
+def _find_funcs(files, name):
+    for sf in files:
+        for fn in walk_functions(sf.tree):
+            if fn.name == name:
+                yield sf, fn
+
+
+def _attr_reads(node: ast.AST) -> set:
+    return {
+        n.attr for n in ast.walk(node)
+        if isinstance(n, ast.Attribute) and isinstance(n.ctx, ast.Load)
+    }
+
+
+def _check_rpl003(files: list) -> list:
+    out = []
+    pp = list(_find_class(files, "PolicyParams"))
+    if not pp:
+        return []  # fixture trees without the dataclass are exempt
+    pp_sf, pp_cls = pp[0]
+    fields = [
+        stmt.target.id for stmt in pp_cls.body
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name)
+    ]
+    registered = set(RUNTIME_LANES) | set(INIT_ONLY_LANES)
+    for f in fields:
+        if f not in registered:
+            out.append(Finding(
+                "RPL003", "error", pp_sf.relpath, pp_cls.lineno,
+                f"PolicyParams field `{f}` is not registered in "
+                "repro/analysis/lanes.py — register the lane (and "
+                "thread it through every surface) in the same PR",
+            ))
+    field_set = set(fields)
+    runtime = [l for l in RUNTIME_LANES if l in field_set]
+
+    # _params_axes must classify every field by keyword
+    axes = list(_find_funcs(files, "_params_axes"))
+    if not axes:
+        out.append(Finding(
+            "RPL003", "error", pp_sf.relpath, pp_cls.lineno,
+            "PolicyParams exists but no `_params_axes` classifier was "
+            "found — every lane needs a vmap/stripe axis",
+        ))
+    for sf, fn in axes:
+        kw_seen = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and dotted(node.func).endswith("PolicyParams")):
+                kw_seen |= {kw.arg for kw in node.keywords if kw.arg}
+        for f in fields:
+            if f not in kw_seen:
+                out.append(Finding(
+                    "RPL003", "error", sf.relpath, fn.lineno,
+                    f"lane `{f}` missing from `_params_axes` — it will "
+                    "not be classified for vmap/stripe slicing",
+                ))
+
+    # slice_policy_lanes must derive from _params_axes (not re-list lanes)
+    for sf, fn in _find_funcs(files, "slice_policy_lanes"):
+        names = {
+            n.id for n in ast.walk(fn) if isinstance(n, ast.Name)
+        } | _attr_reads(fn)
+        if "_params_axes" not in names:
+            out.append(Finding(
+                "RPL003", "error", sf.relpath, fn.lineno,
+                "`slice_policy_lanes` does not derive from "
+                "`_params_axes`; a hand-maintained lane list will "
+                "silently drop new lanes",
+            ))
+
+    # every kernel/oracle/dispatcher surface carries every runtime lane
+    for name in sorted(SURFACE_FUNCS):
+        for sf, fn in _find_funcs(files, name):
+            params = param_names(fn)
+            for lane in runtime:
+                if not any(a in params for a in _lane_aliases(lane)):
+                    out.append(Finding(
+                        "RPL003", "error", sf.relpath, fn.lineno,
+                        f"surface `{fn.name}` has no parameter for lane "
+                        f"`{lane}` (aliases: "
+                        f"{', '.join(_lane_aliases(lane))}) — callers "
+                        "cannot thread the lane through this path",
+                    ))
+
+    # Fleet dispatch methods must forward each runtime lane
+    for sf, cls in _find_class(files, "Fleet"):
+        for stmt in cls.body:
+            if (isinstance(stmt, ast.FunctionDef)
+                    and stmt.name in FLEET_DISPATCH_METHODS):
+                reads = _attr_reads(stmt)
+                for lane in runtime:
+                    if not any(a in reads for a in (lane,) + _lane_aliases(lane)):
+                        out.append(Finding(
+                            "RPL003", "error", sf.relpath, stmt.lineno,
+                            f"Fleet.{stmt.name} never reads lane "
+                            f"`{lane}` — the kernel will run with its "
+                            "default instead of the configured value",
+                        ))
+
+    # sharded step: inner signature carries the lanes; pad fills cover
+    # every operand (a new lane appended to `args` without a fill is
+    # silently truncated by zip)
+    for sf, fn in _find_funcs(files, "make_sharded_fleet_step"):
+        inner = next(
+            (f for f in walk_functions(fn) if f.name == "step" and f is not fn),
+            None,
+        )
+        if inner is None:
+            out.append(Finding(
+                "RPL003", "error", sf.relpath, fn.lineno,
+                "`make_sharded_fleet_step` has no inner `step` — cannot "
+                "verify the sharded lane surface",
+            ))
+            continue
+        params = param_names(inner)
+        for lane in runtime:
+            if not any(a in params for a in _lane_aliases(lane)):
+                out.append(Finding(
+                    "RPL003", "error", sf.relpath, inner.lineno,
+                    f"sharded `step` has no parameter for lane `{lane}` "
+                    f"(aliases: {', '.join(_lane_aliases(lane))})",
+                ))
+        n_args = n_fills = None
+        fills_line = inner.lineno
+        for node in ast.walk(inner):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+                if isinstance(tgt, ast.Name) and isinstance(
+                        node.value, (ast.Tuple, ast.List)):
+                    if tgt.id == "args" and n_args is None:
+                        n_args = len(node.value.elts)
+                    elif tgt.id == "fills":
+                        n_fills = len(node.value.elts)
+                        fills_line = node.lineno
+        if n_args is not None and n_fills is not None and n_args != n_fills:
+            out.append(Finding(
+                "RPL003", "error", sf.relpath, fills_line,
+                f"sharded pad fills cover {n_fills} operand(s) but "
+                f"`args` has {n_args}: zip() silently drops the "
+                "unmatched operands, so padded (ragged) fleets run "
+                "with truncated inputs",
+            ))
+    return out
+
+
+# ------------------------------------------------------------- RPL004
+
+RPL004_SCOPE_DIRS = ("energy", "kernels", "workload")
+RPL004_SCOPE_SUFFIXES = ("core/simulator.py",)
+WALLCLOCK = {"time.time", "time.time_ns", "datetime.now", "datetime.utcnow",
+             "datetime.datetime.now", "datetime.datetime.utcnow"}
+NP_RANDOM_OK = {"default_rng", "SeedSequence", "Generator", "Philox", "PCG64"}
+
+
+def _check_rpl004(sf: SourceFile) -> list:
+    if not in_scope(sf.relpath, RPL004_SCOPE_DIRS, RPL004_SCOPE_SUFFIXES):
+        return []
+    out = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if name in WALLCLOCK or any(name.endswith("." + w) for w in WALLCLOCK):
+            out.append(Finding(
+                "RPL004", "error", sf.relpath, node.lineno,
+                f"wall-clock call `{name}` in a determinism-critical "
+                "module; derive timing from the GLOBAL interval index",
+            ))
+            continue
+        if name.endswith("random.split"):
+            count = None
+            if len(node.args) >= 2:
+                count = node.args[1]
+            for kw in node.keywords:
+                if kw.arg == "num":
+                    count = kw.value
+            if count is not None and not (
+                    isinstance(count, ast.Constant)
+                    and isinstance(count.value, int)):
+                out.append(Finding(
+                    "RPL004", "error", sf.relpath, node.lineno,
+                    f"`{name}(key, {ast.unparse(count)})` splits by a "
+                    "runtime-local count: key streams then depend on "
+                    "the local shard size. Use `fold_in` on the GLOBAL "
+                    "node id / GLOBAL interval index instead",
+                ))
+            continue
+        for mod in ("np.random.", "numpy.random."):
+            if name.startswith(mod):
+                tail = name[len(mod):]
+                if tail.split(".")[0] not in NP_RANDOM_OK:
+                    out.append(Finding(
+                        "RPL004", "error", sf.relpath, node.lineno,
+                        f"`{name}` draws from numpy's global RNG state "
+                        "— not reproducible across processes; use a "
+                        "seeded Generator or jax fold_in keys",
+                    ))
+                elif tail == "default_rng" and not node.args and not node.keywords:
+                    out.append(Finding(
+                        "RPL004", "error", sf.relpath, node.lineno,
+                        "argless `default_rng()` seeds from the OS; "
+                        "pass an explicit seed derived from the global "
+                        "config",
+                    ))
+    return out
+
+
+# ------------------------------------------------------------- RPL005
+
+MUTATORS = {"pop", "append", "clear", "setdefault", "update", "add",
+            "remove", "extend", "popitem", "discard", "insert",
+            "appendleft", "popleft"}
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """`self.X` -> "X"; also unwraps subscripts: `self.X[k]` -> "X"."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _mutations(region: ast.AST):
+    """Yield (attr, lineno) for every `self.<attr>` mutation inside
+    ``region`` — assignment, augmented assignment, deletion, subscript
+    store, or a call to a known container mutator."""
+    for node in ast.walk(region):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for tgt in targets:
+                elts = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) else [tgt]
+                for t in elts:
+                    attr = _self_attr(t)
+                    if attr:
+                        yield attr, node.lineno
+        elif isinstance(node, ast.Delete):
+            for tgt in node.targets:
+                attr = _self_attr(tgt)
+                if attr:
+                    yield attr, node.lineno
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr in MUTATORS):
+            attr = _self_attr(node.func.value)
+            if attr:
+                yield attr, node.lineno
+
+
+def _locked_withs(fn: ast.FunctionDef, lock_attrs: set):
+    for node in ast.walk(fn):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                attr = _self_attr(item.context_expr)
+                if attr in lock_attrs:
+                    yield node
+                    break
+
+
+def _check_rpl005(sf: SourceFile) -> list:
+    out = []
+    for cls in (n for n in ast.walk(sf.tree) if isinstance(n, ast.ClassDef)):
+        lock_attrs = set()
+        for node in ast.walk(cls):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                name = dotted(node.value.func)
+                if name.endswith("Lock") or name.endswith("RLock"):
+                    for tgt in node.targets:
+                        attr = _self_attr(tgt)
+                        if attr:
+                            lock_attrs.add(attr)
+        if not lock_attrs:
+            continue
+        methods = [m for m in cls.body if isinstance(m, ast.FunctionDef)]
+        # pass 1: what does this class mutate while holding the lock?
+        guarded = set()
+        for m in methods:
+            regions = ([m] if m.name.endswith("_locked")
+                       else list(_locked_withs(m, lock_attrs)))
+            for region in regions:
+                guarded |= {a for a, _ in _mutations(region)}
+        guarded -= lock_attrs
+        if not guarded:
+            continue
+        # pass 2: mutations of guarded attrs (and *_locked calls)
+        # outside any locked region
+        for m in methods:
+            if m.name == "__init__" or m.name.endswith("_locked"):
+                continue
+            locked_lines = set()
+            for region in _locked_withs(m, lock_attrs):
+                for node in ast.walk(region):
+                    if hasattr(node, "lineno"):
+                        locked_lines.add(node.lineno)
+            for attr, lineno in _mutations(m):
+                if attr in guarded and lineno not in locked_lines:
+                    out.append(Finding(
+                        "RPL005", "error", sf.relpath, lineno,
+                        f"`self.{attr}` is lock-guarded (mutated under "
+                        f"`self.{next(iter(lock_attrs))}` elsewhere in "
+                        f"`{cls.name}`) but `{m.name}` mutates it "
+                        "without holding the lock — races the other "
+                        "thread",
+                    ))
+            for node in ast.walk(m):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr.endswith("_locked")
+                        and isinstance(node.func.value, ast.Name)
+                        and node.func.value.id == "self"):
+                    if node.lineno not in locked_lines:
+                        out.append(Finding(
+                            "RPL005", "error", sf.relpath, node.lineno,
+                            f"`self.{node.func.attr}()` called outside "
+                            "the lock — `*_locked` helpers assume the "
+                            "caller holds it",
+                        ))
+    return out
+
+
+# ---------------------------------------------------------------- API
+
+RULES = [
+    Rule("RPL001", "error",
+         "one-sided scatter in parity-critical module",
+         check_file=_check_rpl001),
+    Rule("RPL002", "error",
+         "scan unroll / aliased env-row donation in episode scans",
+         check_file=_check_rpl002),
+    Rule("RPL003", "error",
+         "lane missing from a dispatch surface",
+         check_project=_check_rpl003),
+    Rule("RPL004", "error",
+         "nondeterministic source in backend/sim/kernel module",
+         check_file=_check_rpl004),
+    Rule("RPL005", "error",
+         "lock-guarded attribute touched without the lock",
+         check_file=_check_rpl005),
+]

@@ -30,6 +30,12 @@ data-parallel job) live in the unified rollout engine
   ``K = k_core * k_unc``. Fleets beyond one chip's VMEM pass ``mesh=``
   to shard the (N, K) state over the mesh's data axis
   (repro.parallel.fleet.make_sharded_fleet_step).
+
+repro-lint holds this module to the lane contract (RPL003: every
+``PolicyParams`` field registered in repro/analysis/lanes.py must be
+classified by ``_params_axes``, sliced by ``slice_policy_lanes``, and
+forwarded by ``Fleet.step``/``episode_trace``/``episode_sim``) and to
+scatter-free parity arithmetic (RPL001).
 """
 from __future__ import annotations
 

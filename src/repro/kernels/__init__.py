@@ -33,4 +33,11 @@ interpret-mode-on-CPU (tests) / pure-XLA fallbacks (CPU production)
 per call. ``ref`` holds the pure-jnp oracles every kernel is
 bit-tested against (tests/test_kernels.py, tests/test_episode_scan.py,
 tests/test_factored.py).
+
+repro-lint guards this package statically (scripts/repro_lint.py):
+RPL001 rejects one-sided ``.at[...]`` scatters (parity demands the
+shared select+onehot expressions), RPL002 rejects ``unroll=`` on the
+scan fallbacks and donation of the aliased ``env_rows`` operand, and
+RPL003 holds every kernel/dispatcher/oracle signature here to the full
+``PolicyParams`` lane set registered in repro/analysis/lanes.py.
 """

@@ -33,6 +33,13 @@ def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
     return _rms_fwd(x, scale, eps)[0]
 
 
+def full_rank(v, ndim):
+    # explicit trailing-axes broadcast: the test suite runs with
+    # jax_numpy_rank_promotion="raise", so a (D,) param never broadcasts
+    # implicitly against a (..., D) activation
+    return v.reshape((1,) * (ndim - v.ndim) + v.shape)
+
+
 def _rms_inv(x, eps):
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
     return jax.lax.rsqrt(var + eps)
@@ -40,7 +47,7 @@ def _rms_inv(x, eps):
 
 def _rms_fwd(x, scale, eps):
     inv = _rms_inv(x, eps)
-    out = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    out = x * inv.astype(x.dtype) * full_rank(scale.astype(x.dtype), x.ndim)
     return out, (x, scale)
 
 
@@ -52,7 +59,7 @@ def _rms_bwd(eps, res, g):
     dscale = jnp.sum(
         (g * xhat).astype(jnp.float32), axis=red_axes
     ).astype(scale.dtype).reshape(scale.shape)
-    gs = g * scale.astype(g.dtype)
+    gs = g * full_rank(scale.astype(g.dtype), g.ndim)
     m = jnp.mean(
         (gs * xhat).astype(jnp.float32), axis=-1, keepdims=True
     ).astype(x.dtype)
@@ -75,7 +82,7 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
     if positions.ndim == 1:
         positions = positions[None, :]
-    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    ang = positions[..., None].astype(jnp.float32) * full_rank(freqs, 3)  # (B,S,half)
     cos = jnp.cos(ang)[:, :, None, :]
     sin = jnp.sin(ang)[:, :, None, :]
     x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)

@@ -133,7 +133,7 @@ def ssd_chunked(
     dtype = xh.dtype
 
     xd = (xh.astype(jnp.float32) * dt[..., None]).astype(dtype)  # (B,S,H,P)
-    dA = dt * A  # (B,S,H) fp32, negative
+    dA = dt * L.full_rank(A, dt.ndim)  # (B,S,H) fp32, negative
 
     rc = lambda t: t.reshape(Bsz, NC, Q, *t.shape[2:])
     xc, dAc, Bc, Cc = rc(xd), rc(dA), rc(Bm), rc(Cm)
@@ -195,7 +195,7 @@ def ssd_decode_step(
     C_t: jax.Array,  # (B, N)
     state: jax.Array,  # (B, H, P, N) fp32
 ) -> Tuple[jax.Array, jax.Array]:
-    dA = jnp.exp(dt_t * A)  # (B,H)
+    dA = jnp.exp(dt_t * L.full_rank(A, dt_t.ndim))  # (B,H)
     xd = x_t.astype(jnp.float32) * dt_t[..., None]  # (B,H,P)
     new_state = state * dA[..., None, None] + jnp.einsum(
         "bhp,bn->bhpn", xd, B_t.astype(jnp.float32)
@@ -216,8 +216,8 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     for i in range(K):
         shift = K - 1 - i
         xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
-        out = out + xi * w[i]
-    return jax.nn.silu(out + b)
+        out = out + xi * L.full_rank(w[i], xi.ndim)
+    return jax.nn.silu(out + L.full_rank(b, out.ndim))
 
 
 def mamba2_block(
@@ -242,10 +242,13 @@ def mamba2_block(
             [conv_state[:, 1:], xbc.astype(conv_state.dtype)], axis=1
         )  # (B,K,CH)
         xbc_t = jax.nn.silu(
-            jnp.einsum("bkc,kc->bc", conv_state, w["conv_w"]) + w["conv_b"]
+            jnp.einsum("bkc,kc->bc", conv_state, w["conv_w"])
+            + L.full_rank(w["conv_b"], 2)
         )
         xs, Bm, Cm = jnp.split(xbc_t, [DI, DI + N], axis=-1)
-        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + w["dt_bias"])
+        dt = jax.nn.softplus(
+            dt_raw[:, 0].astype(jnp.float32) + L.full_rank(w["dt_bias"], 2)
+        )
         A = -jnp.exp(w["A_log"])
         xr = xs.reshape(B_, H, P)
         y, ssm_state = ssd_decode_step(xr, dt, A, Bm, Cm, ssm_state)
@@ -256,7 +259,9 @@ def mamba2_block(
         xbc = _causal_conv(xbc, w["conv_w"], w["conv_b"])
         xs, Bm, Cm = jnp.split(xbc, [DI, DI + N], axis=-1)
         xs = sharder.act(xs, "batch", None, "tp")
-        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + w["dt_bias"])
+        dt = jax.nn.softplus(
+            dt_raw.astype(jnp.float32) + L.full_rank(w["dt_bias"], dt_raw.ndim)
+        )
         A = -jnp.exp(w["A_log"])
         xh = xs.reshape(B_, S, H, P)
         y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)

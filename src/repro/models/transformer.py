@@ -152,7 +152,9 @@ def _project_qkv(cfg, w, x):
     k = jnp.einsum("bsd,dh->bsh", x, w["wk"])
     v = jnp.einsum("bsd,dh->bsh", x, w["wv"])
     if cfg.qkv_bias:
-        q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
+        q = q + L.full_rank(w["bq"], q.ndim)
+        k = k + L.full_rank(w["bk"], k.ndim)
+        v = v + L.full_rank(w["bv"], v.ndim)
     b, s = x.shape[:2]
     q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
     k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)

@@ -90,7 +90,16 @@ from repro.core.policies import Policy
 from repro.energy.backend import EnergyBackend
 from repro.energy.controller import EnergyController, reduce_summaries
 from repro.parallel.fleet import host_stripe, stripe_map
-from repro.train import checkpoint as ckpt
+
+
+def _ckpt():
+    # deferred: repro.train pulls in train_step -> models.api, and
+    # models.transformer imports repro.parallel for the Sharder — an
+    # eager import here closes that cycle and breaks `import
+    # repro.models.api` (the dryrun launcher's first import). Only the
+    # checkpoint-path methods below need it, long after import time.
+    from repro.train import checkpoint
+    return checkpoint
 
 # Rendezvous auth (multiprocessing.connection HMAC handshake). The
 # payloads are pickles, so WHOEVER HOLDS THE KEY CAN EXECUTE CODE on the
@@ -411,7 +420,12 @@ class CoordinatorComm(FleetComm):
             if msg_strict:
                 if strict and msg_tag == tag:
                     return (data,)
-                self._stash.setdefault(host, {})[msg_tag] = data
+                # under the lock: the acceptor thread's _admit does
+                # `self._stash.pop(peer)` on a rejoin, and an unlocked
+                # setdefault here can resurrect the orphaned inner dict
+                # and silently lose this strict payload
+                with self._lock:
+                    self._stash.setdefault(host, {})[msg_tag] = data
             elif not strict:
                 got = (data,)  # freshest fold wins
             # strict rounds skim (drop) stale fold leftovers
@@ -767,7 +781,7 @@ class DistributedFleetController:
         """This stripe's checkpoint directory under ``checkpoint_dir``."""
         if self.checkpoint_dir is None:
             return None
-        return ckpt.stripe_dir(self.checkpoint_dir, *self.stripe)
+        return _ckpt().stripe_dir(self.checkpoint_dir, *self.stripe)
 
     def state_dict(self) -> Dict[str, Any]:
         """Everything a resumed process needs, split per the stripe
@@ -808,11 +822,11 @@ class DistributedFleetController:
         extra = {"stripe": list(self.stripe), "n_total": self.n_total,
                  "interval": self.interval}
         if block:
-            ckpt.wait_for_saves(path)
-            ckpt.save(path, self.interval, self.state_dict(), extra,
+            _ckpt().wait_for_saves(path)
+            _ckpt().save(path, self.interval, self.state_dict(), extra,
                       self.keep_last)
         else:
-            ckpt.async_save(path, self.interval, self.state_dict(), extra,
+            _ckpt().async_save(path, self.interval, self.state_dict(), extra,
                             self.keep_last)
 
     def try_restore(self, step: Optional[int] = None) -> bool:
@@ -822,7 +836,7 @@ class DistributedFleetController:
         if self.checkpoint_dir is None:
             return False
         try:
-            _, state, _ = ckpt.restore_stripe(
+            _, state, _ = _ckpt().restore_stripe(
                 self.checkpoint_dir, *self.stripe, like=self.state_dict(),
                 step=step)
         except FileNotFoundError:

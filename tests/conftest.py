@@ -8,3 +8,12 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    # Implicit rank promotion (e.g. a (N,) lane silently broadcasting
+    # against a (N, K) table) is the apply_arms hard-reshape class of
+    # bug: shapes line up by accident and the wrong axis gets the data.
+    # Raise on it everywhere in the test suite; production code must
+    # broadcast explicitly. (The sanitize lane additionally sets this
+    # via JAX_NUMPY_RANK_PROMOTION for non-pytest entry points.)
+    import jax
+
+    jax.config.update("jax_numpy_rank_promotion", "raise")

@@ -203,6 +203,39 @@ def test_coordinator_rendezvous_times_out():
         CoordinatorComm(("127.0.0.1", _free_port()), 2, timeout_s=0.5)
 
 
+def test_drain_stashes_under_lock():
+    """Regression (found by repro-lint RPL005): _drain used to stash
+    off-tag strict payloads WITHOUT holding comm._lock, racing the
+    acceptor thread's _admit — a rejoining host's `_stash.pop(peer)`
+    could interleave with the setdefault and orphan the inner dict,
+    silently dropping a barrier payload. The stash write must happen
+    while the lock is held."""
+    with CoordinatorComm(("127.0.0.1", 0), 1) as comm:  # H=1: no peers
+
+        class LockAssertingStash(dict):
+            def setdefault(self, *a, **kw):
+                assert comm._lock.locked(), \
+                    "_drain wrote the stash without holding comm._lock"
+                return dict.setdefault(self, *a, **kw)
+
+        comm._stash = LockAssertingStash()
+
+        class FakeConn:
+            """One queued off-tag strict payload from host 3."""
+            def __init__(self):
+                self.queued = [(3, "tag-b", "payload", True)]
+
+            def recv(self):
+                return self.queued.pop(0)
+
+            def poll(self, _timeout=0):
+                return bool(self.queued)
+
+        got = comm._drain(3, FakeConn(), "tag-a", strict=True)
+        assert got is None  # off-tag payload is stashed, not returned
+        assert dict(comm._stash) == {3: {"tag-b": "payload"}}
+
+
 # ---------------------------------------------------------------------------
 # striped controllers: in-process parity + aggregates
 # ---------------------------------------------------------------------------

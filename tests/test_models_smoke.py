@@ -79,3 +79,22 @@ def test_decode_matches_forward(name):
         np.asarray(lg_b, np.float32), np.asarray(lg_c, np.float32),
         rtol=2e-2, atol=2e-2,
     )
+
+
+def test_models_api_imports_first():
+    """Regression: `from repro.train import checkpoint` at distributed.py
+    module scope closed an import cycle (models.api -> transformer ->
+    parallel -> distributed -> train.train_step -> models.api), so any
+    process whose FIRST repro import was models.api — e.g. `python -m
+    repro.launch.dryrun` — died with a partially-initialized ImportError.
+    The checkpoint import is deferred now; a fresh subprocess importing
+    models.api first must succeed."""
+    import subprocess
+    import sys
+
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.models.api; import repro.parallel.distributed"],
+        capture_output=True, text=True, timeout=120,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]

@@ -1,0 +1,454 @@
+"""Tests for repro-lint (src/repro/analysis + scripts/repro_lint.py).
+
+Each rule gets fixture snippets that MUST trigger and MUST NOT trigger,
+plus suppression handling, the RPL003 synthetic-lane cross-check, and a
+self-check that the real tree lints clean. Pure-stdlib under test — no
+jax needed by the analyzer itself.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import run_lint
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def lint_tree(tmp_path, files):
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return run_lint(tmp_path, [tmp_path])
+
+
+def active(findings, rule=None):
+    return [
+        f for f in findings
+        if not f.suppressed and (rule is None or f.rule == rule)
+    ]
+
+
+# ------------------------------------------------------------- RPL001
+
+SCATTER = "def f(state, arm):\n    return state.at[arm].add(1.0)\n"
+ONEHOT = (
+    "def f(state, arm, k, r):\n"
+    "    hot = (jnp.arange(k) == arm).astype(state.dtype)\n"
+    "    return state + hot * r\n"
+)
+
+
+def test_rpl001_triggers_in_kernels(tmp_path):
+    found = lint_tree(tmp_path, {"kernels/k.py": SCATTER})
+    assert len(active(found, "RPL001")) == 1
+
+
+def test_rpl001_triggers_in_core_policies(tmp_path):
+    found = lint_tree(tmp_path, {"core/policies.py": SCATTER})
+    assert len(active(found, "RPL001")) == 1
+
+
+def test_rpl001_onehot_form_clean(tmp_path):
+    found = lint_tree(tmp_path, {"kernels/k.py": ONEHOT})
+    assert not active(found, "RPL001")
+
+
+def test_rpl001_out_of_scope_module_exempt(tmp_path):
+    # scatters are fine outside the parity-critical modules
+    found = lint_tree(tmp_path, {"workload/traffic.py": SCATTER})
+    assert not active(found, "RPL001")
+
+
+# -------------------------------------------------------- suppressions
+
+
+def test_suppression_same_line(tmp_path):
+    src = (
+        "def f(state, arm):\n"
+        "    return state.at[arm].add(1.0)"
+        "  # repro-lint: disable=RPL001 baseline helper, no fused twin\n"
+    )
+    found = lint_tree(tmp_path, {"kernels/k.py": src})
+    assert not active(found)
+    sup = [f for f in found if f.suppressed]
+    assert len(sup) == 1 and sup[0].reason == "baseline helper, no fused twin"
+
+
+def test_suppression_previous_comment_line(tmp_path):
+    src = (
+        "def f(state, arm):\n"
+        "    # repro-lint: disable=RPL001 baseline helper\n"
+        "    return state.at[arm].add(1.0)\n"
+    )
+    found = lint_tree(tmp_path, {"kernels/k.py": src})
+    assert not active(found)
+
+
+def test_suppression_without_reason_escalates(tmp_path):
+    src = (
+        "def f(state, arm):\n"
+        "    return state.at[arm].add(1.0)  # repro-lint: disable=RPL001\n"
+    )
+    found = lint_tree(tmp_path, {"kernels/k.py": src})
+    # the reasonless directive does NOT suppress, and adds RPL000
+    assert len(active(found, "RPL001")) == 1
+    assert len(active(found, "RPL000")) == 1
+
+
+def test_suppression_on_code_line_above_does_not_leak(tmp_path):
+    src = (
+        "def f(state, other, arm):\n"
+        "    x = other.at[arm].add(1.0)  # repro-lint: disable=RPL001 this line only\n"
+        "    return state.at[arm].add(1.0)\n"
+    )
+    found = lint_tree(tmp_path, {"kernels/k.py": src})
+    # only the annotated line is suppressed; a directive attached to
+    # code does not cover the next line
+    assert len(active(found, "RPL001")) == 1
+
+
+# ------------------------------------------------------------- RPL002
+
+
+def test_rpl002_scan_unroll_triggers(tmp_path):
+    src = (
+        "import jax\n"
+        "def ep(f, c, xs):\n"
+        "    return jax.lax.scan(f, c, xs, unroll=2)\n"
+    )
+    found = lint_tree(tmp_path, {"kernels/episode.py": src})
+    assert len(active(found, "RPL002")) == 1
+
+
+def test_rpl002_scan_without_unroll_clean(tmp_path):
+    src = (
+        "import jax\n"
+        "def ep(f, c, xs):\n"
+        "    return jax.lax.scan(f, c, xs)\n"
+    )
+    found = lint_tree(tmp_path, {"kernels/episode.py": src})
+    assert not active(found, "RPL002")
+
+
+DONATE_ENV_ROWS = (
+    "import functools\n"
+    "import jax\n"
+    "@functools.partial(jax.jit, donate_argnums=tuple(range(8)))\n"
+    "def xla_episode_sim(a, b, c, d, e, f, g, env_rows):\n"
+    "    return env_rows\n"
+)
+
+
+def test_rpl002_env_rows_donation_const_eval(tmp_path):
+    # tuple(range(8)) covers index 7 == env_rows
+    found = lint_tree(tmp_path, {"kernels/episode.py": DONATE_ENV_ROWS})
+    hits = active(found, "RPL002")
+    assert len(hits) == 1 and "env_rows" in hits[0].message
+
+
+def test_rpl002_state_only_donation_clean(tmp_path):
+    src = DONATE_ENV_ROWS.replace("tuple(range(8))", "tuple(range(7))")
+    found = lint_tree(tmp_path, {"kernels/episode.py": src})
+    assert not active(found, "RPL002")
+
+
+def test_rpl002_call_form_jit_donation(tmp_path):
+    src = (
+        "import jax\n"
+        "def xla_episode_sim(a, b, env_rows):\n"
+        "    return env_rows\n"
+        "sim = jax.jit(xla_episode_sim, donate_argnums=(2,))\n"
+    )
+    found = lint_tree(tmp_path, {"kernels/episode.py": src})
+    assert len(active(found, "RPL002")) == 1
+
+
+def test_rpl002_donate_argnames(tmp_path):
+    src = (
+        "import functools\n"
+        "import jax\n"
+        "@functools.partial(jax.jit, donate_argnames=('env_rows',))\n"
+        "def xla_episode_sim(a, env_rows):\n"
+        "    return env_rows\n"
+    )
+    found = lint_tree(tmp_path, {"kernels/episode.py": src})
+    assert len(active(found, "RPL002")) == 1
+
+
+# ------------------------------------------------------------- RPL003
+
+LANES_OK = """
+from typing import NamedTuple
+
+class PolicyParams(NamedTuple):
+    alpha: float
+    lam: float
+    qos_delta: float
+    gamma: float
+    optimistic: float
+    prior_mu: float
+    prior_n: float
+    default_arm: int
+    lam_unc: float
+
+def _params_axes(p):
+    return PolicyParams(alpha=0, lam=0, qos_delta=0, gamma=0,
+                        optimistic=0, prior_mu=0, prior_n=0,
+                        default_arm=0, lam_unc=0)
+
+def slice_policy_lanes(p, sl):
+    axes = _params_axes(p)
+    return axes
+"""
+
+
+def test_rpl003_faithful_copy_clean(tmp_path):
+    found = lint_tree(tmp_path, {"core/fleet.py": LANES_OK})
+    assert not active(found, "RPL003")
+
+
+def test_rpl003_unregistered_synthetic_lane(tmp_path):
+    # a new lane added to PolicyParams but absent from the registry
+    # (and from _params_axes) must fire
+    src = LANES_OK.replace(
+        "    lam_unc: float\n",
+        "    lam_unc: float\n    context_w: float\n",
+    )
+    found = lint_tree(tmp_path, {"core/fleet.py": src})
+    msgs = [f.message for f in active(found, "RPL003")]
+    assert any("context_w" in m and "not registered" in m for m in msgs)
+
+
+def test_rpl003_lane_removed_from_params_axes(tmp_path):
+    src = LANES_OK.replace("gamma=0,", "")
+    found = lint_tree(tmp_path, {"core/fleet.py": src})
+    msgs = [f.message for f in active(found, "RPL003")]
+    assert any("`gamma`" in m and "_params_axes" in m for m in msgs)
+
+
+def test_rpl003_slicer_must_derive_from_classifier(tmp_path):
+    src = LANES_OK.replace(
+        "    axes = _params_axes(p)\n    return axes\n",
+        "    return p\n",
+    )
+    found = lint_tree(tmp_path, {"core/fleet.py": src})
+    msgs = [f.message for f in active(found, "RPL003")]
+    assert any("slice_policy_lanes" in m for m in msgs)
+
+
+def test_rpl003_surface_missing_lane(tmp_path):
+    kernel = (
+        "def fleet_step(mu, n, phat, pn, prev, t, arm, reward, prog, act,\n"
+        "               alpha, lam, qos, def_arm, g, opt, prior):\n"
+        "    return mu\n"  # no lam_unc parameter
+    )
+    found = lint_tree(
+        tmp_path, {"core/fleet.py": LANES_OK, "kernels/k.py": kernel}
+    )
+    msgs = [f.message for f in active(found, "RPL003")]
+    assert any("fleet_step" in m and "`lam_unc`" in m for m in msgs)
+
+
+def test_rpl003_surface_with_aliases_clean(tmp_path):
+    kernel = (
+        "def fleet_step(mu, n, phat, pn, prev, t, arm, reward, prog, act,\n"
+        "               alpha, lam, qos, def_arm, g, opt, prior, lam_unc):\n"
+        "    return mu\n"
+    )
+    found = lint_tree(
+        tmp_path, {"core/fleet.py": LANES_OK, "kernels/k.py": kernel}
+    )
+    assert not active(found, "RPL003")
+
+
+def test_rpl003_pad_fills_must_cover_args(tmp_path):
+    sharded = (
+        "def make_sharded_fleet_step(mesh):\n"
+        "    def step(mu, n, phat, pn, prev, t, arm, reward, prog, act,\n"
+        "             alpha, lam, qos, def_arm, gamma, optimistic, prior_mu,\n"
+        "             lam_unc):\n"
+        "        args = [mu, n, alpha]\n"
+        "        fills = (0, 1)\n"
+        "        return args, fills\n"
+        "    return step\n"
+    )
+    found = lint_tree(
+        tmp_path, {"core/fleet.py": LANES_OK, "parallel/fleet.py": sharded}
+    )
+    msgs = [f.message for f in active(found, "RPL003")]
+    assert any("fills" in m and "silently" in m for m in msgs)
+
+
+def test_rpl003_absent_policyparams_is_exempt(tmp_path):
+    # fixture trees without the dataclass (e.g. every other test here)
+    # must not fire the project rule
+    found = lint_tree(tmp_path, {"kernels/k.py": ONEHOT})
+    assert not active(found, "RPL003")
+
+
+# ------------------------------------------------------------- RPL004
+
+
+def test_rpl004_wall_clock(tmp_path):
+    src = "import time\n\ndef sample():\n    return time.time()\n"
+    found = lint_tree(tmp_path, {"energy/backend.py": src})
+    assert len(active(found, "RPL004")) == 1
+
+
+def test_rpl004_local_count_split(tmp_path):
+    src = (
+        "import jax\n"
+        "def noise(key, n_local):\n"
+        "    return jax.random.split(key, n_local)\n"
+    )
+    found = lint_tree(tmp_path, {"energy/backend.py": src})
+    hits = active(found, "RPL004")
+    assert len(hits) == 1 and "fold_in" in hits[0].message
+
+
+def test_rpl004_literal_split_and_fold_in_clean(tmp_path):
+    src = (
+        "import jax\n"
+        "def noise(key, node_ids):\n"
+        "    k1, k2, k3, k4 = jax.random.split(key, 4)\n"
+        "    return jax.vmap(lambda i: jax.random.fold_in(k1, i))(node_ids)\n"
+    )
+    found = lint_tree(tmp_path, {"energy/backend.py": src})
+    assert not active(found, "RPL004")
+
+
+def test_rpl004_np_global_rng(tmp_path):
+    src = "import numpy as np\n\ndef j():\n    return np.random.rand(3)\n"
+    found = lint_tree(tmp_path, {"workload/traffic.py": src})
+    assert len(active(found, "RPL004")) == 1
+
+
+def test_rpl004_argless_default_rng(tmp_path):
+    src = "import numpy as np\n\ndef j():\n    return np.random.default_rng()\n"
+    found = lint_tree(tmp_path, {"energy/backend.py": src})
+    assert len(active(found, "RPL004")) == 1
+
+
+def test_rpl004_seeded_default_rng_clean(tmp_path):
+    src = "import numpy as np\n\ndef j(s):\n    return np.random.default_rng(s)\n"
+    found = lint_tree(tmp_path, {"energy/backend.py": src})
+    assert not active(found, "RPL004")
+
+
+def test_rpl004_out_of_scope_exempt(tmp_path):
+    src = "import time\n\ndef bench():\n    return time.time()\n"
+    found = lint_tree(tmp_path, {"launch/fleet_serve.py": src})
+    assert not active(found, "RPL004")
+
+
+# ------------------------------------------------------------- RPL005
+
+LOCKED_CLASS = """
+import threading
+
+class Comm:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stash = {}
+        self._epoch = 0
+
+    def _bump_locked(self):
+        self._epoch += 1
+        self._stash.pop(0, None)
+
+    def admit(self, h):
+        with self._lock:
+            self._stash[h] = 1
+            self._bump_locked()
+
+    def drain(self, h):
+        self._stash.setdefault(h, {})["x"] = 1
+
+    def mark(self, h):
+        self._bump_locked()
+"""
+
+
+def test_rpl005_unlocked_mutation_and_locked_call(tmp_path):
+    found = lint_tree(tmp_path, {"parallel/distributed.py": LOCKED_CLASS})
+    hits = active(found, "RPL005")
+    assert len(hits) == 2
+    assert any("_stash" in h.message for h in hits)       # drain()
+    assert any("_bump_locked" in h.message for h in hits)  # mark()
+
+
+def test_rpl005_fixed_class_clean(tmp_path):
+    src = LOCKED_CLASS.replace(
+        '    def drain(self, h):\n'
+        '        self._stash.setdefault(h, {})["x"] = 1\n',
+        '    def drain(self, h):\n'
+        '        with self._lock:\n'
+        '            self._stash.setdefault(h, {})["x"] = 1\n',
+    ).replace(
+        "    def mark(self, h):\n        self._bump_locked()\n",
+        "    def mark(self, h):\n"
+        "        with self._lock:\n            self._bump_locked()\n",
+    )
+    found = lint_tree(tmp_path, {"parallel/distributed.py": src})
+    assert not active(found, "RPL005")
+
+
+def test_rpl005_lockless_class_exempt(tmp_path):
+    src = (
+        "class Plain:\n"
+        "    def __init__(self):\n"
+        "        self._stash = {}\n"
+        "    def drain(self, h):\n"
+        "        self._stash.setdefault(h, {})['x'] = 1\n"
+    )
+    found = lint_tree(tmp_path, {"parallel/distributed.py": src})
+    assert not active(found, "RPL005")
+
+
+def test_rpl005_unguarded_flag_poll_exempt(tmp_path):
+    # a boolean flag only ever mutated OUTSIDE the lock (e.g. _closing)
+    # is not lock-guarded; polling/flipping it lock-free is idiomatic
+    src = LOCKED_CLASS + (
+        "\n    def close(self):\n        self._closing = True\n"
+    )
+    found = lint_tree(tmp_path, {"parallel/distributed.py": src})
+    assert not any("_closing" in f.message for f in active(found, "RPL005"))
+
+
+# -------------------------------------------------- engine / CLI / repo
+
+
+def test_syntax_error_reported_not_crash(tmp_path):
+    found = lint_tree(tmp_path, {"kernels/bad.py": "def f(:\n"})
+    assert len(active(found, "RPL000")) == 1
+
+
+def test_real_repo_lints_clean():
+    findings = run_lint(REPO_ROOT, [REPO_ROOT / "src" / "repro"])
+    bad = active(findings)
+    assert not bad, "\n".join(f.format() for f in bad)
+    # and every suppression in the tree carries a justification
+    assert all(f.reason for f in findings if f.suppressed)
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    trigger = tmp_path / "kernels" / "k.py"
+    trigger.parent.mkdir(parents=True)
+    trigger.write_text(SCATTER)
+    out = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "scripts" / "repro_lint.py"),
+         "--root", str(tmp_path), "--json", str(tmp_path)],
+        capture_output=True, text=True,
+    )
+    assert out.returncode == 1
+    payload = json.loads(out.stdout)
+    assert payload["counts"]["error"] == 1
+    assert payload["findings"][0]["rule"] == "RPL001"
+
+    clean = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "scripts" / "repro_lint.py")],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+    )
+    assert clean.returncode == 0, clean.stdout + clean.stderr
